@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: result table formatting + JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def emit(name: str, rows: List[Dict[str, Any]], meta: Dict[str, Any] = None):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"name": name, "meta": meta or {}, "rows": rows}, f,
+                  indent=1, default=float)
+    return path
+
+
+def table(rows: List[Dict[str, Any]], cols: List[str]) -> str:
+    if not rows:
+        return "(empty)"
+    widths = {c: max(len(c), max(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        " | ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols) for r in rows
+    )
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

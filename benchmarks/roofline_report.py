@@ -1,0 +1,80 @@
+"""Roofline report: aggregates the dry-run JSON artifacts
+(experiments/dryrun/*.json) into the EXPERIMENTS.md §Roofline table.
+
+Run the cells first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+then:
+  PYTHONPATH=src python -m benchmarks.roofline_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, table
+
+DRY_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh: str = "pod16x16", tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRY_DIR, f"*_{mesh}*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag or rec["mesh"] != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "skip", "why": rec["reason"][:40]})
+            continue
+        r = rec.get("roofline", {})
+        m = rec.get("memory", {})
+        if not r:  # --skip-cost artifact (multi-pod pass): compile-proof only
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "compile✓",
+                         "live_GB": round(m.get("live_bytes", 0) / 1e9, 2)})
+            continue
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "t_comp_s": round(r.get("t_compute_s", 0), 3),
+            "t_mem_s": round(r.get("t_memory_s", 0), 3),
+            "t_coll_s": round(r.get("t_collective_s", 0), 3),
+            "dominant": r.get("dominant"),
+            "useful_ratio": round(r.get("useful_flops_ratio", 0), 3),
+            "roofline_frac": round(r.get("roofline_frac", 0), 4),
+            "live_GB": round(m.get("live_bytes", 0) / 1e9, 2),
+        })
+    return rows
+
+
+def run(mesh: str = "pod16x16", tag: str = ""):
+    rows = load(mesh, tag)
+    if not rows:
+        print(f"(no dry-run artifacts for mesh={mesh} tag={tag!r} — run "
+              f"python -m repro.launch.dryrun --all first)")
+        return []
+    print(f"\n== Roofline terms per (arch × shape), mesh={mesh} "
+          f"{('tag=' + tag) if tag else ''} ==")
+    cols = ["arch", "shape", "status", "t_comp_s", "t_mem_s", "t_coll_s",
+            "dominant", "useful_ratio", "roofline_frac", "live_GB"]
+    print(table(rows, cols))
+    ok = [r for r in rows if r["status"] == "ok" and "roofline_frac" in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"] or 1)
+        coll = max(ok, key=lambda r: r["t_coll_s"] or 0)
+        print(f"\nworst roofline fraction : {worst['arch']} × {worst['shape']}"
+              f" ({worst['roofline_frac']})")
+        print(f"most collective-bound   : {coll['arch']} × {coll['shape']}"
+              f" (t_coll={coll['t_coll_s']}s)")
+    emit(f"roofline_{mesh}{('_' + tag) if tag else ''}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    run(args.mesh, args.tag)

@@ -1,0 +1,34 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs every paper-anchored harness (one per table/figure) plus the TPU
+serving adaptations, then prints the roofline aggregation if dry-run
+artifacts exist. Use ``--fast`` for the reduced CI-sized sweep."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from benchmarks import (bench_embedding, bench_kvbank, fig18_dedup,
+                            fig19_split, fig20_ramp, roofline_report,
+                            tab_schemes)
+
+    tab_schemes.run()
+    fig18_dedup.run(length=48 if args.fast else 96)
+    fig19_split.run(length=48 if args.fast else 96)
+    fig20_ramp.run(length=48 if args.fast else 96)
+    bench_kvbank.run()
+    bench_embedding.run()
+    roofline_report.run("pod16x16")
+    roofline_report.run("pod2x16x16")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: the paper's coded memory system in ~40 lines.
+
+Builds a Scheme-I coded memory over 8 single-port banks, runs a dedup-like
+multi-core trace through the controller, and compares against the uncoded
+baseline — the in-miniature version of the paper's Fig 18 experiment.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim.ramulator import compare_schemes, cycle_reduction
+from repro.sim.trace import TraceSpec, banded_trace
+
+
+def main():
+    # 8 cores hammering 2 hot address bands (PARSEC dedup structure, Fig 15)
+    spec = TraceSpec(n_cores=8, length=64, n_banks=8, n_rows=256,
+                     write_frac=0.3, seed=0)
+    trace = banded_trace(spec)
+
+    results = compare_schemes(
+        trace, n_rows=256, alpha=1.0, r=0.25, n_cycles=512,
+        schemes=("uncoded", "scheme_i", "scheme_ii", "scheme_iii"),
+    )
+    base = results["uncoded"]
+    print(f"{'scheme':12s} {'cycles':>7s} {'reduction':>10s} {'degraded':>9s} "
+          f"{'parked':>7s} {'read lat':>9s}")
+    for name, res in results.items():
+        red = cycle_reduction(base, res)
+        print(f"{name:12s} {res.cycles:7d} {100*red:9.1f}% "
+              f"{res.degraded_reads:9d} {res.parked_writes:7d} "
+              f"{res.avg_read_latency:9.2f}")
+    assert results["scheme_i"].cycles < base.cycles, "coding must win here"
+    print("\ncoded memory served the same workload in fewer memory cycles —")
+    print("idle banks + XOR parities acted as extra read/write ports.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Serving example: continuous batching + the coded banked KV cache.
+
+Part 1 serves a stream of requests through the Server (prefill → batched
+decode slots → drain). Part 2 shows the paper's technique on the KV store
+directly: pages striped over single-port banks, parity banks turning bank
+conflicts into parallel degraded reads — with the port-cycle counts printed.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import lm
+from repro.runtime import kvbank as kb
+from repro.runtime.server import Request, ServeConfig, Server
+
+
+def serve_demo():
+    cfg = get_config("yi-6b").reduced()
+    params = lm.init_params(cfg, jax.random.key(0), max_seq=256)
+    sc = ServeConfig(n_slots=4, max_prompt=32, max_seq=128, max_new_tokens=16)
+    srv = Server(cfg, sc, params)
+    reqs = [Request(rid=i, prompt=[(3 * i + j) % 200 + 1 for j in range(4 + i % 5)])
+            for i in range(10)]
+    t0 = time.time()
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    dt = time.time() - t0
+    n_tok = sum(len(r.out) for r in reqs)
+    print(f"[server] {len(reqs)} requests, {n_tok} tokens, "
+          f"{srv.steps_run} batched decode steps, {n_tok/dt:.0f} tok/s (CPU)")
+    assert all(r.done for r in reqs)
+
+
+def kvbank_demo():
+    """A continuous batch over a CHURNED paged KV pool (hours of serving:
+    pages freed and reallocated wherever the free list points). Live pages
+    scatter over the banks, so per-step bank loads are imbalanced — the
+    paper's bank conflict. Parity banks serve the hot banks' overflow via
+    degraded reads."""
+    import numpy as np
+    rng = np.random.default_rng(1)
+    lengths = [2048, 1024, 512, 256, 128, 64, 32, 16]
+    b = len(lengths)
+    cfg = kb.KVBankConfig(n_banks=8, page=16, pool_pages=640, max_pages=160)
+    st = kb.init_state(cfg, batch=b, n_kv=2, head_dim=32, dtype=jnp.bfloat16)
+    n_live = sum(-(-L // cfg.page) for L in lengths)
+    phys = rng.choice(cfg.pool_pages, n_live, replace=False)
+    table = np.full((b, cfg.max_pages), -1, np.int64)
+    c = 0
+    for i, L in enumerate(lengths):
+        npg = -(-L // cfg.page)
+        table[i, :npg] = phys[c:c + npg]
+        c += npg
+    st = st._replace(page_table=jnp.asarray(table, jnp.int32),
+                     length=jnp.asarray(lengths, jnp.int32))
+    st = kb.recode(cfg, st)                 # ReCoding unit: fresh parities
+    plan = kb.plan_reads(cfg, st)
+    un, co = int(plan.uncoded_cycles), int(plan.coded_cycles)
+    print(f"[kvbank] batch={b} churned pool over {cfg.n_banks} banks: "
+          f"uncoded={un} port-cycles, coded={co} port-cycles "
+          f"({un/co:.2f}x, {int(plan.use_parity.sum())} degraded page reads)")
+    assert co < un
+
+
+if __name__ == "__main__":
+    serve_demo()
+    kvbank_demo()
+    print("OK")

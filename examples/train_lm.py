@@ -1,0 +1,57 @@
+"""End-to-end training driver: a ~100M-param qwen-family model (coded vocab
+embedding enabled) trained for a few hundred steps on the synthetic Markov
+stream, with checkpointing, an injected fault + automatic recovery, and a
+learning-curve printout.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import FaultPlan, TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    # ~100M params: 12L × d512 × ff2048, 32k vocab (coded embedding banks)
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-3b"),
+        name="qwen-100m", n_layers=12, d_model=512, n_heads=8, n_kv=2,
+        head_dim=64, d_ff=2048, vocab=32_000, coded_embedding=True,
+    )
+    n = cfg.n_params()
+    print(f"model: {cfg.name} ({n/1e6:.0f}M params, coded vocab embedding)")
+
+    tc = TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                     ckpt_dir=args.ckpt, global_batch=args.batch,
+                     seq_len=args.seq, remat=True)
+    opt = OptConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps)
+    tr = Trainer(cfg, tc, make_debug_mesh(1, 1), opt)
+
+    # inject a fault mid-run to demo checkpoint/restart recovery
+    out = tr.run(fault_plan=FaultPlan([args.steps // 2 + 7]))
+    losses = [m["loss"] for m in tr.metrics_log]
+    print(f"\nloss: start={losses[0]:.3f} "
+          f"mid={losses[len(losses)//2]:.3f} final={losses[-1]:.3f}")
+    print(f"events: {out['events']}")
+    assert losses[-1] < losses[0] - 0.5, "model should learn the Markov chain"
+    print("OK — loss dropped through a fault + restore cycle.")
+
+
+if __name__ == "__main__":
+    main()

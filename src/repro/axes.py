@@ -1,0 +1,77 @@
+"""Logical activation-axis sharding constraints (MaxText-style rules).
+
+GSPMD propagates shardings well through matmuls but gives up (replicates)
+through gathers, cumsums and some reshapes — one replicated activation then
+poisons everything downstream. The model code therefore pins *logical* axes
+at a few key points (``shard(x, "batch", None, "vocab")``); the mapping from
+logical names to mesh axes lives here, and is a no-op outside a mesh context
+(unit tests, single-device examples).
+
+Logical names:
+  batch   -> ("pod", "data")     (whichever exist in the mesh)
+  vocab / heads / ff / embed_row / width -> "model"
+  seq     -> "model"             (sequence/context parallelism, opt-in)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh", default=None)
+
+_RULES = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "ff": ("model",),
+    "width": ("model",),
+    "embed_row": ("model",),
+    "seq": ("model",),
+    "experts": ("model",),
+}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _resolve(mesh, name: Optional[str], dim: int):
+    if name is None:
+        return None
+    axes = tuple(a for a in _RULES[name] if a in mesh.axis_names)
+    if not axes:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if size <= 1 or dim % size != 0:
+        # try single-axis fallback for composite rules
+        for a in axes:
+            if mesh.shape[a] > 1 and dim % mesh.shape[a] == 0:
+                return a
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def shard(x, *names: Optional[str]):
+    """Constrain ``x`` so dim i is sharded per logical axis ``names[i]``.
+    Identity when no mesh is active. Divisibility-checked per dim."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"rank mismatch: {len(names)} names for {x.shape}")
+    spec = P(*[_resolve(mesh, n, d) for n, d in zip(names, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,7 @@
+"""Sharded, atomic, async checkpointing with restore-time re-mesh."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    restore,
+    save,
+)

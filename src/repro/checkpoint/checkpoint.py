@@ -1,0 +1,187 @@
+"""Checkpointing substrate (orbax-free, dependency-light).
+
+Layout per step::
+
+    <dir>/step_000123/
+        manifest.json        # treedef, leaf paths, shapes, dtypes, step
+        host_000.npz         # this host's leaf shards (full leaves when 1 host)
+    <dir>/step_000123.tmp... # staging dir, atomically renamed on commit
+
+Properties required at scale and how they are provided here:
+
+  * **Atomicity** — writes go to ``step_k.tmp``; ``os.rename`` to the final
+    name is the commit point, so a killed writer never leaves a readable
+    half-checkpoint. ``latest_step`` only considers committed dirs.
+  * **Async** — ``CheckpointManager.save_async`` snapshots leaves to host
+    memory (jax.device_get) synchronously — cheap — then writes in a
+    background thread so the train loop is not blocked on disk.
+  * **Re-mesh on restore** — ``restore(..., shardings=...)`` places every
+    leaf with the *target* sharding via ``jax.device_put``, so a checkpoint
+    written on one mesh restores onto another (elastic resume).
+  * **Self-describing** — manifest stores the flattened key paths, so a
+    checkpoint can be inspected/migrated without the model code.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16", "int8",
+           "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    if str(arr.dtype) in _NATIVE:
+        return arr
+    return arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_name:
+        return arr
+    import ml_dtypes  # noqa: F401 — registers bfloat16/fp8 numpy dtypes
+    return arr.view(np.dtype(dtype_name))
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def save(step: int, tree: Any, directory: str, host_id: int = 0) -> str:
+    """Blocking save. Returns the committed directory path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + f".tmp{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = [_path_str(p) for p, _ in flat]
+    leaves = [np.asarray(jax.device_get(v)) for _, v in flat]
+    dtypes = [str(l.dtype) for l in leaves]
+    # npz round-trips non-native dtypes (bfloat16, fp8) as opaque void —
+    # store them as raw uint views; the manifest keeps the logical dtype.
+    stored = [_to_storable(l) for l in leaves]
+    arrays = {f"leaf_{i:05d}": l for i, l in enumerate(stored)}
+    np.savez(os.path.join(tmp, f"host_{host_id:03d}.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "names": names,
+        "shapes": [list(l.shape) for l in leaves],
+        "dtypes": dtypes,
+        "n_hosts": 1,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):  # idempotent re-save
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)      # commit point
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(directory, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: matching pytree of Sharding (or None
+    leaves) — leaves are device_put with the target sharding (re-mesh)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(d, "host_000.npz")) as z:
+        leaves = [_from_storable(z[f"leaf_{i:05d}"], dt)
+                  for i, dt in enumerate(manifest["dtypes"])]
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree.structure(like)
+    names_like = [_path_str(p) for p, _ in flat_like]
+    by_name = dict(zip(manifest["names"], leaves))
+    missing = [n for n in names_like if n not in by_name]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+    ordered = [by_name[n] for n in names_like]
+
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(ordered))
+    out = []
+    for arr, (path, proto), sh in zip(ordered, flat_like, shard_leaves):
+        want = np.dtype(getattr(proto, "dtype", arr.dtype))
+        if arr.dtype != want:
+            arr = np.asarray(jax.numpy.asarray(arr).astype(want))
+        out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async writer + retention. One in-flight save at a time (the next save
+    joins the previous thread first — bounded memory)."""
+
+    def __init__(self, directory: str, keep: int = 3, host_id: int = 0):
+        self.directory = directory
+        self.keep = keep
+        self.host_id = host_id
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()
+        # snapshot to host memory synchronously (consistent view)
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        treedef = jax.tree.structure(tree)
+        host_leaves = [np.asarray(jax.device_get(v)) for _, v in flat]
+        snap = jax.tree.unflatten(treedef, host_leaves)
+
+        def work():
+            save(step, snap, self.directory, self.host_id)
+            self._gc()
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for m in
+            (_STEP_RE.match(d) for d in os.listdir(self.directory)) if m
+        )
+        import shutil
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,17 @@
+"""Architecture configs (one module per assigned arch + the paper's own
+memory-system config). Importing `load_all()` populates the registry."""
+import importlib
+
+_MODULES = (
+    "whisper_tiny", "qwen2_5_3b", "granite_20b", "stablelm_12b", "yi_6b",
+    "mixtral_8x7b", "olmoe_1b_7b", "recurrentgemma_9b", "phi3_vision_4_2b",
+    "mamba2_2_7b",
+)
+
+
+def load_all():
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+from repro.configs.base import ModelConfig, all_configs, get_config  # noqa: E402,F401

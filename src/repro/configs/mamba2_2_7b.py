@@ -1,0 +1,24 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality) [arXiv:2405.21060].
+
+64L, d_model=2560, ssm_state=128, expand=2 (d_inner=5120, 80 heads of
+headdim 64), vocab=50280, no MLP (d_ff=0). O(1) decode state => runs
+long_500k. The paper's coding technique is inapplicable to the recurrent
+state (read-modify-write every step, no idle banks) — see DESIGN.md §6;
+the vocab embedding still uses the coded layout.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    coded_embedding=True,
+))

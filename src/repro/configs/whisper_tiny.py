@@ -1,0 +1,28 @@
+"""whisper-tiny — enc-dec audio transformer [arXiv:2212.04356].
+
+4L enc + 4L dec, d_model=384, 6 heads (kv=6), d_ff=1536, vocab=51865.
+Conv audio frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, 1500, 384). LayerNorm + GELU + plain MLP + QKV bias + learned
+positions (decoder) / sinusoidal (encoder).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv=6,
+    d_ff=1536,
+    vocab=51865,
+    mlp_gated=False,
+    qkv_bias=True,
+    norm="layernorm",
+    act="gelu",
+    pos="learned",
+    enc_layers=4,
+    enc_frames=1500,
+    frontend="audio_stub",
+    kv_banks=4,
+))

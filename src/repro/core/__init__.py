@@ -1,0 +1,47 @@
+"""The paper's primary contribution: coded emulation of multi-port memory.
+
+Public surface:
+  codes      — Scheme I/II/III + replication/uncoded baselines (§III)
+  state      — MemParams/MemState pytrees (code status table refinement, §IV-A)
+  controller — read/write pattern builders (§IV-B/C)
+  recoding   — ReCoding unit (§IV-D)
+  dynamic    — dynamic coding unit (§IV-E)
+  system     — CodedMemorySystem cycle engine + trace-driven run()
+"""
+from repro.core.codes import (  # noqa: F401
+    MAX_OPTS,
+    MAX_SIBS,
+    CodeScheme,
+    CodeTables,
+    SCHEMES,
+    get_tables,
+    replication,
+    scheme_i,
+    scheme_ii,
+    scheme_iii,
+    uncoded,
+)
+from repro.core.controller import (  # noqa: F401
+    MODE_DIRECT,
+    MODE_FROM_SYM,
+    MODE_OPT0,
+    MODE_REDIRECT,
+    MODE_UNSERVED,
+    WMODE_DIRECT,
+    WMODE_PARK0,
+    WMODE_UNSERVED,
+    JTables,
+    ReadPlan,
+    WritePlan,
+    build_read_pattern,
+    build_write_pattern,
+    jtables,
+)
+from repro.core.state import MemParams, MemState, init_state, make_params  # noqa: F401
+from repro.core.system import (  # noqa: F401
+    CodedMemorySystem,
+    CycleOut,
+    SimResult,
+    SimState,
+    Trace,
+)

@@ -1,0 +1,229 @@
+"""Code schemes from the paper (§III) as static, table-driven descriptions.
+
+A *scheme* is a set of logical parity banks over ``n_data`` single-port data
+banks. Each logical parity stores, for every covered row ``i``,
+``XOR_{m in members} bank_m(i)``; ``members`` of size 1 denotes a straight
+duplicate (Scheme II's second code region, and the replication baselines).
+
+Logical parities are mapped onto *physical* parity banks (``phys``). Two
+logical parities packed into the same physical bank (Scheme II stores two
+``αL`` half-regions in one ``2αL`` bank) share that bank's single port.
+
+The schemes (paper §III-B):
+  * Scheme I   — 8 data banks in two groups of 4; all C(4,2)=6 pairwise
+                 parities per group, each its own shallow bank (12 total).
+                 Rate 2/(2+3α); locality 2.
+  * Scheme II  — Scheme I's pairs plus a duplicate of every data bank,
+                 packed two-halves-per-physical-bank (10 physical banks of
+                 2αL rows). Rate 2/(2+5α); locality 2 (or 1 via duplicate).
+  * Scheme III — 9 data banks in a 3×3 grid; 9 parities = 3 row XORs,
+                 3 column XORs, 3 broken-diagonal XORs; locality 3.
+                 Rate 1/(1+α). The 8-bank variant omits the final bank from
+                 encoding (paper Remark 5).
+  * replication(k) — the uncoded k-replication baseline of §II-A1.
+  * uncoded()      — plain banked memory (no parities).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Tuple
+
+import numpy as np
+
+MAX_SIBS = 2  # max locality-1 across supported schemes (Scheme III = 3 banks)
+MAX_OPTS = 4  # max non-direct serving options for one data bank
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeScheme:
+    """Static description of a coding scheme."""
+
+    name: str
+    n_data: int
+    # members[j] = data banks XORed into logical parity j (len 1 == duplicate)
+    members: Tuple[Tuple[int, ...], ...]
+    # phys[j] = physical parity bank hosting logical parity j
+    phys: Tuple[int, ...]
+
+    @property
+    def n_parities(self) -> int:
+        return len(self.members)
+
+    @property
+    def n_phys(self) -> int:
+        return 0 if not self.phys else max(self.phys) + 1
+
+    @property
+    def n_ports(self) -> int:
+        """Total single-port units: data banks + physical parity banks."""
+        return self.n_data + self.n_phys
+
+    def storage_overhead(self, alpha: float) -> float:
+        """Parity storage in units of one data bank (αL rows each logical)."""
+        # Scheme II physical banks hold 2αL rows but that's exactly the sum of
+        # their two logical halves, so logical count * alpha is exact.
+        return self.n_parities * alpha
+
+    def rate(self, alpha: float) -> float:
+        """Information rate = data / (data + parity) storage (paper §III-B)."""
+        return self.n_data / (self.n_data + self.storage_overhead(alpha))
+
+    def locality(self) -> int:
+        """Worst-case degraded-read locality (banks touched per degraded read)."""
+        return max((len(m) for m in self.members), default=1)
+
+
+def scheme_i(n_data: int = 8) -> CodeScheme:
+    assert n_data % 4 == 0, "Scheme I groups data banks by 4"
+    members = []
+    for g in range(n_data // 4):
+        base = 4 * g
+        for a, b in itertools.combinations(range(base, base + 4), 2):
+            members.append((a, b))
+    phys = tuple(range(len(members)))  # one shallow physical bank per parity
+    return CodeScheme("scheme_i", n_data, tuple(members), phys)
+
+
+def scheme_ii(n_data: int = 8) -> CodeScheme:
+    assert n_data % 4 == 0, "Scheme II groups data banks by 4"
+    members = []
+    phys = []
+    phys_base = 0
+    for g in range(n_data // 4):
+        base = 4 * g
+        pairs = list(itertools.combinations(range(base, base + 4), 2))  # 6
+        dups = [(base + k,) for k in range(4)]  # 4
+        # Pack 10 logical halves into 5 physical banks of 2αL rows each:
+        #   phys k (k<4): [pair_k, dup_k]; phys 4: [pair_4, pair_5].
+        packing = [
+            (pairs[0], dups[0]),
+            (pairs[1], dups[1]),
+            (pairs[2], dups[2]),
+            (pairs[3], dups[3]),
+            (pairs[4], pairs[5]),
+        ]
+        for k, (h0, h1) in enumerate(packing):
+            members.append(h0)
+            phys.append(phys_base + k)
+            members.append(h1)
+            phys.append(phys_base + k)
+        phys_base += 5
+    return CodeScheme("scheme_ii", n_data, tuple(members), tuple(phys))
+
+
+def scheme_iii(n_data: int = 9) -> CodeScheme:
+    """3×3 grid code: rows / columns / broken diagonals; locality 3.
+
+    With ``n_data == 8`` the 9th bank is omitted from the encoding (paper
+    Remark 5): parities that referenced it simply drop that member.
+    """
+    assert n_data in (8, 9)
+    grid = np.arange(9).reshape(3, 3)
+    members = []
+    for r in range(3):  # rows
+        members.append(tuple(int(x) for x in grid[r]))
+    for c in range(3):  # columns
+        members.append(tuple(int(x) for x in grid[:, c]))
+    for d in range(3):  # broken diagonals
+        members.append(tuple(int(grid[k, (k + d) % 3]) for k in range(3)))
+    if n_data == 8:
+        members = [tuple(m for m in ms if m != 8) for ms in members]
+    phys = tuple(range(len(members)))
+    return CodeScheme("scheme_iii", n_data, tuple(members), phys)
+
+
+def replication(n_data: int = 8, copies: int = 2) -> CodeScheme:
+    """k-replication baseline (§II-A1): copies-1 duplicates per data bank."""
+    members = []
+    phys = []
+    p = 0
+    for _ in range(copies - 1):
+        for b in range(n_data):
+            members.append((b,))
+            phys.append(p)
+            p += 1
+    return CodeScheme(f"replication_{copies}", n_data, tuple(members), tuple(phys))
+
+
+def uncoded(n_data: int = 8) -> CodeScheme:
+    return CodeScheme("uncoded", n_data, (), ())
+
+
+SCHEMES = {
+    "uncoded": uncoded,
+    "scheme_i": scheme_i,
+    "scheme_ii": scheme_ii,
+    "scheme_iii": scheme_iii,
+    "replication_2": lambda n_data=8: replication(n_data, 2),
+    "replication_4": lambda n_data=8: replication(n_data, 4),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeTables:
+    """Dense numpy lookup tables consumed by the jitted pattern builders.
+
+    All arrays use -1 padding. ``opt_*`` enumerate the *non-direct* serving
+    options of each data bank: option k of bank b reads logical parity
+    ``opt_parity[b, k]`` plus sibling data banks ``opt_sibs[b, k, :]``
+    (-1 padded; a duplicate option has no siblings).
+    """
+
+    scheme: CodeScheme
+    n_data: int
+    n_parities: int
+    n_phys: int
+    n_ports: int
+    par_members: np.ndarray  # (n_par, MAX_SIBS+1) int32, -1 pad
+    par_phys: np.ndarray     # (n_par,) int32  physical parity bank
+    par_port: np.ndarray     # (n_par,) int32  global port id (n_data + phys)
+    opt_parity: np.ndarray   # (n_data, MAX_OPTS) int32, -1 pad
+    opt_sibs: np.ndarray     # (n_data, MAX_OPTS, MAX_SIBS) int32, -1 pad
+    opt_n: np.ndarray        # (n_data,) int32 number of valid options
+
+    @staticmethod
+    def build(scheme: CodeScheme) -> "CodeTables":
+        nd, npar = scheme.n_data, scheme.n_parities
+        par_members = np.full((max(npar, 1), MAX_SIBS + 1), -1, np.int32)
+        par_phys = np.full((max(npar, 1),), -1, np.int32)
+        for j, ms in enumerate(scheme.members):
+            assert len(ms) <= MAX_SIBS + 1
+            par_members[j, : len(ms)] = ms
+            par_phys[j] = scheme.phys[j]
+        par_port = np.where(par_phys >= 0, nd + par_phys, -1).astype(np.int32)
+
+        opt_parity = np.full((nd, MAX_OPTS), -1, np.int32)
+        opt_sibs = np.full((nd, MAX_OPTS, MAX_SIBS), -1, np.int32)
+        opt_n = np.zeros((nd,), np.int32)
+        for b in range(nd):
+            k = 0
+            for j, ms in enumerate(scheme.members):
+                if b in ms:
+                    assert k < MAX_OPTS, f"bank {b}: more than {MAX_OPTS} options"
+                    opt_parity[b, k] = j
+                    sibs = [m for m in ms if m != b]
+                    opt_sibs[b, k, : len(sibs)] = sibs
+                    k += 1
+            opt_n[b] = k
+        return CodeTables(
+            scheme=scheme,
+            n_data=nd,
+            n_parities=npar,
+            n_phys=scheme.n_phys,
+            n_ports=scheme.n_ports,
+            par_members=par_members,
+            par_phys=par_phys,
+            par_port=par_port,
+            opt_parity=opt_parity,
+            opt_sibs=opt_sibs,
+            opt_n=opt_n,
+        )
+
+
+def get_tables(name: str, n_data: int = 8) -> CodeTables:
+    if name not in SCHEMES:
+        raise KeyError(f"unknown scheme {name!r}; have {sorted(SCHEMES)}")
+    if name == "scheme_iii" and n_data == 8:
+        return CodeTables.build(scheme_iii(8))
+    return CodeTables.build(SCHEMES[name](n_data=n_data))

@@ -1,0 +1,151 @@
+"""Dynamic coding unit (paper §IV-E).
+
+Rows are partitioned into ``n_regions`` regions of ``region_size`` rows;
+parity banks can hold ``n_slots = ⌊α/r⌋`` coded regions (capped at
+``n_regions``; at α=1 everything is coded statically and this unit is a
+no-op — reproducing the paper's "zero switches at α=1").
+
+Every ``select_period`` cycles the unit compares the hottest *uncoded*
+region's (windowed) access count against the coldest *coded* region:
+
+  * if a parity slot is free, the hottest uncoded region with any accesses is
+    encoded into it;
+  * otherwise, if the hottest uncoded region is strictly hotter than the
+    coldest coded region (LFU), the LFU region is evicted — unless it holds
+    parked writes (``parked_count > 0``), which must drain first — and the
+    hot region is encoded into the freed slot.
+
+Encoding takes ``encode_cycles`` cycles; the slot is unusable in flight
+(the paper's "reserved staging region"). Completion writes the parity data
+(XOR of member data banks over the whole region), marks ``parity_valid`` and
+counts one *switch* (the Fig-18 bar metric). Counts decay by half each
+period (windowed LFU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codes import MAX_SIBS
+from repro.core.controller import JTables
+from repro.core.state import MemParams
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class DynOut(NamedTuple):
+    region_slot: jnp.ndarray
+    slot_region: jnp.ndarray
+    access_count: jnp.ndarray
+    parity_valid: jnp.ndarray
+    parity_data: jnp.ndarray
+    enc_region: jnp.ndarray
+    enc_remaining: jnp.ndarray
+    enc_slot: jnp.ndarray
+    switches: jnp.ndarray
+
+
+def _encode_region_data(
+    p: MemParams, t: JTables, banks_data: jnp.ndarray, parity_data: jnp.ndarray,
+    region: jnp.ndarray, slot: jnp.ndarray,
+) -> jnp.ndarray:
+    """Write XOR parities of ``region``'s rows into ``slot``'s parity rows."""
+    rs = p.region_size
+    rows = jnp.clip(region * rs + jnp.arange(rs), 0, p.n_rows - 1)  # (rs,)
+    vals = jnp.zeros((p.n_parities, rs), jnp.int32)
+    for mm in range(MAX_SIBS + 1):
+        m = t.par_members[:, mm]  # (n_par,)
+        gathered = banks_data[jnp.maximum(m, 0)][:, rows]  # (n_par, rs)
+        vals = vals ^ jnp.where((m >= 0)[:, None], gathered, 0)
+    start = jnp.maximum(slot, 0) * rs
+    return jax.lax.dynamic_update_slice(parity_data, vals, (0, start))
+
+
+def dynamic_step(
+    p: MemParams,
+    t: JTables,
+    cycle: jnp.ndarray,
+    region_slot: jnp.ndarray,
+    slot_region: jnp.ndarray,
+    access_count: jnp.ndarray,
+    parked_count: jnp.ndarray,
+    parity_valid: jnp.ndarray,
+    parity_data: jnp.ndarray,
+    banks_data: jnp.ndarray,
+    enc_region: jnp.ndarray,
+    enc_remaining: jnp.ndarray,
+    enc_slot: jnp.ndarray,
+    switches: jnp.ndarray,
+) -> DynOut:
+    if p.n_slots >= p.n_regions:  # static full coverage: unit disabled
+        return DynOut(region_slot, slot_region, access_count, parity_valid,
+                      parity_data, enc_region, enc_remaining, enc_slot, switches)
+    rs = p.region_size
+
+    # ---- encode in flight ---------------------------------------------------
+    in_flight = enc_region >= 0
+    enc_remaining = jnp.where(in_flight, enc_remaining - 1, 0)
+    complete = in_flight & (enc_remaining <= 0)
+    # completion: install mapping, write parity data, validate rows
+    parity_data = jnp.where(
+        complete,
+        _encode_region_data(p, t, banks_data, parity_data, enc_region, enc_slot),
+        parity_data,
+    )
+    slot_rows = jnp.maximum(enc_slot, 0) * rs + jnp.arange(rs)
+    pv_rows = jnp.zeros_like(parity_valid).at[:, slot_rows].set(True)
+    parity_valid = jnp.where(complete, parity_valid | pv_rows, parity_valid)
+    region_slot = region_slot.at[jnp.maximum(enc_region, 0)].set(
+        jnp.where(complete, enc_slot, region_slot[jnp.maximum(enc_region, 0)])
+    )
+    slot_region = slot_region.at[jnp.maximum(enc_slot, 0)].set(
+        jnp.where(complete, enc_region, slot_region[jnp.maximum(enc_slot, 0)])
+    )
+    switches = switches + complete.astype(jnp.int32)
+    enc_region = jnp.where(complete, -1, enc_region)
+    enc_slot = jnp.where(complete, -1, enc_slot)
+
+    # ---- periodic selection --------------------------------------------------
+    select = (cycle % p.select_period == 0) & (cycle > 0) & (enc_region < 0)
+    coded = region_slot >= 0
+    # hottest uncoded region
+    cand_counts = jnp.where(coded, -1, access_count)
+    cand = jnp.argmax(cand_counts).astype(jnp.int32)
+    cand_count = cand_counts[cand]
+    # coldest coded, evictable (no parked rows) region
+    evict_counts = jnp.where(coded & (parked_count == 0), access_count, INT32_MAX)
+    victim = jnp.argmin(evict_counts).astype(jnp.int32)
+    victim_count = evict_counts[victim]
+    free_slot_mask = slot_region < 0
+    has_free = jnp.any(free_slot_mask)
+    free_slot = jnp.argmax(free_slot_mask).astype(jnp.int32)
+
+    start_free = select & has_free & (cand_count > 0)
+    start_evict = select & ~has_free & (cand_count > victim_count) & (victim_count < INT32_MAX)
+
+    # eviction: clear victim's slot + validity
+    vslot = jnp.maximum(region_slot[victim], 0)
+    vrows = vslot * rs + jnp.arange(rs)
+    pv_clear = jnp.ones_like(parity_valid).at[:, vrows].set(False)
+    parity_valid = jnp.where(start_evict, parity_valid & pv_clear, parity_valid)
+    region_slot = region_slot.at[victim].set(
+        jnp.where(start_evict, -1, region_slot[victim])
+    )
+    slot_region = slot_region.at[vslot].set(
+        jnp.where(start_evict, -1, slot_region[vslot])
+    )
+
+    start = start_free | start_evict
+    tgt_slot = jnp.where(start_evict, vslot, free_slot)
+    enc_region = jnp.where(start, cand, enc_region)
+    enc_slot = jnp.where(start, tgt_slot, enc_slot)
+    enc_remaining = jnp.where(start, p.encode_cycles, enc_remaining)
+
+    # windowed counts decay each period
+    access_count = jnp.where(
+        (cycle % p.select_period == 0) & (cycle > 0), access_count // 2, access_count
+    )
+    return DynOut(region_slot, slot_region, access_count, parity_valid,
+                  parity_data, enc_region, enc_remaining, enc_slot, switches)

@@ -1,0 +1,193 @@
+"""Pytree state for the coded memory system (controller + banks).
+
+Freshness model (a bit-exact refinement of the paper's 2-bit code status
+table, §IV-A):
+
+  * ``fresh_loc[b, i]`` — where the logically-fresh value of data bank ``b``
+    row ``i`` lives: ``0`` = in the data bank; ``j+1`` = *parked* raw in
+    logical parity bank ``j``'s row slot (paper status ``10``).
+  * ``parity_valid[j, r]`` — logical parity ``j``'s slot row ``r`` currently
+    equals the XOR of its members' *data-bank-stored* rows. Cleared by any
+    member direct-write (paper status ``01``) or by parking (status ``10``);
+    restored by the ReCoding unit or by a fresh region encode.
+
+  Degraded read of ``(b, i)`` via parity ``j`` therefore requires
+  ``parity_valid[j, r(i)]`` *and* ``fresh_loc[b, i] == 0``. Sibling rows are
+  read from their data banks; their XOR with the parity reconstructs the
+  data-bank value of ``b`` exactly even if a sibling's own fresh value is
+  parked elsewhere (the parity was computed from data-bank contents).
+
+Dynamic coding (§IV-E): rows are grouped into ``n_regions`` regions of
+``region_size`` rows; ``region_slot[g]`` maps region ``g`` to a parity slot
+(or -1), giving parity row ``r(i) = region_slot[i // rs] * rs + i % rs``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codes import CodeTables
+
+NOP_PORT_PAD = 1  # port_busy has one trailing dummy slot used as a no-op sink
+
+
+class MemParams(NamedTuple):
+    """Static geometry (python ints; hashable, used as jit static args)."""
+
+    n_data: int
+    n_parities: int
+    n_ports: int          # data + physical parity banks
+    n_rows: int           # L, rows per data bank
+    region_size: int      # rs
+    n_regions: int        # L // rs
+    n_slots: int          # parity slots = floor(alpha / r), capped at n_regions
+    n_active: int         # slots usable for coded regions (reserve 1 staging)
+    queue_depth: int
+    recode_cap: int
+    max_syms: int
+    encode_cycles: int    # cycles to encode one region into the staging slot
+    select_period: int    # T, dynamic re-selection period
+    wq_hi: int            # write-drain hysteresis thresholds
+    wq_lo: int
+    recode_budget: int    # max recode entries retired per cycle
+    coalesce: bool        # allow FROM_SYM / chained-decode reuse (off for the
+                          # uncoded Ramulator-like baseline)
+
+
+def make_params(
+    tables: CodeTables,
+    n_rows: int,
+    alpha: float,
+    r: float,
+    queue_depth: int = 10,
+    recode_cap: int = 64,
+    max_syms: int = 96,
+    encode_rows_per_cycle: int = 64,
+    select_period: int = 512,
+    wq_hi: int = 8,
+    wq_lo: int = 2,
+    recode_budget: int = 4,
+    coalesce: bool = True,
+) -> MemParams:
+    region_size = max(1, int(round(n_rows * r)))
+    n_regions = -(-n_rows // region_size)
+    n_slots = min(int(np.floor(alpha / r + 1e-9)), n_regions)
+    n_slots = max(n_slots, 1)
+    # §IV-E says "up to α/r − 1 regions" with one reserved for staging, but the
+    # paper's own experiment discussion (§V-C: "⌊α/r⌋ = 2 … we can select 2
+    # regions" at α=0.1, r=0.05) uses ⌊α/r⌋ active regions; we follow §V-C and
+    # model staging as the in-flight slot being unusable during its encode.
+    n_active = n_slots
+    return MemParams(
+        n_data=tables.n_data,
+        n_parities=max(tables.n_parities, 1),
+        n_ports=tables.n_ports,
+        n_rows=n_rows,
+        region_size=region_size,
+        n_regions=n_regions,
+        n_slots=n_slots,
+        n_active=n_active,
+        queue_depth=queue_depth,
+        recode_cap=recode_cap,
+        max_syms=max_syms,
+        encode_cycles=max(1, region_size // encode_rows_per_cycle),
+        select_period=select_period,
+        wq_hi=min(wq_hi, queue_depth - 1),
+        wq_lo=wq_lo,
+        recode_budget=recode_budget,
+        coalesce=coalesce if tables.n_parities > 0 else False,
+    )
+
+
+class MemState(NamedTuple):
+    """Dynamic controller state (all jnp arrays; a scan carry)."""
+
+    # freshness / code status
+    fresh_loc: jnp.ndarray      # (n_data, L) int32
+    parity_valid: jnp.ndarray   # (n_par, n_slots * rs) bool
+    # dynamic coding
+    region_slot: jnp.ndarray    # (n_regions,) int32, -1 = uncoded
+    slot_region: jnp.ndarray    # (n_slots,) int32, -1 = free/staging
+    access_count: jnp.ndarray   # (n_regions,) int32 (windowed)
+    parked_count: jnp.ndarray   # (n_regions,) int32
+    enc_region: jnp.ndarray     # () int32, -1 = idle
+    enc_remaining: jnp.ndarray  # () int32
+    enc_slot: jnp.ndarray       # () int32 slot being encoded (-1 idle)
+    switches: jnp.ndarray       # () int32
+    # recode ring buffer
+    rc_bank: jnp.ndarray        # (RC,) int32
+    rc_row: jnp.ndarray         # (RC,) int32
+    rc_valid: jnp.ndarray       # (RC,) bool
+    # read/write queues (per data bank)
+    rq_row: jnp.ndarray         # (n_data, D) int32
+    rq_age: jnp.ndarray         # (n_data, D) int32 (issue cycle; INT32_MAX empty)
+    rq_valid: jnp.ndarray       # (n_data, D) bool
+    wq_row: jnp.ndarray
+    wq_age: jnp.ndarray
+    wq_valid: jnp.ndarray
+    wq_data: jnp.ndarray        # (n_data, D) int32 write payloads
+    write_mode: jnp.ndarray     # () bool (write-drain hysteresis)
+    cycle: jnp.ndarray          # () int32
+    # data-carrying banks (scalar word per row; the datapath reference and
+    # the substrate for the correctness invariants in tests)
+    banks_data: jnp.ndarray     # (n_data, L) int32
+    parity_data: jnp.ndarray    # (n_par, n_slots * rs) int32
+    golden: jnp.ndarray         # (n_data, L) int32 memory-order reference
+    # stats
+    served_reads: jnp.ndarray   # () int32
+    served_writes: jnp.ndarray  # () int32
+    degraded_reads: jnp.ndarray  # () int32 (reads served via parity/symbols)
+    parked_writes: jnp.ndarray  # () int32
+    read_latency_sum: jnp.ndarray  # () int64-ish int32
+    write_latency_sum: jnp.ndarray
+    stall_cycles: jnp.ndarray   # () int32 (core-stall events)
+
+
+def init_state(p: MemParams) -> MemState:
+    n_slot_rows = p.n_slots * p.region_size
+    if p.n_slots >= p.n_regions:
+        # static full coverage: identity region->slot map, all parities valid
+        region_slot = jnp.arange(p.n_regions, dtype=jnp.int32)
+        slot_region = jnp.arange(p.n_slots, dtype=jnp.int32)
+        parity_valid = jnp.ones((p.n_parities, n_slot_rows), bool)
+    else:
+        region_slot = jnp.full((p.n_regions,), -1, jnp.int32)
+        slot_region = jnp.full((p.n_slots,), -1, jnp.int32)
+        parity_valid = jnp.zeros((p.n_parities, n_slot_rows), bool)
+    z = jnp.int32(0)
+    return MemState(
+        fresh_loc=jnp.zeros((p.n_data, p.n_rows), jnp.int32),
+        parity_valid=parity_valid,
+        region_slot=region_slot,
+        slot_region=slot_region,
+        access_count=jnp.zeros((p.n_regions,), jnp.int32),
+        parked_count=jnp.zeros((p.n_regions,), jnp.int32),
+        enc_region=jnp.int32(-1),
+        enc_remaining=z,
+        enc_slot=jnp.int32(-1),
+        switches=z,
+        rc_bank=jnp.full((p.recode_cap,), -1, jnp.int32),
+        rc_row=jnp.full((p.recode_cap,), -1, jnp.int32),
+        rc_valid=jnp.zeros((p.recode_cap,), bool),
+        rq_row=jnp.full((p.n_data, p.queue_depth), -1, jnp.int32),
+        rq_age=jnp.full((p.n_data, p.queue_depth), jnp.iinfo(jnp.int32).max, jnp.int32),
+        rq_valid=jnp.zeros((p.n_data, p.queue_depth), bool),
+        wq_row=jnp.full((p.n_data, p.queue_depth), -1, jnp.int32),
+        wq_age=jnp.full((p.n_data, p.queue_depth), jnp.iinfo(jnp.int32).max, jnp.int32),
+        wq_valid=jnp.zeros((p.n_data, p.queue_depth), bool),
+        wq_data=jnp.zeros((p.n_data, p.queue_depth), jnp.int32),
+        write_mode=jnp.array(False),
+        cycle=z,
+        banks_data=jnp.zeros((p.n_data, p.n_rows), jnp.int32),
+        parity_data=jnp.zeros((p.n_parities, n_slot_rows), jnp.int32),
+        golden=jnp.zeros((p.n_data, p.n_rows), jnp.int32),
+        served_reads=z,
+        served_writes=z,
+        degraded_reads=z,
+        parked_writes=z,
+        read_latency_sum=z,
+        write_latency_sum=z,
+        stall_cycles=z,
+    )

@@ -1,0 +1,335 @@
+"""The coded memory system: core arbiter + bank queues + access scheduler.
+
+One ``cycle_fn`` call = one memory clock cycle (paper Fig 2 / §IV):
+
+  1. **Core arbiter** — each core's pending request is pushed into its
+     destination bank's read/write queue; a full queue stalls the core.
+  2. **Access scheduler** — a write-drain hysteresis picks read or write mode
+     (the paper serves writes "only when the write bank queues are nearly
+     full"); the corresponding pattern builder schedules this cycle's
+     accesses across data + parity ports.
+  3. **Datapath** — served reads return values (direct / XOR-decode /
+     redirect); served writes commit payloads to data banks or park them in
+     parity rows. ``golden`` tracks memory order for the test invariants.
+  4. **ReCoding unit** — retires stale-parity work using leftover ports.
+  5. **Dynamic coding unit** — hot-region selection / encode / evict.
+
+``run()`` wraps ``cycle_fn`` in a ``lax.scan`` for trace-driven simulation
+(the Ramulator-replacement used by the benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as ctl
+from repro.core.codes import MAX_OPTS, MAX_SIBS, CodeTables
+from repro.core.dynamic import dynamic_step
+from repro.core.recoding import recode_step
+from repro.core.state import MemParams, MemState, init_state
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class Trace(NamedTuple):
+    """Per-core request streams. Invalid entries are idle cycles."""
+
+    bank: jnp.ndarray      # (n_cores, T) int32
+    row: jnp.ndarray       # (n_cores, T) int32
+    is_write: jnp.ndarray  # (n_cores, T) bool
+    data: jnp.ndarray      # (n_cores, T) int32 write payloads
+    valid: jnp.ndarray     # (n_cores, T) bool
+
+
+class SimState(NamedTuple):
+    mem: MemState
+    core_ptr: jnp.ndarray   # (n_cores,) int32
+    done_cycle: jnp.ndarray  # () int32, -1 until the workload drains
+
+
+class CycleOut(NamedTuple):
+    """Per-cycle introspection (read datapath results for invariant tests)."""
+
+    r_served: jnp.ndarray  # (N,) bool
+    r_bank: jnp.ndarray    # (N,) int32
+    r_row: jnp.ndarray     # (N,) int32
+    r_value: jnp.ndarray   # (N,) int32
+    n_served: jnp.ndarray  # () int32 (reads+writes)
+
+
+class SimResult(NamedTuple):
+    cycles: int
+    completed: bool
+    served_reads: int
+    served_writes: int
+    degraded_reads: int
+    parked_writes: int
+    switches: int
+    recode_backlog: int
+    stall_cycles: int
+    avg_read_latency: float
+    avg_write_latency: float
+
+
+class CodedMemorySystem:
+    """Facade owning the static tables/params; methods are jit-compiled."""
+
+    def __init__(self, tables: CodeTables, params: MemParams, n_cores: int = 8):
+        self.tables = tables
+        self.p = params
+        self.t = ctl.jtables(tables)
+        self.n_cores = n_cores
+
+    # ------------------------------------------------------------------ init
+    def init(self) -> SimState:
+        return SimState(
+            mem=init_state(self.p),
+            core_ptr=jnp.zeros((self.n_cores,), jnp.int32),
+            done_cycle=jnp.int32(-1),
+        )
+
+    # --------------------------------------------------------------- arbiter
+    def _arbiter(self, st: SimState, trace: Trace):
+        p = self.p
+        tlen = trace.bank.shape[1]
+        rs = p.region_size
+
+        def core_body(ci, carry):
+            (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid, wq_data,
+             access_count, stalls, cyc) = carry
+            pos = ptr[ci]
+            in_range = pos < tlen
+            pc = jnp.minimum(pos, tlen - 1)
+            v = trace.valid[ci, pc] & in_range
+            b = jnp.maximum(trace.bank[ci, pc], 0)
+            i = jnp.maximum(trace.row[ci, pc], 0)
+            isw = trace.is_write[ci, pc]
+            payload = trace.data[ci, pc]
+
+            r_full = jnp.all(rq_valid[b])
+            w_full = jnp.all(wq_valid[b])
+            full = jnp.where(isw, w_full, r_full)
+            push = v & ~full
+            # first free slot in the destination queue
+            r_slot = jnp.argmax(~rq_valid[b]).astype(jnp.int32)
+            w_slot = jnp.argmax(~wq_valid[b]).astype(jnp.int32)
+            pr_ = push & ~isw
+            pw_ = push & isw
+            rq_row = rq_row.at[b, r_slot].set(jnp.where(pr_, i, rq_row[b, r_slot]))
+            rq_age = rq_age.at[b, r_slot].set(jnp.where(pr_, cyc, rq_age[b, r_slot]))
+            rq_valid = rq_valid.at[b, r_slot].set(jnp.where(pr_, True, rq_valid[b, r_slot]))
+            wq_row = wq_row.at[b, w_slot].set(jnp.where(pw_, i, wq_row[b, w_slot]))
+            wq_age = wq_age.at[b, w_slot].set(jnp.where(pw_, cyc, wq_age[b, w_slot]))
+            wq_valid = wq_valid.at[b, w_slot].set(jnp.where(pw_, True, wq_valid[b, w_slot]))
+            wq_data = wq_data.at[b, w_slot].set(jnp.where(pw_, payload, wq_data[b, w_slot]))
+            access_count = access_count.at[i // rs].add(push.astype(jnp.int32))
+            stalls = stalls + (v & full).astype(jnp.int32)
+            # advance pointer on push or idle entry
+            ptr = ptr.at[ci].set(pos + (in_range & (push | ~v)).astype(jnp.int32))
+            return (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid,
+                    wq_data, access_count, stalls, cyc)
+
+        m = st.mem
+        carry = (st.core_ptr, m.rq_row, m.rq_age, m.rq_valid, m.wq_row, m.wq_age,
+                 m.wq_valid, m.wq_data, m.access_count, m.stall_cycles, m.cycle)
+        out = jax.lax.fori_loop(0, self.n_cores, core_body, carry)
+        (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid, wq_data,
+         access_count, stalls, _) = out
+        mem = m._replace(
+            rq_row=rq_row, rq_age=rq_age, rq_valid=rq_valid, wq_row=wq_row,
+            wq_age=wq_age, wq_valid=wq_valid, wq_data=wq_data,
+            access_count=access_count, stall_cycles=stalls,
+        )
+        return st._replace(mem=mem, core_ptr=ptr)
+
+    # ----------------------------------------------------------- read values
+    def _read_values(self, m: MemState, plan: ctl.ReadPlan, cb, ci):
+        """Vectorized XOR-decode datapath for the served reads."""
+        p, t = self.p, self.t
+        rs = p.region_size
+        b = jnp.maximum(cb, 0)
+        i = jnp.maximum(ci, 0)
+        slot = m.region_slot[i // rs]
+        pr = jnp.maximum(slot, 0) * rs + i % rs
+        direct_val = m.banks_data[b, i]
+        fl = m.fresh_loc[b, i]
+        holder = jnp.maximum(fl - 1, 0)
+        redirect_val = m.parity_data[holder, pr]
+        k = jnp.clip(plan.mode - ctl.MODE_OPT0, 0, MAX_OPTS - 1)
+        j = jnp.maximum(t.opt_parity[b, k], 0)
+        dec = m.parity_data[j, pr]
+        for mm in range(MAX_SIBS):
+            s = t.opt_sibs[b, k, mm]
+            dec = dec ^ jnp.where(s >= 0, m.banks_data[jnp.maximum(s, 0), i], 0)
+        val = jnp.where(
+            plan.mode == ctl.MODE_REDIRECT, redirect_val,
+            jnp.where((plan.mode >= ctl.MODE_OPT0) & (plan.mode < ctl.MODE_REDIRECT),
+                      dec, direct_val),
+        )
+        return jnp.where(plan.served, val, 0)
+
+    # ------------------------------------------------------------- one cycle
+    @functools.partial(jax.jit, static_argnums=0)
+    def cycle_fn(self, st: SimState, trace: Trace):
+        p, t = self.p, self.t
+        st = self._arbiter(st, trace)
+        m = st.mem
+        n_cand = p.n_data * p.queue_depth
+        port_busy0 = jnp.zeros((p.n_ports + 1,), bool)
+        bank_ids = jnp.repeat(jnp.arange(p.n_data, dtype=jnp.int32), p.queue_depth)
+
+        # write-drain hysteresis
+        wq_occ = jnp.max(jnp.sum(m.wq_valid, axis=1))
+        any_r = jnp.any(m.rq_valid)
+        any_w = jnp.any(m.wq_valid)
+        wm = jnp.where(m.write_mode, wq_occ > p.wq_lo, wq_occ >= p.wq_hi)
+        serve_writes = (wm | (~any_r & any_w)) & any_w
+
+        def do_reads(m):
+            cb = bank_ids
+            ci_ = m.rq_row.reshape(-1)
+            ca = m.rq_age.reshape(-1)
+            cv = m.rq_valid.reshape(-1)
+            plan = ctl.build_read_pattern(
+                p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
+                m.region_slot,
+            )
+            vals = self._read_values(m, plan, cb, ci_)
+            lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
+            m = m._replace(
+                rq_valid=m.rq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
+                served_reads=m.served_reads + plan.n_served,
+                degraded_reads=m.degraded_reads + plan.n_degraded,
+                read_latency_sum=m.read_latency_sum + lat,
+            )
+            out = CycleOut(plan.served, cb, ci_, vals, plan.n_served)
+            return m, plan.port_busy, out
+
+        def do_writes(m):
+            cb = bank_ids
+            ci_ = m.wq_row.reshape(-1)
+            ca = m.wq_age.reshape(-1)
+            cv = m.wq_valid.reshape(-1)
+            cd = m.wq_data.reshape(-1)
+            plan = ctl.build_write_pattern(
+                p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
+                m.region_slot, m.parked_count, m.rc_bank, m.rc_row, m.rc_valid,
+            )
+            # commit payloads in age order (memory order: last write wins)
+            order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
+            rs = p.region_size
+
+            def commit(k, carry):
+                banks_data, parity_data, golden = carry
+                c = order[k]
+                b = jnp.maximum(cb[c], 0)
+                i = jnp.maximum(ci_[c], 0)
+                served = plan.served[c]
+                mode = plan.mode[c]
+                slot = m.region_slot[i // rs]
+                pr = jnp.maximum(slot, 0) * rs + i % rs
+                is_dir = served & (mode == ctl.WMODE_DIRECT)
+                is_park = served & (mode >= ctl.WMODE_PARK0)
+                kk = jnp.clip(mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
+                j = jnp.maximum(t.opt_parity[b, kk], 0)
+                banks_data = banks_data.at[b, i].set(
+                    jnp.where(is_dir, cd[c], banks_data[b, i])
+                )
+                parity_data = parity_data.at[j, pr].set(
+                    jnp.where(is_park, cd[c], parity_data[j, pr])
+                )
+                golden = golden.at[b, i].set(jnp.where(served, cd[c], golden[b, i]))
+                return banks_data, parity_data, golden
+
+            banks_data, parity_data, golden = jax.lax.fori_loop(
+                0, n_cand, commit, (m.banks_data, m.parity_data, m.golden)
+            )
+            lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
+            m = m._replace(
+                wq_valid=m.wq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
+                fresh_loc=plan.fresh_loc,
+                parity_valid=plan.parity_valid,
+                parked_count=plan.parked_count,
+                rc_bank=plan.rc_bank, rc_row=plan.rc_row, rc_valid=plan.rc_valid,
+                served_writes=m.served_writes + plan.n_served,
+                parked_writes=m.parked_writes + plan.n_parked,
+                write_latency_sum=m.write_latency_sum + lat,
+                banks_data=banks_data, parity_data=parity_data, golden=golden,
+            )
+            out = CycleOut(
+                jnp.zeros((n_cand,), bool), cb, ci_, jnp.zeros((n_cand,), jnp.int32),
+                plan.n_served,
+            )
+            return m, plan.port_busy, out
+
+        m, port_busy, out = jax.lax.cond(serve_writes, do_writes, do_reads, m)
+        m = m._replace(write_mode=wm)
+
+        # recoding unit uses leftover ports
+        rc = recode_step(
+            p, t, port_busy, m.fresh_loc, m.parity_valid, m.parked_count,
+            m.rc_bank, m.rc_row, m.rc_valid, m.region_slot, m.banks_data,
+            m.parity_data,
+        )
+        m = m._replace(
+            fresh_loc=rc.fresh_loc, parity_valid=rc.parity_valid,
+            parked_count=rc.parked_count, rc_valid=rc.rc_valid,
+            banks_data=rc.banks_data, parity_data=rc.parity_data,
+        )
+        # dynamic coding unit
+        dy = dynamic_step(
+            p, t, m.cycle, m.region_slot, m.slot_region, m.access_count,
+            m.parked_count, m.parity_valid, m.parity_data, m.banks_data,
+            m.enc_region, m.enc_remaining, m.enc_slot, m.switches,
+        )
+        m = m._replace(
+            region_slot=dy.region_slot, slot_region=dy.slot_region,
+            access_count=dy.access_count, parity_valid=dy.parity_valid,
+            parity_data=dy.parity_data, enc_region=dy.enc_region,
+            enc_remaining=dy.enc_remaining, enc_slot=dy.enc_slot,
+            switches=dy.switches,
+        )
+        # completion bookkeeping
+        tlen = trace.bank.shape[1]
+        consumed = jnp.all(st.core_ptr >= tlen)
+        drained = ~jnp.any(m.rq_valid) & ~jnp.any(m.wq_valid)
+        done = consumed & drained
+        done_cycle = jnp.where((st.done_cycle < 0) & done, m.cycle, st.done_cycle)
+        m = m._replace(cycle=m.cycle + 1)
+        return SimState(m, st.core_ptr, done_cycle), out
+
+    # ------------------------------------------------------------------- run
+    @functools.partial(jax.jit, static_argnums=(0, 3))
+    def _run(self, st: SimState, trace: Trace, n_cycles: int):
+        def body(st, _):
+            st, out = self.cycle_fn(st, trace)
+            return st, out.n_served
+
+        return jax.lax.scan(body, st, None, length=n_cycles)
+
+    def run(self, trace: Trace, n_cycles: int) -> SimResult:
+        st, _ = self._run(self.init(), trace, n_cycles)
+        return self.summarize(st)
+
+    def summarize(self, st: SimState) -> SimResult:
+        m = st.mem
+        dc = int(st.done_cycle)
+        sr = int(m.served_reads)
+        sw = int(m.served_writes)
+        return SimResult(
+            cycles=dc if dc >= 0 else int(m.cycle),
+            completed=dc >= 0,
+            served_reads=sr,
+            served_writes=sw,
+            degraded_reads=int(m.degraded_reads),
+            parked_writes=int(m.parked_writes),
+            switches=int(m.switches),
+            recode_backlog=int(jnp.sum(m.rc_valid)),
+            stall_cycles=int(m.stall_cycles),
+            avg_read_latency=float(m.read_latency_sum) / max(sr, 1),
+            avg_write_latency=float(m.write_latency_sum) / max(sw, 1),
+        )

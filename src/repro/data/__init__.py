@@ -1,0 +1,7 @@
+"""Deterministic synthetic data pipeline (host-sharded, prefetched)."""
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    Prefetcher,
+    TokenStream,
+    make_batch,
+)

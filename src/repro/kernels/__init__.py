@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the coded-memory datapath (VMEM-tiled, validated
+against pure-jnp oracles in interpret mode; TPU is the target).
+
+  xor_encode      — parity encode (ReCoding unit datapath)
+  xor_gather      — coded row gather incl. degraded reads (read datapath)
+  coded_kv_decode — decode attention over a banked, pair-parity KV cache
+"""

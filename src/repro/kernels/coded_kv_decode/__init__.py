@@ -1,0 +1,2 @@
+from repro.kernels.coded_kv_decode.ops import coded_kv_decode, pack_kv_banks  # noqa: F401
+from repro.kernels.coded_kv_decode.ref import decode_attention_ref  # noqa: F401

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: decode attention over a *banked, coded* paged KV cache.
+
+The TPU adaptation of the paper's §IV read path for serving: KV pages are
+striped across ``NB`` single-ported banks (page ``t`` → bank ``t % NB``,
+slot ``t // NB``); bank pairs ``(2g, 2g+1)`` carry an XOR parity bank
+(Scheme-I pairwise code, locality 2). When the per-step page schedule marks a
+page as conflicted (its bank's DMA queue is over-subscribed), the kernel
+reconstructs that page from its *pair sibling* + the parity page instead of
+touching the hot bank — trading a hot-bank read for two idle-bank reads,
+exactly the paper's degraded read.
+
+All KV lanes enter as raw ``uint16``/``uint32`` bits (bit-exact coding);
+they are bitcast to the compute dtype after reconstruction. Softmax is
+accumulated flash-style in f32 over pages.
+
+Grid ``(B,)``; per-sequence blocks: q ``(1, H, D)``, banks
+``(1, NB, S, P, Hkv, D)``, parity ``(1, NB/2, S, P, Hkv, D)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kv_decode_kernel(q_ref, kb_ref, vb_ref, kp_ref, vp_ref, upar_ref,
+                      slen_ref, out_ref, *, value_dtype, n_pages, nb, page):
+    h, d = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32)                       # (H, D)
+    hkv = kb_ref.shape[4]
+    g = h // hkv
+    qr = q.reshape(g, hkv, d)
+    slen = slen_ref[0]
+
+    m = jnp.full((g, hkv), -jnp.inf, jnp.float32)
+    s = jnp.zeros((g, hkv), jnp.float32)
+    acc = jnp.zeros((g, hkv, d), jnp.float32)
+
+    for t in range(n_pages):
+        bank = t % nb
+        slot = t // nb
+        sib = bank ^ 1
+        grp = bank // 2
+        use_par = upar_ref[0, t] > 0
+        k_dir = kb_ref[0, bank, slot]                      # (P, Hkv, D) uint
+        k_rec = kb_ref[0, sib, slot] ^ kp_ref[0, grp, slot]
+        v_dir = vb_ref[0, bank, slot]
+        v_rec = vb_ref[0, sib, slot] ^ vp_ref[0, grp, slot]
+        k_bits = jnp.where(use_par, k_rec, k_dir)
+        v_bits = jnp.where(use_par, v_rec, v_dir)
+        k = jax.lax.bitcast_convert_type(k_bits, value_dtype).astype(jnp.float32)
+        v = jax.lax.bitcast_convert_type(v_bits, value_dtype).astype(jnp.float32)
+        # scores (G, Hkv, P)
+        logits = jax.lax.dot_general(
+            qr, k, (((2,), (2,)), ((1,), (1,))),
+            preferred_element_type=jnp.float32,
+        )  # dims: contract D, batch Hkv -> (Hkv, G, P)
+        logits = jnp.transpose(logits, (1, 0, 2)) * (d ** -0.5)  # (G, Hkv, P)
+        tok = t * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+        logits = jnp.where(tok < slen, logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        probs = jnp.exp(logits - m_new[..., None])
+        probs = jnp.where(tok < slen, probs, 0.0)
+        s = s * alpha + jnp.sum(probs, axis=-1)
+        # pv: (G, Hkv, P) x (P, Hkv, D) -> (G, Hkv, D)
+        pv = jax.lax.dot_general(
+            probs, v, (((2,), (0,)), ((1,), (1,))),
+            preferred_element_type=jnp.float32,
+        )  # (Hkv, G, D)
+        acc = acc * alpha[..., None] + jnp.transpose(pv, (1, 0, 2))
+        m = m_new
+
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    out_ref[0] = out.reshape(h, d).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("value_dtype", "interpret")
+)
+def coded_kv_decode_pallas(
+    q: jnp.ndarray,        # (B, H, D) value dtype
+    k_banks: jnp.ndarray,  # (B, NB, S, P, Hkv, D) uint lanes
+    v_banks: jnp.ndarray,
+    k_par: jnp.ndarray,    # (B, NB//2, S, P, Hkv, D) uint lanes
+    v_par: jnp.ndarray,
+    use_parity: jnp.ndarray,  # (B, n_pages) int32
+    seq_len: jnp.ndarray,     # (B,) int32
+    *,
+    value_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    _, nb, s_, p_, hkv, _ = k_banks.shape
+    n_pages = use_parity.shape[1]
+    assert n_pages <= nb * s_
+    kernel = functools.partial(
+        _kv_decode_kernel, value_dtype=jnp.dtype(value_dtype),
+        n_pages=n_pages, nb=nb, page=p_,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nb, s_, p_, hkv, d), lambda i: (i, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((1, nb, s_, p_, hkv, d), lambda i: (i, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((1, nb // 2, s_, p_, hkv, d), lambda i: (i, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((1, nb // 2, s_, p_, hkv, d), lambda i: (i, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((1, n_pages), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(q, k_banks, v_banks, k_par, v_par, use_parity, seq_len)

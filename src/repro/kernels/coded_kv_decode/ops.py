@@ -1,0 +1,62 @@
+"""Public wrappers: pack a logical KV cache into coded banks + decode op."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uint_view_dtype
+from repro.kernels.coded_kv_decode.kernel import coded_kv_decode_pallas
+
+
+def pack_kv_banks(
+    k: jnp.ndarray,  # (B, T, Hkv, D)
+    v: jnp.ndarray,
+    n_banks: int,
+    page: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """Stripe KV pages over ``n_banks`` banks + pairwise XOR parity banks.
+
+    Page ``t`` lives in bank ``t % n_banks`` slot ``t // n_banks``; parity
+    group ``g`` holds ``bank[2g] ^ bank[2g+1]``. Returns uint-lane arrays
+    (k_banks, v_banks, k_par, v_par) and the page count. T must divide into
+    ``n_banks * page`` supersteps (pad upstream; padded tokens are masked by
+    ``seq_len`` at decode time).
+    """
+    assert n_banks % 2 == 0, "pairwise parity needs even bank count"
+    b, t, hkv, d = k.shape
+    assert t % (n_banks * page) == 0, (t, n_banks, page)
+    n_pages = t // page
+    slots = n_pages // n_banks
+    u = uint_view_dtype(k.dtype)
+    ku = jax.lax.bitcast_convert_type(k, u)
+    vu = jax.lax.bitcast_convert_type(v, u)
+    # (B, slots, NB, page, Hkv, D) -> (B, NB, slots, page, Hkv, D)
+    ku = ku.reshape(b, slots, n_banks, page, hkv, d).transpose(0, 2, 1, 3, 4, 5)
+    vu = vu.reshape(b, slots, n_banks, page, hkv, d).transpose(0, 2, 1, 3, 4, 5)
+    k_par = ku[:, 0::2] ^ ku[:, 1::2]
+    v_par = vu[:, 0::2] ^ vu[:, 1::2]
+    return ku, vu, k_par, v_par, n_pages
+
+
+def coded_kv_decode(
+    q: jnp.ndarray,
+    k_banks: jnp.ndarray,
+    v_banks: jnp.ndarray,
+    k_par: jnp.ndarray,
+    v_par: jnp.ndarray,
+    use_parity: jnp.ndarray,  # (B, n_pages) bool/int
+    seq_len: jnp.ndarray,     # (B,) int32
+    *,
+    value_dtype=None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Decode attention over the coded banked KV cache (one new token)."""
+    if value_dtype is None:
+        value_dtype = q.dtype
+    return coded_kv_decode_pallas(
+        q, k_banks, v_banks, k_par, v_par,
+        use_parity.astype(jnp.int32), seq_len.astype(jnp.int32),
+        value_dtype=jnp.dtype(value_dtype), interpret=interpret,
+    )

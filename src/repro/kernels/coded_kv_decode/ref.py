@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: standard masked decode attention on the *logical* KV.
+
+The strongest possible oracle — it never sees the banked/coded layout, so it
+also proves the reconstruction is lossless end-to-end.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, seq_len):
+    """q (B,H,D); k,v (B,T,Hkv,D); seq_len (B,) -> (B,H,D) in q.dtype."""
+    b, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, g, hkv, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bgkd,btkd->bgkt", qf, kf) * (d ** -0.5)
+    mask = jnp.arange(k.shape[1])[None, None, None, :] < seq_len[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgkt,btkd->bgkd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

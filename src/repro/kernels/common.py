@@ -1,0 +1,39 @@
+"""Shared helpers for the coded-memory Pallas kernels.
+
+XOR parity over floating-point rows is done on bitcast unsigned views so the
+coding is *bit-exact* for any dtype (the paper XORs raw DRAM words; on TPU we
+XOR the 16-/32-bit lanes of the row's vector registers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_UINT_OF = {
+    jnp.dtype(jnp.bfloat16): jnp.uint16,
+    jnp.dtype(jnp.float16): jnp.uint16,
+    jnp.dtype(jnp.float32): jnp.uint32,
+    jnp.dtype(jnp.int32): jnp.uint32,
+    jnp.dtype(jnp.uint32): jnp.uint32,
+    jnp.dtype(jnp.int16): jnp.uint16,
+    jnp.dtype(jnp.uint16): jnp.uint16,
+    jnp.dtype(jnp.int8): jnp.uint8,
+    jnp.dtype(jnp.uint8): jnp.uint8,
+}
+
+
+def uint_view_dtype(dtype) -> jnp.dtype:
+    d = jnp.dtype(dtype)
+    if d not in _UINT_OF:
+        raise TypeError(f"no XOR lane type for dtype {d}")
+    return jnp.dtype(_UINT_OF[d])
+
+
+def bxor(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact XOR of two same-dtype arrays (float dtypes via bitcast)."""
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return a ^ b
+    u = uint_view_dtype(a.dtype)
+    au = jax.lax.bitcast_convert_type(a, u)
+    bu = jax.lax.bitcast_convert_type(b, u)
+    return jax.lax.bitcast_convert_type(au ^ bu, a.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.xor_encode.ops import encode_parities  # noqa: F401
+from repro.kernels.xor_encode.ref import encode_parities_ref  # noqa: F401

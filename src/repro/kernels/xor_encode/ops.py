@@ -1,0 +1,36 @@
+"""Jitted public wrapper for the XOR parity encoder."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import uint_view_dtype
+from repro.kernels.xor_encode.kernel import encode_parities_pallas
+
+
+def encode_parities(
+    banks: jnp.ndarray,
+    members,
+    *,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Encode parity banks ``p_j = XOR_m banks[m]`` (bit-exact, any dtype).
+
+    Float banks are bitcast to their unsigned lane view; the returned parity
+    banks are *raw bits* (uint dtype) — they are code symbols, not numbers.
+    ``members`` may be a numpy/int list table of shape (n_par, <=3); it is
+    padded to width 3 with -1.
+    """
+    members = np.asarray(members, np.int32)
+    if members.ndim != 2:
+        raise ValueError("members must be (n_par, k)")
+    if members.shape[1] < 3:
+        pad = np.full((members.shape[0], 3 - members.shape[1]), -1, np.int32)
+        members = np.concatenate([members, pad], axis=1)
+    if jnp.issubdtype(banks.dtype, jnp.floating):
+        banks = jax.lax.bitcast_convert_type(banks, uint_view_dtype(banks.dtype))
+    return encode_parities_pallas(
+        banks, jnp.asarray(members), block_rows=block_rows, interpret=interpret
+    )

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the XOR parity encoder."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uint_view_dtype
+
+
+def encode_parities_ref(banks: jnp.ndarray, members: jnp.ndarray) -> jnp.ndarray:
+    """banks (n_data, L, W), members (n_par, k) -> raw-bit parities.
+
+    Matches ops.encode_parities: output is the unsigned lane view dtype.
+    """
+    if jnp.issubdtype(banks.dtype, jnp.floating):
+        banks = jax.lax.bitcast_convert_type(banks, uint_view_dtype(banks.dtype))
+    n_par = members.shape[0]
+    _, L, W = banks.shape
+    out = jnp.zeros((n_par, L, W), banks.dtype)
+    for mm in range(members.shape[1]):
+        m = members[:, mm]                                  # (n_par,)
+        slab = banks[jnp.maximum(m, 0)]                      # (n_par, L, W)
+        slab = jnp.where((m >= 0)[:, None, None], slab, jnp.zeros_like(slab))
+        out = out ^ slab
+    return out

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: coded row gather (the read-pattern datapath, §IV-B).
+
+Executes one memory cycle's read pattern against VMEM-resident bank tiles:
+each request is served either directly (``banks[bank, row]``), by a degraded
+read (``parities[par, prow] ^ banks[sib0, row] ^ banks[sib1, row]``), or by a
+redirect of a parked value (``parities[par, prow]``). All lanes are unsigned
+integers (raw bits); callers bitcast float data outside.
+
+Tiling: grid ``(N / RB,)`` over request tiles; banks/parities are held as
+whole VMEM blocks (the "row buffer" of the adapted design — for larger banks
+the production layout streams row tiles via a second grid dimension and
+buckets requests per tile; see DESIGN.md §3). Request columns are scalar
+int32 vectors of length RB per step.
+
+Mode encoding matches repro.core.controller: 0 FROM_SYM, 1 DIRECT,
+2..2+MAX_OPTS-1 degraded options, 2+MAX_OPTS REDIRECT; -1 entries yield 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codes import MAX_OPTS
+
+MODE_REDIRECT = 2 + MAX_OPTS
+
+
+def _gather_kernel(bank_ref, row_ref, mode_ref, par_ref, prow_ref,
+                   sib0_ref, sib1_ref, banks_ref, par_banks_ref, out_ref):
+    rb = bank_ref.shape[0]
+    for q in range(rb):
+        mode = mode_ref[q]
+        b = jnp.maximum(bank_ref[q], 0)
+        i = jnp.maximum(row_ref[q], 0)
+        j = jnp.maximum(par_ref[q], 0)
+        pr = jnp.maximum(prow_ref[q], 0)
+        s0 = sib0_ref[q]
+        s1 = sib1_ref[q]
+        direct = pl.load(banks_ref, (pl.dslice(b, 1), pl.dslice(i, 1), slice(None)))[0, 0]
+        pline = pl.load(par_banks_ref, (pl.dslice(j, 1), pl.dslice(pr, 1), slice(None)))[0, 0]
+        v0 = pl.load(banks_ref, (pl.dslice(jnp.maximum(s0, 0), 1), pl.dslice(i, 1), slice(None)))[0, 0]
+        v1 = pl.load(banks_ref, (pl.dslice(jnp.maximum(s1, 0), 1), pl.dslice(i, 1), slice(None)))[0, 0]
+        zero = jnp.zeros_like(direct)
+        dec = pline ^ jnp.where(s0 >= 0, v0, zero) ^ jnp.where(s1 >= 0, v1, zero)
+        is_opt = (mode >= 2) & (mode < MODE_REDIRECT)
+        val = jnp.where(
+            mode == MODE_REDIRECT, pline, jnp.where(is_opt, dec, direct)
+        )
+        val = jnp.where(mode >= 0, val, zero)
+        out_ref[q, :] = val
+
+
+@functools.partial(jax.jit, static_argnames=("req_block", "interpret"))
+def gather_decode_pallas(
+    banks: jnp.ndarray,      # (n_data, L, W) uint lanes
+    parities: jnp.ndarray,   # (n_par, Lp, W) uint lanes
+    bank: jnp.ndarray,       # (N,) int32
+    row: jnp.ndarray,        # (N,) int32
+    mode: jnp.ndarray,       # (N,) int32
+    par: jnp.ndarray,        # (N,) int32 logical parity index
+    prow: jnp.ndarray,       # (N,) int32 parity row
+    sib0: jnp.ndarray,       # (N,) int32
+    sib1: jnp.ndarray,       # (N,) int32
+    *,
+    req_block: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    assert jnp.issubdtype(banks.dtype, jnp.integer), banks.dtype
+    n_data, L, W = banks.shape
+    n_par, Lp, _ = parities.shape
+    n = bank.shape[0]
+    rb = min(req_block, n)
+    assert n % rb == 0, (n, rb)
+    grid = (n // rb,)
+    col = lambda g: pl.BlockSpec((rb,), lambda t: (t,))  # noqa: E731
+    return pl.pallas_call(
+        _gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, W), banks.dtype),
+        grid=grid,
+        in_specs=[col(0)] * 7 + [
+            pl.BlockSpec((n_data, L, W), lambda t: (0, 0, 0)),
+            pl.BlockSpec((n_par, Lp, W), lambda t: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, W), lambda t: (t, 0)),
+        interpret=interpret,
+    )(bank, row, mode, par, prow, sib0, sib1, banks, parities)

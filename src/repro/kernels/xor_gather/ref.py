@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the coded row gather."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codes import MAX_OPTS
+from repro.kernels.common import uint_view_dtype
+
+MODE_REDIRECT = 2 + MAX_OPTS
+
+
+def gather_decode_ref(banks, parities, bank, row, mode, par, prow, sib0, sib1):
+    """Vectorized reference; same raw-bit (uint) semantics as the kernel."""
+    if jnp.issubdtype(banks.dtype, jnp.floating):
+        banks = jax.lax.bitcast_convert_type(banks, uint_view_dtype(banks.dtype))
+    if jnp.issubdtype(parities.dtype, jnp.floating):
+        parities = jax.lax.bitcast_convert_type(parities, uint_view_dtype(parities.dtype))
+    b = jnp.maximum(bank, 0)
+    i = jnp.maximum(row, 0)
+    j = jnp.maximum(par, 0)
+    pr = jnp.maximum(prow, 0)
+    direct = banks[b, i]                      # (N, W)
+    pline = parities[j, pr]                   # (N, W)
+    zero = jnp.zeros_like(direct)
+    v0 = jnp.where((sib0 >= 0)[:, None], banks[jnp.maximum(sib0, 0), i], zero)
+    v1 = jnp.where((sib1 >= 0)[:, None], banks[jnp.maximum(sib1, 0), i], zero)
+    dec = pline ^ v0 ^ v1
+    is_opt = ((mode >= 2) & (mode < MODE_REDIRECT))[:, None]
+    val = jnp.where((mode == MODE_REDIRECT)[:, None], pline, jnp.where(is_opt, dec, direct))
+    return jnp.where((mode >= 0)[:, None], val, zero)

@@ -1,0 +1,90 @@
+"""Assigned input shapes × per-arch input specs (ShapeDtypeStruct stand-ins —
+weak-type-correct, shardable, zero allocation).
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (KV at seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; sub-quadratic
+               archs only (ssm / hybrid / SWA) — full-attention archs skip
+               (no sub-quadratic path; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch — no sub-quadratic path at "
+                       "524k context (DESIGN.md §6)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the (train/prefill) host batch."""
+    b, s = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    batch: Dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, cfg.enc_frames, cfg.d_model), cd)
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = _sds((b, cfg.n_patches, cfg.d_model), cd)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """Abstract KV/state cache for the decode shapes (no allocation)."""
+    from repro.models import lm
+    return jax.eval_shape(
+        lambda: lm.cache_spec(cfg, shape.global_batch, shape.seq_len,
+                              enc_frames=cfg.enc_frames)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All inputs of the step function for this (arch × shape) cell."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, shape)}
+    return {
+        "token": _sds((shape.global_batch,), jnp.int32),
+        "cache": cache_specs(cfg, shape),
+    }
+
+
+def default_q_chunk(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Query-block size for full-sequence shapes (0 = unchunked attention).
+
+    Materializing (B, H, S, S) scores at S=4096 is ~1 TB/device for the
+    train_4k shapes — no production framework does that. The query-block
+    streaming path bounds live scores to (B, H, q_chunk, S); 1k/2k blocks
+    keep the MXU matmul dims ≥128-aligned."""
+    if shape.kind == "decode" or shape.seq_len < 4_096:
+        return 0
+    return 1_024 if shape.seq_len <= 8_192 else 2_048

@@ -1,0 +1,205 @@
+"""Path+shape-driven sharding rules (FSDP over ``data`` × TP over ``model``;
+``pod`` is DCN-level data parallelism).
+
+Divisibility-aware: jit ``in_shardings`` require every sharded dim to divide
+evenly by its mesh axes, and the 10 assigned architectures have heads/vocab/
+widths that do not all divide a 16-way axis — every rule therefore passes
+through ``_fits`` which falls back to replication on that dim. The dry-run
+prints the chosen specs so a lost sharding opportunity is visible rather
+than silent.
+
+TP convention: column-parallel for up-projections (out dim on ``model``),
+row-parallel for down-projections (in dim on ``model``) — activations inside
+a block stay sharded on the hidden/f dim and only the block output needs an
+all-reduce, GSPMD derives this from the param specs.
+
+Embedding tables shard their vocab dim on ``model`` (this is the *coded
+bank axis* — see repro.models.embedding); GSPMD serves the gather with a
+masked partial-gather + all-reduce, never an all-gather of the table.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh, axis) -> Optional[Any]:
+    return axis if (axis is not None and dim % _axis_size(mesh, axis) == 0) else None
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))))
+    return "/".join(out)
+
+
+# --------------------------------------------------------------------- params
+def param_spec(name: str, shape, mesh, *, fsdp: bool = True,
+               moe_ep: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``name`` is the '/'.joined key path; stacked per-layer leaves carry a
+    leading L dim which is never sharded (scan carries need whole leaves).
+    """
+    d_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    m_ax = "model" if "model" in mesh.axis_names else None
+    nd = len(shape)
+    spec = [None] * nd
+    leaf = name.rsplit("/", 1)[-1]
+
+    if nd <= 1 or m_ax is None:
+        return P(*spec)
+
+    stacked = name.startswith(("blocks", "rec_blocks", "attn_blocks", "enc_blocks"))
+    lo = 1 if stacked else 0          # first shardable dim
+    if nd - lo < 1:
+        return P(*spec)
+
+    if leaf == "table":               # embed (Vp, D): vocab = coded bank axis
+        spec[0] = _fits(shape[0], mesh, m_ax)
+        return P(*spec)               # D replicated: avoids a data-axis
+                                      # contraction conflict with batch-on-data
+    if leaf == "banks":               # coded embed (NB, Vb, D)
+        spec[1] = _fits(shape[1], mesh, m_ax)
+        return P(*spec)
+    if leaf == "lm_head":             # (D, Vp)
+        spec[1] = _fits(shape[1], mesh, m_ax)
+        return P(*spec)
+    if leaf == "pos_embed":           # (S, D)
+        spec[1] = _fits(shape[1], mesh, m_ax)
+        return P(*spec)
+
+    if nd - lo < 2:                   # stacked vectors (norms, biases, gates)
+        return P(*spec)
+
+    row_parallel = leaf in ("w_down", "wo", "out_proj", "w_out")
+    if leaf in ("w_up", "w_gate", "w_down") and nd - lo == 3:   # MoE (E, D, F)
+        if moe_ep:
+            # expert parallelism: E over `model`. The dispatch/combine
+            # einsums carry the e dim, so they shard too — with TP they are
+            # REPLICATED across the model axis (the olmoe §Perf finding).
+            spec[nd - 3] = _fits(shape[nd - 3], mesh, m_ax)
+            return P(*spec)
+        # TP inside each expert (baseline)
+        i, o = (nd - 1, nd - 2) if row_parallel else (nd - 2, nd - 1)
+        spec[o] = _fits(shape[o], mesh, m_ax)
+        spec[i] = _fits(shape[i], mesh, d_ax)
+        return P(*spec)
+
+    i, o = (nd - 2, nd - 1)
+    if row_parallel:
+        spec[i] = _fits(shape[i], mesh, m_ax)
+        spec[o] = _fits(shape[o], mesh, d_ax)
+    else:                              # column-parallel (wq/wk/wv/w_up/in_proj…)
+        spec[o] = _fits(shape[o], mesh, m_ax)
+        spec[i] = _fits(shape[i], mesh, d_ax)
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, abstract_params: Any, mesh,
+                    *, fsdp: bool = True) -> Any:
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    treedef = jax.tree.structure(abstract_params)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(_path_str(path), leaf.shape, mesh, fsdp=fsdp,
+                          moe_ep=cfg.moe_ep)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------- opt state
+def opt_shardings(param_sh: Any, mesh) -> Any:
+    """Adam moments shard exactly like their parameters; step is replicated."""
+    from repro.optim.adamw import OptState
+    rep = NamedSharding(mesh, P())
+    return OptState(step=rep, m=param_sh, v=param_sh)
+
+
+# ------------------------------------------------------------------- inputs
+def batch_spec(mesh, batch_size: int) -> P:
+    """Shard the global-batch dim over (pod, data) — replicate if indivisible
+    (long_500k has batch 1)."""
+    axes = batch_axes(mesh)
+    if axes and batch_size % _axis_size(mesh, axes) == 0:
+        return P(axes)
+    return P(None)
+
+
+def data_shardings(mesh, batch: Any) -> Any:
+    """Shardings for a host batch dict: dim 0 = global batch, rest replicated."""
+    def one(x):
+        return NamedSharding(mesh, batch_spec(mesh, x.shape[0]))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cfg: ModelConfig, abstract_cache: Any, mesh,
+                    *, kv_variant: str = "auto") -> Any:
+    """KV/state cache: batch dim over (pod, data); for KV leaves prefer head
+    sharding on ``model``, else cache-seq sharding (context parallelism) —
+    required e.g. for granite (kv=1) where heads cannot shard.
+
+    ``kv_variant``:
+      auto         — heads on model if divisible, else cache-seq (baseline)
+      batch_model  — KV batch dim on (`pod`|`data`)×`model` (decode §Perf
+                     variant: attention goes collective-free; activations
+                     reshard around it)
+    """
+    baxes = batch_axes(mesh)
+    m_ax = "model" if "model" in mesh.axis_names else None
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if name == "pos":
+            spec[0] = _fits(shape[0], mesh, baxes if baxes else None)
+            return NamedSharding(mesh, P(*spec))
+        # stacked cache leaves: (L, B, ...) — kv: (L,B,C,Hkv,hd);
+        # ssm conv (L,B,K-1,C), state (L,B,H,P,N); rg conv (L,B,K-1,dr), h (L,B,dr)
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            if kv_variant == "batch_model":
+                all_ax = tuple(baxes) + ((m_ax,) if m_ax else ())
+                spec[1] = _fits(shape[1], mesh, all_ax)
+                if spec[1] is None:
+                    spec[1] = _fits(shape[1], mesh, m_ax)
+                return NamedSharding(mesh, P(*spec))
+            spec[1] = _fits(shape[1], mesh, baxes if baxes else None)
+            if _fits(shape[3], mesh, m_ax):
+                spec[3] = m_ax                      # heads
+            else:
+                spec[2] = _fits(shape[2], mesh, m_ax)  # cache seq (CP)
+            return NamedSharding(mesh, P(*spec))
+        if nd >= 2:
+            spec[1] = _fits(shape[1], mesh, baxes if baxes else None)
+        if nd >= 3:
+            # last dim is a width (channels / state) — shard on model if it fits
+            spec[nd - 1] = _fits(shape[nd - 1], mesh, m_ax)
+        return NamedSharding(mesh, P(*spec))
+
+    flat = jax.tree_util.tree_flatten_with_path(abstract_cache)[0]
+    treedef = jax.tree.structure(abstract_cache)
+    return jax.tree.unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+def describe(shardings: Any) -> str:
+    lines = []
+    for path, sh in jax.tree_util.tree_flatten_with_path(shardings)[0]:
+        lines.append(f"  {_path_str(path):50s} {sh.spec}")
+    return "\n".join(lines)

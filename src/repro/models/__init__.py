@@ -1,0 +1,3 @@
+"""Model zoo: unified LM over dense / MoE / SSM / hybrid / enc-dec families,
+with the paper's coded-memory features (coded vocab embedding, banked KV)
+as first-class options."""

@@ -1,0 +1,107 @@
+"""Vocab embeddings — standard table or the paper's *coded banks*.
+
+``CodedEmbedding`` is the paper's storage layout applied to a sharded vocab
+table: rows are striped over ``NB`` banks (row v → bank ``v % NB``, bank row
+``v // NB``); bank pairs ``(2g, 2g+1)`` carry an XOR parity bank. A batch of
+token lookups is load-balanced by the read planner: lookups that land on an
+over-subscribed bank are served as *degraded reads* (pair sibling ^ parity)
+instead — idle banks supply the extra read ports, exactly Fig 3 of the paper.
+
+The degraded path is bit-exact, so training uses a ``custom_vjp`` whose
+forward runs the coded datapath (it stays visible in the lowered HLO) and
+whose backward is the ordinary scatter-add into the bank layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.common import uint_view_dtype
+
+Params = Dict[str, jnp.ndarray]
+
+
+def embed_init(cfg: ModelConfig, key, dtype) -> Params:
+    v, d = cfg.vocab_pad, cfg.d_model
+    scale = d ** -0.5
+    if not cfg.coded_embedding:
+        return {"table": jax.random.normal(key, (v, d), dtype) * scale}
+    nb = cfg.embed_banks
+    vb = -(-v // nb)
+    return {"banks": jax.random.normal(key, (nb, vb, d), dtype) * scale}
+
+
+def _plan_use_parity(bank_of: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """Balance each bank's lookups between its own port and the parity path:
+    the k-th lookup hitting a bank alternates direct/degraded (odd ranks go
+    degraded). Vectorized read-pattern-builder round-robin for an embedding
+    batch. Ranks are computed along the LAST axis only (per sequence), so the
+    plan is batch-parallel — a cumsum across the global batch would break
+    batch sharding for the whole downstream model (GSPMD cannot keep a dim
+    sharded through a cross-shard cumsum)."""
+    oh = jax.nn.one_hot(bank_of, nb, dtype=jnp.int32)       # (..., T, NB)
+    rank = jnp.cumsum(oh, axis=-2) - oh                     # occurrences before t
+    my_rank = jnp.take_along_axis(rank, bank_of[..., None], -1)[..., 0]
+    return (my_rank % 2) == 1
+
+
+def _coded_gather(banks: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    nb, vb, d = banks.shape
+    u = uint_view_dtype(banks.dtype)
+    banks_u = jax.lax.bitcast_convert_type(banks, u)
+    par_u = banks_u[0::2] ^ banks_u[1::2]                   # (NB/2, Vb, D)
+    bank_of = (tokens % nb).astype(jnp.int32)               # (..., T)
+    brow = (tokens // nb).astype(jnp.int32)
+    use_par = _plan_use_parity(bank_of, nb)
+    sib = bank_of ^ 1
+    grp = bank_of // 2
+    direct = banks_u[bank_of, brow]
+    degraded = banks_u[sib, brow] ^ par_u[grp, brow]
+    out_u = jnp.where(use_par[..., None], degraded, direct)
+    return jax.lax.bitcast_convert_type(out_u, banks.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _coded_lookup(shape, dtype_name, banks, tokens):
+    return _coded_gather(banks, tokens)
+
+
+def _coded_fwd(shape, dtype_name, banks, tokens):
+    return _coded_gather(banks, tokens), tokens
+
+
+def _coded_bwd(shape, dtype_name, tokens, g):
+    nb, vb, d = shape
+    dtype = jnp.dtype(dtype_name)
+    zeros = jnp.zeros(shape, dtype)
+    d_banks = zeros.at[(tokens % nb).astype(jnp.int32),
+                       (tokens // nb).astype(jnp.int32)].add(g.astype(dtype))
+    return d_banks, None
+
+
+_coded_lookup.defvjp(_coded_fwd, _coded_bwd)
+
+
+def coded_lookup(banks: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Coded-bank gather; bwd is the plain scatter-add into the bank layout."""
+    return _coded_lookup(tuple(banks.shape), str(banks.dtype), banks, tokens)
+
+
+def embed_lookup(cfg: ModelConfig, p: Params, tokens: jnp.ndarray,
+                 dtype) -> jnp.ndarray:
+    if cfg.coded_embedding:
+        return coded_lookup(p["banks"], tokens).astype(dtype)
+    return p["table"][tokens].astype(dtype)
+
+
+def full_table(cfg: ModelConfig, p: Params) -> jnp.ndarray:
+    """Reassemble (V_pad, D) logical table (for tied logit heads)."""
+    if not cfg.coded_embedding:
+        return p["table"]
+    nb, vb, d = p["banks"].shape
+    tbl = jnp.transpose(p["banks"], (1, 0, 2)).reshape(nb * vb, d)
+    return tbl[: cfg.vocab_pad]

@@ -1,0 +1,256 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / sliding /
+local / cross), gated & plain MLPs. Pure functions over param pytrees;
+parameters are plain nested dicts so they stack cleanly for scan-over-layers
+and shard via path-based rules (repro.launch.sharding).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------- norms
+def norm_init(cfg: ModelConfig, dtype) -> Params:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (..., T, H, Dh), positions (..., T) -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def attn_init(cfg: ModelConfig, key, dtype, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, nh * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, nkv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, nkv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (nh * hd, d), dtype) * (nh * hd) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def qkv_proj(cfg: ModelConfig, p: Params, x: jnp.ndarray):
+    """x (B,T,D) -> q (B,T,H,dh), k/v (B,T,Hkv,dh)."""
+    b, t, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(b, t, cfg.n_kv, cfg.head_dim)
+    return q, k, v
+
+
+def mha(
+    q: jnp.ndarray,            # (B, Tq, H, dh)
+    k: jnp.ndarray,            # (B, Tk, Hkv, dh)
+    v: jnp.ndarray,            # (B, Tk, Hkv, dh)
+    mask: Optional[jnp.ndarray],  # broadcastable to (B, H_kv, G, Tq, Tk) or None
+    av_bf16: bool = False,
+) -> jnp.ndarray:
+    """Softmax numerics are always f32; ``av_bf16`` downcasts the softmax
+    weights and V reads for the AV matmul (halves the largest memory streams
+    — §Perf variant; max observed logit error ~1e-3 at bf16)."""
+    b, tq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, tq, g, hkv, dh)
+    logits = jnp.einsum("bqgkd,btkd->bkgqt", qf, k.astype(jnp.float32))
+    logits = logits * (dh ** -0.5)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    if av_bf16:
+        out = jnp.einsum("bkgqt,btkd->bqgkd", w.astype(jnp.bfloat16),
+                         v.astype(jnp.bfloat16))
+    else:
+        out = jnp.einsum("bkgqt,btkd->bqgkd", w, v.astype(jnp.float32))
+    return out.reshape(b, tq, h, dh).astype(q.dtype)
+
+
+def mha_chunked(
+    q: jnp.ndarray,            # (B, Tq, H, dh)
+    k: jnp.ndarray,            # (B, Tk, Hkv, dh)
+    v: jnp.ndarray,            # (B, Tk, Hkv, dh)
+    *,
+    window: int = 0,
+    q_chunk: int = 1024,
+    unroll: int = 1,
+    av_bf16: bool = False,
+) -> jnp.ndarray:
+    """Causal attention computed in query blocks (lax.scan) so the logits
+    working set is (B,·,q_chunk,Tk) instead of (B,·,Tq,Tk) — this is what
+    makes the 32k prefill shapes fit HBM. Bit-identical math to ``mha`` with
+    a causal(+window) mask."""
+    b, tq, h, dh = q.shape
+    tk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    if q_chunk <= 0 or q_chunk >= tq:
+        return mha(q, k, v, causal_mask(tq, tk, 0, window), av_bf16)
+    assert tq % q_chunk == 0, (tq, q_chunk)
+    nc = tq // q_chunk
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.bfloat16 if av_bf16 else jnp.float32)
+    qc = q.astype(jnp.float32).reshape(b, nc, q_chunk, g, hkv, dh)
+    qc = jnp.moveaxis(qc, 1, 0)                        # (nc, B, qc, g, hkv, dh)
+    ki = jnp.arange(tk)[None, :]
+
+    def body(c, qblk):
+        qi = c * q_chunk + jnp.arange(q_chunk)[:, None]
+        m = ki <= qi
+        if window > 0:
+            m = m & (ki > qi - window)
+        logits = jnp.einsum("bqgkd,btkd->bkgqt", qblk, kf) * (dh ** -0.5)
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        if av_bf16:
+            w = w.astype(jnp.bfloat16)
+        out = jnp.einsum("bkgqt,btkd->bqgkd", w, vf)
+        return c + 1, out
+
+    _, outs = jax.lax.scan(body, jnp.int32(0), qc, unroll=unroll)
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, tq, h, dh)
+    return outs.astype(q.dtype)
+
+
+def causal_mask(tq: int, tk: int, offset: int = 0, window: int = 0) -> jnp.ndarray:
+    """(1,1,1,Tq,Tk) causal (+optional sliding window) mask.
+
+    ``offset`` is the absolute position of query 0 minus key 0 (for caches).
+    """
+    qi = jnp.arange(tq)[:, None] + offset
+    ki = jnp.arange(tk)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m = m & (ki > qi - window)
+    return m[None, None, None]
+
+
+def attention_block(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+    window: int = 0, q_chunk: int = 0, chunk_unroll: int = 1,
+) -> jnp.ndarray:
+    """Full-sequence self attention (training / prefill path)."""
+    b, t, d = x.shape
+    q, k, v = qkv_proj(cfg, p, x)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if q_chunk and q_chunk < t:
+        out = mha_chunked(q, k, v, window=window, q_chunk=q_chunk,
+                          unroll=chunk_unroll, av_bf16=cfg.attn_av_bf16)
+    else:
+        out = mha(q, k, v, causal_mask(t, t, 0, window), cfg.attn_av_bf16)
+    return out.reshape(b, t, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+def attention_decode(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, pos: jnp.ndarray,
+    k_cache: jnp.ndarray, v_cache: jnp.ndarray, window: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x (B,1,D); pos (B,) absolute positions;
+    k/v_cache (B, C, Hkv, dh) where C = min(max_seq, window or max_seq).
+    The cache is a ring buffer when windowed: slot = pos % C.
+    Returns (out (B,1,D), k_cache', v_cache')."""
+    b, _, d = x.shape
+    c = k_cache.shape[1]
+    q, k, v = qkv_proj(cfg, p, x)
+    if cfg.pos == "rope":
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    slot = (pos % c).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    # valid keys: absolute index of cache slot s is reconstructed from pos
+    sidx = jnp.arange(c)[None, :]                      # (1, C)
+    abs_idx = jnp.where(
+        sidx <= slot[:, None], pos[:, None] - (slot[:, None] - sidx),
+        pos[:, None] - (slot[:, None] + c - sidx),
+    )
+    valid = (abs_idx >= 0) & (abs_idx <= pos[:, None])
+    if window > 0:
+        valid &= abs_idx > pos[:, None] - window
+    mask = valid[:, None, None, None, :]               # (B,1,1,1,C)
+    out = mha(q, k_cache, v_cache, mask)
+    return out.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"], k_cache, v_cache
+
+
+def cross_attention_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                          enc: jnp.ndarray) -> jnp.ndarray:
+    """Decoder cross-attention over encoder output (no RoPE, no mask)."""
+    b, t, d = x.shape
+    te = enc.shape[1]
+    q = (x @ p["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = (enc @ p["wk"]).reshape(b, te, cfg.n_kv, cfg.head_dim)
+    v = (enc @ p["wv"]).reshape(b, te, cfg.n_kv, cfg.head_dim)
+    if "bq" in p:
+        q = q + p["bq"].reshape(cfg.n_heads, cfg.head_dim)
+        k = k + p["bk"].reshape(cfg.n_kv, cfg.head_dim)
+        v = v + p["bv"].reshape(cfg.n_kv, cfg.head_dim)
+    out = mha(q, k, v, None)
+    return out.reshape(b, t, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+# ------------------------------------------------------------------- MLP
+def mlp_init(cfg: ModelConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": jax.random.normal(ks[0], (d, f), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[1], (f, d), dtype) * f ** -0.5,
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = jax.random.normal(ks[2], (d, f), dtype) * d ** -0.5
+    return p
+
+
+def mlp_block(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    up = x @ p["w_up"]
+    h = act(x @ p["w_gate"]) * up if cfg.mlp_gated else act(up)
+    return h @ p["w_down"]

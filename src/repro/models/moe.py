@@ -1,0 +1,79 @@
+"""Mixture-of-Experts block: top-k router + capacity-based einsum dispatch
+(GShard/MaxText style — dense dispatch matrices so the computation shards
+cleanly: experts over the ``model`` axis, token groups over ``data``).
+
+The paper's coded-memory technique does NOT apply to expert weights (the
+expert FFN is nonlinear in its inputs; an XOR parity of expert weights can't
+serve a "degraded expert read") — hot-expert conflicts are a scheduling
+problem only. See DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.axes import shard
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def moe_init(cfg: ModelConfig, key, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(ks[1], (e, d, f), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (e, f, d), dtype) * f ** -0.5,
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = jax.random.normal(ks[3], (e, d, f), dtype) * d ** -0.5
+    return p
+
+
+def moe_block(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, T, D) -> (B, T, D). Tokens are processed in groups of
+    ``cfg.moe_group``; each group dispatches into per-expert capacity slots
+    (overflow drops, standard GShard semantics)."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    xt = x.reshape(b * t, d)
+    n = xt.shape[0]
+    g = min(cfg.moe_group, n)
+    assert n % g == 0, (n, g)
+    ng = n // g
+    cap = max(1, int(g * k * cfg.capacity_factor / e))
+    xg = xt.reshape(ng, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xg, p["router"]).astype(jnp.float32)
+    gates, idx = jax.lax.top_k(logits, k)                    # (ng, g, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # (ng, g, k, e)
+    # capacity slot per (token, choice): position among all assignments to e
+    flat = onehot.reshape(ng, g * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # (ng, g*k, e)
+    pos = pos.reshape(ng, g, k, e)
+    keep = onehot * (pos < cap)
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    disp = jnp.einsum("ngke,ngkec->ngec", keep, slot_oh)     # (ng, g, e, cap)
+    comb = jnp.einsum("ngke,ngkec,ngk->ngec", keep, slot_oh, gates)
+
+    cd = x.dtype
+    xin = jnp.einsum("ngec,ngd->necd", disp.astype(cd), xg)  # (ng, e, cap, d)
+    if cfg.moe_ep:
+        # expert parallelism: pin the e dim so the dispatch/combine einsums
+        # shard with the expert weights instead of replicating (§Perf)
+        xin = shard(xin, None, "experts", None, None)
+    up = jnp.einsum("necd,edf->necf", xin, p["w_up"])
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("necd,edf->necf", xin, p["w_gate"])) * up
+    else:
+        h = act(up)
+    out_e = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    if cfg.moe_ep:
+        out_e = shard(out_e, None, "experts", None, None)
+    y = jnp.einsum("necd,ngec->ngd", out_e, comb.astype(cd))
+    return y.reshape(b, t, d)

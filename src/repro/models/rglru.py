@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit with the Griffin residual-block structure:
+two input projections (recurrent branch + GeLU gate branch), a short causal
+conv on the recurrent branch, the diagonal gated recurrence
+
+    r_t = σ(W_a x_t),  i_t = σ(W_x x_t),
+    log a_t = -c · softplus(Λ) · r_t            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+and an output projection after gating. Gates use Griffin's block-diagonal
+weights. Training uses ``lax.associative_scan`` over time; decode carries
+(conv_state, h) and is O(1)/token — with the local-attention layers' small
+windows this is why recurrentgemma runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+_C = 8.0
+_N_BLOCKS = 16
+_CONV_K = 4
+
+
+def rglru_init(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    dr = d  # lru width = d_model (recurrentgemma)
+    nb = _N_BLOCKS if dr % _N_BLOCKS == 0 else 1
+    bs = dr // nb
+    ks = jax.random.split(key, 5)
+    return {
+        "w_y": jax.random.normal(ks[0], (d, dr), dtype) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[1], (d, dr), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[2], (_CONV_K, dr), dtype) * 0.1,
+        "conv_b": jnp.zeros((dr,), dtype),
+        "wa_blocks": jax.random.normal(ks[3], (nb, bs, bs), dtype) * bs ** -0.5,
+        "wx_blocks": jax.random.normal(ks[4], (nb, bs, bs), dtype) * bs ** -0.5,
+        "lam": jnp.full((dr,), 0.5, jnp.float32),
+        "w_out": jax.random.normal(ks[0], (dr, d), dtype) * dr ** -0.5,
+    }
+
+
+def _block_linear(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Block-diagonal linear: w (nb, bs, bs), x (..., nb*bs)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bs)
+    return jnp.einsum("...nb,nbc->...nc", xs, w).reshape(*x.shape)
+
+
+def _gates(p: Params, xr: jnp.ndarray):
+    r = jax.nn.sigmoid(_block_linear(p["wa_blocks"], xr).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(p["wx_blocks"], xr).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r            # (..., dr) ≤ 0
+    a = jnp.exp(log_a)
+    w_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, w_in * i * xr.astype(jnp.float32)
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    pad = jnp.pad(x, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(_CONV_K):
+        out = out + pad[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def rglru_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                return_cache: bool = False):
+    """Full-sequence recurrent block. x (B,T,D).
+
+    ``cfg.rg_scan_bf16`` runs the associative scan on bf16 (a, w) — the scan
+    levels dominate the layer's HBM traffic (log2(T) passes over two
+    (B,T,dr) tensors, ×fwd/bwd/remat); a ∈ (0,1) products decay fast so the
+    bf16 recurrence stays within ~1e-2 of f32 on the block output (§Perf,
+    measured in tests/test_archs.py::test_rg_scan_bf16_close)."""
+    xr0 = x @ p["w_y"]                                      # raw conv input
+    xr = _conv(xr0, p["conv_w"], p["conv_b"])               # (B,T,dr)
+    a, w = _gates(p, xr)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    if cfg.rg_scan_bf16:
+        a = a.astype(jnp.bfloat16)
+        w = w.astype(jnp.bfloat16)
+    _, h = jax.lax.associative_scan(combine, (a, w), axis=1)
+    hx = h.astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    out = (hx * gate) @ p["w_out"]
+    if not return_cache:
+        return out
+    t = x.shape[1]
+    tail = xr0[:, -(_CONV_K - 1):] if t >= _CONV_K - 1 else jnp.pad(
+        xr0, ((0, 0), (_CONV_K - 1 - t, 0), (0, 0)))
+    return out, RGLRUCache(conv=tail, h=h[:, -1].astype(jnp.float32))
+
+
+class RGLRUCache(NamedTuple):
+    conv: jnp.ndarray  # (B, K-1, dr)
+    h: jnp.ndarray     # (B, dr) f32
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    dr = cfg.d_model
+    return RGLRUCache(
+        conv=jnp.zeros((batch, _CONV_K - 1, dr), dtype),
+        h=jnp.zeros((batch, dr), jnp.float32),
+    )
+
+
+def rglru_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, cache: RGLRUCache
+                 ) -> Tuple[jnp.ndarray, RGLRUCache]:
+    """One-token step. x (B,1,D)."""
+    xr0 = x[:, 0] @ p["w_y"]                               # (B,dr)
+    hist = jnp.concatenate([cache.conv, xr0[:, None]], 1)
+    xr = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    a, w = _gates(p, xr)
+    h = a * cache.h + w
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"])
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    return out, RGLRUCache(conv=hist[:, 1:], h=h)

@@ -1,0 +1,176 @@
+"""Mamba2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked training form: within a chunk the recurrence is materialized as a
+masked (semiseparable) attention-like matmul; across chunks a short scan
+carries the (H, P, N) state. Decode carries (conv_state, ssm_state) and is
+O(1) per token — the reason mamba2 runs the ``long_500k`` shape.
+
+The paper's coded-memory technique does not apply to the SSM state (it is
+read-modify-written by every token — there are no idle banks to decode
+from); see DESIGN.md §6. The (large) vocab embedding still uses the coded
+lookup when enabled.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def ssm_dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_headdim
+    return di, nh, cfg.ssm_headdim, cfg.ssm_state
+
+
+def ssm_init(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    di, nh, hp, n = ssm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    proj_out = 2 * di + 2 * n + nh  # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * n), dtype) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _split_proj(cfg, proj):
+    di, nh, hp, n = ssm_dims(cfg)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc (B,T,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i : i + xbc.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(u, la, Bm, Cm, chunk):
+    """u (B,T,H,P) inputs; la (B,T,H) log-decay ≤ 0; Bm/Cm (B,T,N).
+
+    Returns y (B,T,H,P) and final state (B,H,P,N).
+    """
+    b, t, h, p = u.shape
+    n = Bm.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    u = u.reshape(b, nc, q, h, p)
+    la = la.reshape(b, nc, q, h).astype(jnp.float32)
+    Bm = Bm.reshape(b, nc, q, n).astype(jnp.float32)
+    Cm = Cm.reshape(b, nc, q, n).astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=2)                            # (B,nc,Q,H)
+    total = cum[:, :, -1]                                   # (B,nc,H)
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (C_i·B_j) u_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)              # (B,nc,Q,Q)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    w = jnp.where(tri[None, None, :, :, None], cb[..., None] * dec, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, u.astype(jnp.float32))
+
+    # chunk state contribution: S_c = sum_j exp(total - cum_j) B_j u_j^T
+    sdec = jnp.exp(total[:, :, None, :] - cum)              # (B,nc,Q,H)
+    s_c = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", sdec, Bm, u.astype(jnp.float32))
+
+    # scan chunk states: S_{c} = exp(total_c) S_{c-1} + S_c
+    def body(s_prev, xs):
+        tot_c, s_cc = xs                                   # (B,H), (B,H,N,P)
+        s = jnp.exp(tot_c)[..., None, None] * s_prev + s_cc
+        return s, s_prev
+
+    tot_sw = jnp.moveaxis(total, 1, 0)                      # (nc,B,H)
+    scc_sw = jnp.moveaxis(s_c, 1, 0)                        # (nc,B,H,N,P)
+    s_final, s_prevs = jax.lax.scan(body, jnp.zeros((b, h, n, p), jnp.float32),
+                                    (tot_sw, scc_sw))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                   # (B,nc,H,N,P)
+
+    # inter-chunk: y_i += exp(cum_i) C_i · S_prev
+    y_inter = jnp.einsum("bcih,bcin,bchnp->bcihp", jnp.exp(cum), Cm, s_prevs)
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, jnp.moveaxis(s_final, -1, -2)                 # state (B,H,P,N)
+
+
+def ssm_block(cfg: ModelConfig, p: Params, x: jnp.ndarray, chunk: int = 128,
+              return_cache: bool = False):
+    """Full-sequence SSD block (training / prefill). x (B,T,D)."""
+    di, nh, hp, n = ssm_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xi, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+    b, t, _ = x.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["A_log"])                                     # (H,)
+    la = dt * a[None, None, :]
+    u = xi.reshape(b, t, nh, hp).astype(jnp.float32) * dt[..., None]
+    y, s_final = _ssd_chunked(u, la, Bm, Cm, chunk)
+    y = y + p["D"][None, None, :, None] * xi.reshape(b, t, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype)
+    y = y * p["norm_scale"]
+    out = y @ p["out_proj"]
+    if not return_cache:
+        return out
+    k = cfg.ssm_conv
+    tail = xbc_raw[:, -(k - 1):] if t >= k - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (k - 1 - t, 0), (0, 0)))
+    return out, SSMCache(conv=tail, state=s_final)
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, K-1, di + 2N)
+    state: jnp.ndarray  # (B, H, P, N) f32
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, nh, hp, n = ssm_dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+        state=jnp.zeros((batch, nh, hp, n), jnp.float32),
+    )
+
+
+def ssm_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, cache: SSMCache
+               ) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token step. x (B,1,D)."""
+    di, nh, hp, n = ssm_dims(cfg)
+    proj = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    hist = jnp.concatenate([cache.conv, xbc[:, None]], 1)   # (B,K,C)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv)
+    xi, Bm, Cm = jnp.split(xbc_t, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                       # (B,H)
+    u = xi.reshape(-1, nh, hp).astype(jnp.float32) * dt[..., None]
+    s = cache.state * a[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", u, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xi.reshape(-1, nh, hp).astype(jnp.float32)
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype)
+    y = y * p["norm_scale"]
+    out = (y @ p["out_proj"])[:, None]
+    return out, SSMCache(conv=hist[:, 1:], state=s)

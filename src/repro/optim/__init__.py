@@ -1,0 +1,13 @@
+"""Pure-JAX optimizer stack: AdamW + schedules + clipping + compression."""
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.compress import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+)

@@ -1,0 +1,102 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a cosine
+schedule — as pure pytree functions (no optax dependency). Moments are
+stored in f32 regardless of param dtype (mixed-precision master moments)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    m: Any             # f32 pytree like params
+    v: Any             # f32 pytree like params
+
+
+def cosine_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (s - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_opt(abstract_params: Any) -> OptState:
+    """ShapeDtypeStruct skeleton of the optimizer state (dry-run / restore)."""
+    f32 = lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32)
+    zeros = jax.tree.map(f32, abstract_params)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), m=zeros,
+                    v=jax.tree.map(lambda x: x, zeros))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (standard practice)."""
+    keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    last = str(keys[-1]) if keys else ""
+    return not any(s in last for s in ("scale", "bias", "A_log", "D", "dt_bias",
+                                       "norm"))
+
+
+def adamw_update(
+    cfg: OptConfig, grads: Any, state: OptState, params: Any
+) -> Tuple[Any, OptState, jnp.ndarray]:
+    """Returns (new_params, new_state, grad_norm). Clips by global norm."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    gl = jax.tree.leaves(grads)
+    ml = jax.tree.leaves(state.m)
+    vl = jax.tree.leaves(state.v)
+    out = [upd(path, p, g, m, v)
+           for (path, p), g, m, v in zip(flat, gl, ml, vl)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), gnorm

@@ -1,0 +1,2 @@
+"""Distributed runtime: canonical step functions, fault-tolerant trainer,
+continuous-batching server with the paper's coded KV banks."""

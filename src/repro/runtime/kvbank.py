@@ -1,0 +1,207 @@
+"""Paged, banked + coded KV cache — the paper's multi-port-memory emulation
+applied to a serving engine's KV page pool.
+
+Design (vLLM-style paging, TPU-banked):
+
+  * A GLOBAL pool of KV pages striped over ``n_banks`` single-ported HBM
+    banks: physical page ``p`` lives in bank ``p % n_banks``, slot
+    ``p // n_banks``. Each sequence owns a *block table* mapping its logical
+    pages to pool pages, allocated in arrival order.
+  * The B concurrent decode streams are the paper's N cores; the banks are
+    shared hardware. Because allocation order interleaves across sequences,
+    a sequence that decodes far past its batch-mates gets pages that stride
+    the pool — its pages cluster on few banks (with 8 active sequences and 8
+    banks, in lockstep each sequence's pages all land in ONE bank). Those
+    banks become hot exactly like the paper's conflicted DRAM banks.
+  * Pairwise XOR parity banks (Scheme-I group structure, rate 2/3) let the
+    planner serve every second read of an over-loaded bank from
+    (pair-sibling bank ^ parity bank) — a degraded read; idle ports become
+    extra read ports (paper Fig 3).
+  * Appends write the data bank and mark the touched pair row stale in the
+    code status table (paper §IV-A); a background ``recode`` pass re-encodes
+    stale rows (the ReCoding unit, §IV-D). Stale parity rows are never used
+    for degraded reads.
+
+``coded_kv_decode`` (src/repro/kernels/coded_kv_decode) is the Pallas
+datapath consuming ``plan_reads``' page plan on the packed bank layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uint_view_dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class KVBankConfig:
+    n_banks: int = 8            # data banks (parity pairs: 2g, 2g+1)
+    page: int = 16              # tokens per page
+    pool_pages: int = 1024      # physical pages in the pool
+    max_pages: int = 256        # logical pages per sequence (block table width)
+
+
+class BankedKVState(NamedTuple):
+    k_banks: jnp.ndarray        # (NB, slots, page, Hkv, D) uint lanes (pool)
+    v_banks: jnp.ndarray
+    k_par: jnp.ndarray          # (NB/2, slots, page, Hkv, D)
+    v_par: jnp.ndarray
+    parity_fresh: jnp.ndarray   # (NB/2, slots) bool — code status table
+    page_table: jnp.ndarray     # (B, max_pages) int32 physical page id, -1 free
+    length: jnp.ndarray         # (B,) tokens present
+    next_page: jnp.ndarray      # () int32 pool allocation cursor
+
+
+class ReadPlan(NamedTuple):
+    use_parity: jnp.ndarray      # (B, max_pages) bool
+    uncoded_cycles: jnp.ndarray  # () int32 — max bank load, whole step
+    coded_cycles: jnp.ndarray    # () int32 — port cycles with parity serving
+
+
+def init_state(cfg: KVBankConfig, batch: int, n_kv: int, head_dim: int,
+               dtype) -> BankedKVState:
+    u = uint_view_dtype(dtype)
+    nb, pg = cfg.n_banks, cfg.page
+    slots = cfg.pool_pages // nb
+    shape = (nb, slots, pg, n_kv, head_dim)
+    pshape = (nb // 2, slots, pg, n_kv, head_dim)
+    return BankedKVState(
+        k_banks=jnp.zeros(shape, u), v_banks=jnp.zeros(shape, u),
+        k_par=jnp.zeros(pshape, u), v_par=jnp.zeros(pshape, u),
+        parity_fresh=jnp.ones((nb // 2, slots), bool),
+        page_table=jnp.full((batch, cfg.max_pages), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+        next_page=jnp.int32(0),
+    )
+
+
+def append_token(cfg: KVBankConfig, st: BankedKVState, k_new: jnp.ndarray,
+                 v_new: jnp.ndarray,
+                 active: Optional[jnp.ndarray] = None) -> BankedKVState:
+    """Append one token's (B, Hkv, D) KV for every ``active`` sequence.
+    Allocates a fresh pool page at page boundaries (arrival-order allocation
+    — the realistic continuous-batching pattern). Touched pair parity rows
+    go stale (paper §IV-A status 01)."""
+    b = st.length.shape[0]
+    if active is None:
+        active = jnp.ones((b,), bool)
+    u = st.k_banks.dtype
+    ku = jax.lax.bitcast_convert_type(k_new, u) if k_new.dtype != u else k_new
+    vu = jax.lax.bitcast_convert_type(v_new, u) if v_new.dtype != u else v_new
+
+    pos = st.length
+    lpage = pos // cfg.page
+    in_page = pos % cfg.page
+    need_alloc = active & (in_page == 0)
+    offs = jnp.cumsum(need_alloc.astype(jnp.int32)) - need_alloc
+    new_phys = st.next_page + offs
+    bi = jnp.arange(b)
+    page_table = st.page_table.at[bi, lpage].set(
+        jnp.where(need_alloc, new_phys, st.page_table[bi, lpage]))
+    next_page = st.next_page + need_alloc.astype(jnp.int32).sum()
+
+    phys = page_table[bi, lpage]
+    nop_bank = cfg.n_banks          # out-of-range sink for inactive lanes
+    bank = jnp.where(active, phys % cfg.n_banks, nop_bank)
+    slot = jnp.maximum(phys // cfg.n_banks, 0)
+    k_banks = st.k_banks.at[bank, slot, in_page].set(ku, mode="drop")
+    v_banks = st.v_banks.at[bank, slot, in_page].set(vu, mode="drop")
+    parity_fresh = st.parity_fresh.at[
+        jnp.where(active, bank // 2, cfg.n_banks), slot].set(False, mode="drop")
+    return st._replace(k_banks=k_banks, v_banks=v_banks,
+                       parity_fresh=parity_fresh, page_table=page_table,
+                       length=pos + active.astype(jnp.int32),
+                       next_page=next_page)
+
+
+def recode(cfg: KVBankConfig, st: BankedKVState,
+           budget: Optional[int] = None) -> BankedKVState:
+    """ReCoding unit: refresh stale parity rows (all when budget is None)."""
+    k_par = st.k_banks[0::2] ^ st.k_banks[1::2]
+    v_par = st.v_banks[0::2] ^ st.v_banks[1::2]
+    if budget is None:
+        return st._replace(k_par=k_par, v_par=v_par,
+                           parity_fresh=jnp.ones_like(st.parity_fresh))
+    stale = ~st.parity_fresh
+    order = jnp.cumsum(stale.reshape(-1).astype(jnp.int32)).reshape(stale.shape)
+    take = stale & (order <= budget)
+    t5 = take[..., None, None, None]
+    return st._replace(
+        k_par=jnp.where(t5, k_par, st.k_par),
+        v_par=jnp.where(t5, v_par, st.v_par),
+        parity_fresh=st.parity_fresh | take,
+    )
+
+
+def plan_reads(cfg: KVBankConfig, st: BankedKVState) -> ReadPlan:
+    """Build this step's page-read plan (vectorized pattern builder).
+
+    Port contention is accounted across the WHOLE batch (shared banks).
+    For every bank hotter than its pair sibling, up to ⌊(load−sib)/2⌋ of its
+    fresh-parity reads are sent down the degraded path (sibling ^ parity) —
+    alternating ranks, the controller's round-robin. Balanced loads get no
+    degraded reads (no idle ports — the paper's worst case)."""
+    b, mp = st.page_table.shape
+    nb = cfg.n_banks
+    needed = (jnp.arange(mp)[None, :] < -(-st.length[:, None] // cfg.page)) \
+        & (st.page_table >= 0)                      # (B, MP)
+    phys = jnp.maximum(st.page_table, 0)
+    bank = phys % nb                                # (B, MP)
+    slot = phys // nb
+    fresh = st.parity_fresh[bank // 2, slot]        # (B, MP)
+
+    load = jnp.zeros((nb,), jnp.int32).at[
+        jnp.where(needed, bank, nb)].add(1, mode="drop")
+    sib_load = load[jnp.arange(nb) ^ 1]
+    k_bank = jnp.maximum(load - sib_load, 0) // 2   # beneficial moves per bank
+
+    # rank of each request within its bank, batch-major over (B, MP)
+    oh = (needed & fresh)[..., None] * jax.nn.one_hot(bank, nb, dtype=jnp.int32)
+    flat = oh.reshape(b * mp, nb)
+    rank = (jnp.cumsum(flat, axis=0) - flat).reshape(b, mp, nb)
+    my_rank = jnp.take_along_axis(rank, bank[..., None], -1)[..., 0]
+    use_parity = (needed & fresh & ((my_rank % 2) == 1)
+                  & (my_rank < 2 * k_bank[bank]))
+
+    direct = needed & ~use_parity
+    d_bank = jnp.zeros((nb,), jnp.int32).at[
+        jnp.where(direct, bank, nb)].add(1, mode="drop")
+    s_bank = jnp.zeros((nb,), jnp.int32).at[
+        jnp.where(use_parity, bank ^ 1, nb)].add(1, mode="drop")
+    p_bank = jnp.zeros((nb // 2,), jnp.int32).at[
+        jnp.where(use_parity, bank // 2, nb // 2)].add(1, mode="drop")
+    coded = jnp.maximum(jnp.max(d_bank + s_bank), jnp.max(p_bank))
+    return ReadPlan(use_parity=use_parity,
+                    uncoded_cycles=jnp.max(load),
+                    coded_cycles=coded)
+
+
+def gather_kv(cfg: KVBankConfig, st: BankedKVState, plan: ReadPlan,
+              dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize the logical (B, T, Hkv, D) K/V via the planned mix of
+    direct and degraded (sibling ^ parity) reads — bit-exact reconstruction.
+    Unallocated logical pages come back zero."""
+    b, mp = st.page_table.shape
+    nb = cfg.n_banks
+    phys = jnp.maximum(st.page_table, 0)
+    bank = phys % nb
+    slot = phys // nb
+    alloc = st.page_table >= 0
+
+    def one(banks, par):
+        direct = banks[bank, slot]                     # (B, MP, pg, Hkv, D)
+        deg = banks[bank ^ 1, slot] ^ par[bank // 2, slot]
+        up = plan.use_parity[..., None, None, None]
+        out = jnp.where(up, deg, direct)
+        out = jnp.where(alloc[..., None, None, None], out, 0)
+        pg, hkv, d = out.shape[-3:]
+        return out.reshape(b, mp * pg, hkv, d)
+
+    k = one(st.k_banks, st.k_par)
+    v = one(st.v_banks, st.v_par)
+    k = jax.lax.bitcast_convert_type(k, dtype) if k.dtype != dtype else k
+    v = jax.lax.bitcast_convert_type(v, dtype) if v.dtype != dtype else v
+    return k, v

@@ -1,0 +1,150 @@
+"""Serving runtime: continuous batching over the canonical prefill/decode
+steps, with the coded banked KV cache as the storage backend.
+
+Request lifecycle: queued -> prefill (one jit call per admitted request,
+padded to ``max_prompt``) -> decode slot (joins the batched decode step) ->
+finished (EOS / max_new_tokens). Slots are fixed (``n_slots``) so the decode
+step compiles once; free slots decode garbage that is masked out — the
+standard continuous-batching trick (vLLM-style, static-shape variant).
+
+Fault tolerance: the server state (cache + slot table) is device-resident;
+``snapshot()``/``restore_snapshot()`` round-trips it through host memory so
+a serving node can be replaced mid-stream (exercised in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.runtime import steps as steps_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int = 4
+    max_prompt: int = 64
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    eos_id: int = -1            # -1: never stop early
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, sc: ServeConfig, params):
+        self.cfg, self.sc = cfg, sc
+        # ring-buffer slot mapping must agree between prefill and decode
+        # caches: any attention window must fit inside max_prompt.
+        for w in (cfg.sliding_window, cfg.local_window):
+            assert w == 0 or w <= sc.max_prompt, (w, sc.max_prompt)
+        self.params = params
+        self.decode = jax.jit(steps_mod.make_serve_step(cfg))
+        self.prefill = jax.jit(steps_mod.make_prefill_step(cfg))
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * sc.n_slots
+        b = sc.n_slots
+        self.cache = lm.cache_spec(cfg, b, sc.max_seq)
+        self.tokens = jnp.zeros((b,), jnp.int32)
+        self.steps_run = 0
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = req.prompt[-self.sc.max_prompt:]
+            pad = self.sc.max_prompt - len(prompt)
+            toks = jnp.asarray([[0] * pad + prompt], jnp.int32)
+            batch = {"tokens": toks}
+            if self.cfg.is_encdec:
+                batch["frames"] = jnp.zeros(
+                    (1, max(self.cfg.enc_frames, 8), self.cfg.d_model),
+                    jnp.dtype(self.cfg.compute_dtype))
+            if self.cfg.frontend == "vision_stub" and self.cfg.n_patches:
+                batch["patches"] = jnp.zeros(
+                    (1, self.cfg.n_patches, self.cfg.d_model),
+                    jnp.dtype(self.cfg.compute_dtype))
+            tok, cache1 = self.prefill(self.params, batch)
+            self._install(i, tok, cache1)
+            req.out.append(int(tok[0]))
+            self.slots[i] = req
+
+    def _install(self, i: int, tok, cache1):
+        """Copy a 1-batch prefill cache into slot i of the decode cache."""
+        def put(dst, src):
+            # dst (B, ...) or (L, B, ...); src has batch 1 in the same spot
+            if dst.ndim >= 2 and src.shape[0] == dst.shape[0] and dst.ndim > 1 \
+               and src.shape[1] == 1 and dst.shape[0] != 1:
+                # (L, 1, ...) -> slot i of (L, B, ...), seq-padded
+                pads = [(0, 0)] * src.ndim
+                for ax in range(2, src.ndim):
+                    pads[ax] = (0, dst.shape[ax] - src.shape[ax])
+                src = jnp.pad(src, pads)
+                return dst.at[:, i].set(src[:, 0])
+            # (1, ...) -> slot i of (B, ...)
+            pads = [(0, 0)] * src.ndim
+            for ax in range(1, src.ndim):
+                pads[ax] = (0, dst.shape[ax] - src.shape[ax])
+            src = jnp.pad(src, pads)
+            return dst.at[i].set(src[0])
+
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        self.tokens = self.tokens.at[i].set(tok[0])
+
+    # ----------------------------------------------------------------- step
+    def step(self):
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return
+        self.tokens, self.cache = self.decode(self.params, self.tokens, self.cache)
+        self.steps_run += 1
+        toks = np.asarray(self.tokens)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(toks[i])
+            req.out.append(t)
+            if (self.sc.eos_id >= 0 and t == self.sc.eos_id) or \
+               len(req.out) >= self.sc.max_new_tokens:
+                req.done = True
+                self.slots[i] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen: set = set()
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return finished
+
+    # -------------------------------------------------------- fault recovery
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "cache": jax.tree.map(lambda a: np.asarray(a), self.cache),
+            "tokens": np.asarray(self.tokens),
+            "slots": [(r.rid, list(r.prompt), list(r.out)) if r else None
+                      for r in self.slots],
+        }
+
+    def restore_snapshot(self, snap: Dict[str, Any]):
+        self.cache = jax.tree.map(jnp.asarray, snap["cache"])
+        self.tokens = jnp.asarray(snap["tokens"])
+        self.slots = [Request(rid=s[0], prompt=s[1], out=s[2]) if s else None
+                      for s in snap["slots"]]

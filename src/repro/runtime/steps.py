@@ -1,0 +1,81 @@
+"""Canonical step functions — the single definition used by the trainer, the
+server, the dry-run and the benchmarks, so the compiled artifact analysed in
+EXPERIMENTS.md is exactly what runs.
+
+``train_step``  : fwd+bwd+AdamW update (+ optional microbatch gradient
+                  accumulation via lax.scan, f32 accumulators).
+``prefill_step``: prompt processing -> (last logits, KV/state cache).
+``serve_step``  : one greedy decode token against the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.optim.adamw import OptConfig, OptState, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    unroll: int = 1, remat: bool = True, q_chunk: int = 0,
+                    n_micro: int = 1, chunk_unroll: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics)."""
+
+    def lfn(params, batch):
+        return lm.loss_fn(cfg, params, batch, unroll=unroll, remat=remat,
+                          q_chunk=q_chunk, chunk_unroll=chunk_unroll)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jnp.ndarray]):
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(lfn)(params, batch)
+        else:
+            def resh(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(resh, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(lfn)(params, mb)
+                gsum = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_step": new_opt.step.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, unroll: int = 1, q_chunk: int = 0,
+                      chunk_unroll: int = 1):
+    def prefill_step(params, batch: Dict[str, jnp.ndarray]):
+        logits, cache = lm.prefill(cfg, params, batch, unroll=unroll,
+                                   q_chunk=q_chunk, chunk_unroll=chunk_unroll)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, unroll: int = 1):
+    """One greedy decode step: (params, token (B,), cache) -> (token', cache')."""
+
+    def serve_step(params, token: jnp.ndarray, cache):
+        logits, cache = lm.decode_step(cfg, params, token, cache, unroll=unroll)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

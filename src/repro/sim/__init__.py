@@ -1,0 +1,17 @@
+"""Trace-driven evaluation substrate (the paper's gem5 + Ramulator stage).
+
+``trace`` generates synthetic multi-core memory traces with the access-
+pattern structure the paper observes in PARSEC (persistent sequential bands,
+Fig 15) and its two augmentations (split bands, Fig 16; linear ramp, Fig 17).
+``ramulator`` drives ``repro.core.CodedMemorySystem`` over a trace and
+compares coded schemes against the uncoded baseline.
+"""
+from repro.sim.trace import (  # noqa: F401
+    TraceSpec,
+    banded_trace,
+    ramp_trace,
+    split_band_trace,
+    uniform_trace,
+    zipf_trace,
+)
+from repro.sim.ramulator import compare_schemes, simulate, sweep_alpha  # noqa: F401

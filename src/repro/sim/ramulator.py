@@ -1,0 +1,62 @@
+"""Trace-driven evaluation driver (the paper's modified-Ramulator stage, §V-B).
+
+``simulate`` runs one (scheme, α, r) configuration over a trace and returns a
+``SimResult``; ``compare_schemes``/``sweep_alpha`` reproduce the paper's
+figure axes (CPU cycles and dynamic-coding region switches vs α, per scheme,
+against the uncoded baseline with identical queues/arbitration).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+from repro.core.codes import get_tables
+from repro.core.state import make_params
+from repro.core.system import CodedMemorySystem, SimResult, Trace
+
+
+def simulate(
+    scheme: str,
+    trace: Trace,
+    n_rows: int,
+    alpha: float = 1.0,
+    r: float = 0.05,
+    n_data: int = 8,
+    n_cycles: Optional[int] = None,
+    select_period: int = 256,
+    **kw,
+) -> SimResult:
+    tables = get_tables(scheme, n_data=n_data)
+    p = make_params(tables, n_rows=n_rows, alpha=alpha, r=r,
+                    select_period=select_period, **kw)
+    sys = CodedMemorySystem(tables, p, n_cores=trace.bank.shape[0])
+    if n_cycles is None:
+        # generous drain bound: every request could serialize on one port
+        n_cycles = int(trace.bank.shape[0] * trace.bank.shape[1] * 1.5) + 64
+    return sys.run(trace, n_cycles)
+
+
+def compare_schemes(
+    trace: Trace,
+    n_rows: int,
+    alpha: float = 1.0,
+    r: float = 0.05,
+    schemes: Iterable[str] = ("uncoded", "scheme_i", "scheme_ii", "scheme_iii"),
+    **kw,
+) -> Dict[str, SimResult]:
+    return {s: simulate(s, trace, n_rows, alpha=alpha, r=r, **kw) for s in schemes}
+
+
+def sweep_alpha(
+    scheme: str,
+    trace: Trace,
+    n_rows: int,
+    alphas: Iterable[float] = (0.05, 0.1, 0.25, 0.5, 1.0),
+    r: float = 0.05,
+    **kw,
+) -> Dict[float, SimResult]:
+    return {a: simulate(scheme, trace, n_rows, alpha=a, r=r, **kw) for a in alphas}
+
+
+def cycle_reduction(baseline: SimResult, coded: SimResult) -> float:
+    """Fractional CPU-cycle reduction vs the uncoded baseline (Fig 18 axis)."""
+    return 1.0 - coded.cycles / max(baseline.cycles, 1)

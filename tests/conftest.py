@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single device; only launch/dryrun.py forces 512 host devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

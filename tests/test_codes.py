@@ -1,0 +1,79 @@
+"""Code scheme tests against the paper's §III-B claims."""
+import numpy as np
+import pytest
+
+from repro.core.codes import (CodeTables, get_tables, replication, scheme_i,
+                              scheme_ii, scheme_iii, uncoded)
+
+
+def test_scheme_i_structure():
+    s = scheme_i(8)
+    assert s.n_parities == 12                    # 2 groups × C(4,2)
+    assert s.n_phys == 12                        # one shallow bank each
+    assert s.locality() == 2
+    # rate 2/(2+3α) — paper §III-B1
+    for a in (0.05, 0.25, 1.0):
+        assert s.rate(a) == pytest.approx(2 / (2 + 3 * a))
+    # every data bank appears in exactly 3 pairwise parities
+    for b in range(8):
+        assert sum(b in m for m in s.members) == 3
+
+
+def test_scheme_ii_structure():
+    s = scheme_ii(8)
+    assert s.n_parities == 20                    # 12 pairs + 8 duplicates
+    assert s.n_phys == 10                        # packed 2-per-physical-bank
+    for a in (0.05, 0.25, 1.0):
+        assert s.rate(a) == pytest.approx(2 / (2 + 5 * a))
+    # each data bank: 3 pairs + 1 duplicate = 4 non-direct options -> 5 reads
+    for b in range(8):
+        assert sum(b in m for m in s.members) == 4
+    # physical packing: every physical bank hosts exactly 2 logical halves
+    counts = np.bincount(np.asarray(s.phys))
+    assert (counts == 2).all()
+
+
+def test_scheme_iii_structure():
+    s = scheme_iii(9)
+    assert s.n_parities == 9                     # 3 rows + 3 cols + 3 diags
+    assert s.locality() == 3
+    for a in (0.05, 0.25, 1.0):
+        assert s.rate(a) == pytest.approx(1 / (1 + a))
+    # every bank is covered by exactly one row, one col, one diagonal
+    for b in range(9):
+        assert sum(b in m for m in s.members) == 3
+    # 8-bank variant (paper Remark 5) just drops bank 8 from members
+    s8 = scheme_iii(8)
+    assert all(8 not in m for m in s8.members)
+    assert s8.n_parities == 9
+
+
+def test_replication_baseline():
+    s = replication(8, copies=4)                 # r·(w+1) = 2·(1+1) per group
+    assert s.n_parities == 24                    # 3 extra copies × 8 banks
+    assert s.locality() == 1
+    assert uncoded(8).n_ports == 8
+
+
+def test_tables_consistency():
+    for name in ("scheme_i", "scheme_ii", "scheme_iii"):
+        t = get_tables(name)
+        nd = t.n_data
+        # every option references a parity that actually contains the bank
+        for b in range(nd):
+            for k in range(int(t.opt_n[b])):
+                j = int(t.opt_parity[b, k])
+                members = [m for m in t.par_members[j] if m >= 0]
+                assert b in members
+                sibs = [m for m in t.opt_sibs[b, k] if m >= 0]
+                assert sorted(sibs + [b]) == sorted(members)
+        # port ids are valid
+        assert (t.par_port[: t.n_parities] >= nd).all()
+        assert (t.par_port[: t.n_parities] < t.n_ports).all()
+
+
+def test_simultaneous_read_capacity():
+    """§III-B: reads/bank/cycle = 1 direct + n options (I:4, II:5, III:4)."""
+    for name, per_bank in (("scheme_i", 4), ("scheme_ii", 5), ("scheme_iii", 4)):
+        t = get_tables(name)
+        assert int(t.opt_n.min()) + 1 == per_bank, name

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codes import get_tables
+from repro.core.state import make_params
+from repro.core.system import CodedMemorySystem, Trace
+from repro.data.pipeline import DataConfig, make_batch
+from repro.kernels.xor_encode import ops as enc_ops
+from repro.runtime import kvbank as kb
+
+# One compiled system reused across hypothesis examples (fixed geometry;
+# the *trace contents* are the property input).
+_T = get_tables("scheme_i")
+_P = make_params(_T, n_rows=32, alpha=1.0, r=0.25)
+_SYS = CodedMemorySystem(_T, _P, n_cores=3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
+def test_memory_order_invariant(seed, write_frac):
+    """For ANY request stream: served reads return the committed value and
+    the workload eventually drains with all requests accounted for."""
+    rng = np.random.default_rng(seed)
+    n_cores, T = 3, 10
+    trace = Trace(
+        bank=jnp.asarray(rng.integers(0, 8, (n_cores, T)), jnp.int32),
+        row=jnp.asarray(rng.integers(0, 32, (n_cores, T)), jnp.int32),
+        is_write=jnp.asarray(rng.random((n_cores, T)) < write_frac),
+        data=jnp.asarray(rng.integers(1, 1 << 20, (n_cores, T)), jnp.int32),
+        valid=jnp.asarray(rng.random((n_cores, T)) < 0.8),
+    )
+    st_ = _SYS.init()
+    n_served = 0
+    for _ in range(64):
+        golden = np.asarray(st_.mem.golden)
+        st_, out = _SYS.cycle_fn(st_, trace)
+        served = np.asarray(out.r_served)
+        if served.any():
+            b = np.asarray(out.r_bank)[served]
+            i = np.asarray(out.r_row)[served]
+            np.testing.assert_array_equal(np.asarray(out.r_value)[served],
+                                          golden[b, i])
+        n_served += int(out.n_served)
+        if int(st_.done_cycle) >= 0:
+            break
+    assert int(st_.done_cycle) >= 0
+    n_requests = int(np.asarray(trace.valid).sum())
+    assert n_served == n_requests
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["scheme_i", "scheme_ii", "scheme_iii"]),
+       st.sampled_from([np.uint16, np.uint32]))
+def test_parity_encode_roundtrip(seed, scheme, dtype):
+    """XOR of a parity with all-but-one member recovers the missing member —
+    for every parity of every scheme, any dtype lane."""
+    t = get_tables(scheme, n_data=9 if scheme == "scheme_iii" else 8)
+    rng = np.random.default_rng(seed)
+    banks = jnp.asarray(
+        rng.integers(0, np.iinfo(dtype).max, (t.n_data, 4, 8), dtype=dtype))
+    par = enc_ops.encode_parities(banks, t.par_members, block_rows=4)
+    for j, members in enumerate(t.scheme.members):
+        rec = np.asarray(par[j]).copy()
+        for m in members[1:]:
+            rec ^= np.asarray(banks[m])
+        np.testing.assert_array_equal(rec, np.asarray(banks[members[0]]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 60), st.integers(1, 3))
+def test_kvbank_reconstruction_property(seed, n_tokens, batch):
+    """Any append/recode interleaving, any active-mask pattern: gather_kv is
+    bit-exact vs the append log, and coded cycles never exceed uncoded."""
+    cfg = kb.KVBankConfig(n_banks=4, page=8, pool_pages=64, max_pages=16)
+    st_ = kb.init_state(cfg, batch, 2, 8, jnp.bfloat16)
+    rng = np.random.default_rng(seed)
+    ref = [[] for _ in range(batch)]
+    key = jax.random.key(seed % (2**31))
+    for i in range(n_tokens):
+        k = jax.random.normal(jax.random.fold_in(key, i),
+                              (batch, 2, 8), jnp.bfloat16)
+        active = jnp.asarray(rng.random(batch) < 0.7) if batch > 1 else \
+            jnp.ones((batch,), bool)
+        st_ = kb.append_token(cfg, st_, k, k, active=active)
+        for b_ in range(batch):
+            if bool(active[b_]):
+                ref[b_].append(np.asarray(k[b_]))
+        if rng.random() < 0.3:
+            st_ = kb.recode(cfg, st_)
+    plan = kb.plan_reads(cfg, st_)
+    k_log, _ = kb.gather_kv(cfg, st_, plan, jnp.bfloat16)
+    for b_ in range(batch):
+        if ref[b_]:
+            want = np.stack(ref[b_], 0)
+            np.testing.assert_array_equal(
+                np.asarray(k_log[b_, :len(ref[b_])]), want)
+    assert int(plan.coded_cycles) <= int(plan.uncoded_cycles)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 1000))
+def test_data_pipeline_determinism(seed, step):
+    cfg = DataConfig(vocab=512, batch=4, seq_len=32, seed=seed % 1000)
+    a = make_batch(cfg, step)["tokens"]
+    b = make_batch(cfg, step)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = make_batch(cfg, step + 1)["tokens"]
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 512
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_gradient_compression_error_feedback(seed):
+    """int8 block quantization: dequantization error is bounded by one step
+    (amax/127 per block) and error feedback makes the running sum unbiased."""
+    from repro.optim.compress import compress_int8, decompress_int8
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, (300,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, s = compress_int8(g)
+    deq = decompress_int8(q, s, g.shape, jnp.float32)
+    err = np.abs(np.asarray(deq - g))
+    bound = np.repeat(np.asarray(s)[:, 0], 256)[: g.size] + 1e-6
+    assert (err <= bound).all()
+    # error feedback: accumulated transmitted ≈ accumulated true gradient
+    resid = jnp.zeros_like(g)
+    sent = np.zeros(g.shape, np.float32)
+    for _ in range(20):
+        q, s = compress_int8(g + resid)
+        deq = decompress_int8(q, s, g.shape, jnp.float32)
+        resid = g + resid - deq
+        sent += np.asarray(deq)
+    np.testing.assert_allclose(sent / 20, np.asarray(g), atol=0.05)
