@@ -1,0 +1,85 @@
+"""Looped-vs-batched sweep benchmark (the ``repro.sweep`` deliverable).
+
+Evaluates one 16-point (trace-shape × seed × tunable) grid two ways:
+
+  * **looped** — the pre-sweep-engine path: one ``repro.sim.ramulator
+    .simulate`` call per point, each paying a fresh jit trace + compile +
+    ``lax.scan`` launch (a fresh ``CodedMemorySystem`` per call, exactly as
+    the figure benchmarks used to run);
+  * **batched** — ``repro.sweep.engine``: every point shares one static
+    shape, so the whole grid is ONE compile + ONE vmapped scan.
+
+Reports wall-clock, simulated-cycles/second, the speedup (target ≥5×), and
+verifies the per-point results are numerically identical.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import Timer, emit, table
+from repro.sim.ramulator import simulate
+from repro.sweep import SweepPoint, grid, run_points
+from repro.sweep.workloads import build_trace
+
+
+def make_grid(length: int = 48, n_rows: int = 128) -> list:
+    """16 shape-compatible points: 4 trace generators × 2 seeds × 2 periods."""
+    base = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=n_rows,
+                      n_cores=8, n_banks=8, length=length, write_frac=0.3)
+    return grid(base, trace=("banded", "split", "uniform", "zipf"),
+                seed=(0, 1), select_period=(32, 64))
+
+
+def run(length: int = 48, n_rows: int = 128):
+    pts = make_grid(length=length, n_rows=n_rows)
+    n_cycles = pts[0].resolved_cycles()
+    traces = [build_trace(pt) for pt in pts]
+
+    with Timer() as t_loop:
+        looped = [simulate(pt.scheme, tr, pt.n_rows, alpha=pt.alpha, r=pt.r,
+                           n_cycles=n_cycles, select_period=pt.select_period,
+                           wq_hi=pt.wq_hi, wq_lo=pt.wq_lo,
+                           queue_depth=pt.queue_depth)
+                  for pt, tr in zip(pts, traces)]
+
+    with Timer() as t_cold:
+        batched = run_points(pts, traces=traces)
+    with Timer() as t_warm:                      # compile amortized away
+        batched2 = run_points(pts, traces=traces)
+
+    mismatches = [i for i, (a, b) in enumerate(zip(looped, batched)) if a != b]
+    assert batched == batched2, "batched path is nondeterministic"
+
+    sim_cycles = len(pts) * n_cycles
+    rows = [
+        {"path": "looped (per-config jit)", "wall_s": round(t_loop.s, 2),
+         "sim_cycles/s": round(sim_cycles / t_loop.s, 1), "speedup": 1.0},
+        {"path": "batched (cold)", "wall_s": round(t_cold.s, 2),
+         "sim_cycles/s": round(sim_cycles / t_cold.s, 1),
+         "speedup": round(t_loop.s / t_cold.s, 2)},
+        {"path": "batched (warm)", "wall_s": round(t_warm.s, 2),
+         "sim_cycles/s": round(sim_cycles / t_warm.s, 1),
+         "speedup": round(t_loop.s / t_warm.s, 2)},
+    ]
+    print(f"\n== bench_sweep: {len(pts)}-point grid, {n_cycles} cycles/point ==")
+    print(table(rows, ["path", "wall_s", "sim_cycles/s", "speedup"]))
+    ident = "IDENTICAL" if not mismatches else f"MISMATCH at {mismatches}"
+    ok = not mismatches and t_loop.s / t_cold.s >= 5.0
+    print(f"per-point results vs looped path: {ident}")
+    print(f"cold speedup {t_loop.s / t_cold.s:.1f}x (target >=5x) -> "
+          f"{'PASS' if ok else 'FAIL'}")
+    emit("bench_sweep", rows, {
+        "n_points": len(pts), "n_cycles": n_cycles, "identical": not mismatches,
+        "speedup_cold": t_loop.s / t_cold.s, "speedup_warm": t_loop.s / t_warm.s,
+    })
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--length", type=int, default=48)
+    ap.add_argument("--n-rows", type=int, default=128)
+    args = ap.parse_args()
+    ok = run(length=args.length, n_rows=args.n_rows)
+    raise SystemExit(0 if ok else 1)

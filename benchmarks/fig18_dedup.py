@@ -1,6 +1,10 @@
 """Fig 18 reproduction: CPU cycles + dynamic-coding region switches vs α on
 a dedup-like banded trace (r=0.05), schemes I–III vs the uncoded baseline.
 
+Runs through ``repro.sweep`` (the ``paper_fig18`` suite): one compiled
+program per (scheme, α) shape instead of one jit trace per call, with
+baseline normalization from the results store.
+
 Paper validation targets (§V-C):
   * consistent large cycle reduction once α is sufficient (paper: 73–83%
     fewer cycles at r=0.05 on dedup; magnitude depends on trace density),
@@ -14,33 +18,29 @@ import argparse
 
 from benchmarks.common import emit, table
 from repro.configs.paper_memsys import PAPER_ALPHAS, PAPER_SCHEMES
-from repro.sim.ramulator import simulate
-from repro.sim.trace import TraceSpec, banded_trace
+from repro.sweep import SweepPoint, run_sweep
+from repro.sweep.workloads import paper_fig18
 
 
 def run(length: int = 96, n_rows: int = 320, r: float = 0.05,
         alphas=PAPER_ALPHAS, schemes=PAPER_SCHEMES, seed: int = 0,
         select_period: int = 32):
-    spec = TraceSpec(n_cores=8, length=length, n_banks=8, n_rows=n_rows,
-                     seed=seed, write_frac=0.3)
-    trace = banded_trace(spec)
-    n_cycles = int(length * 8 * 1.5) + 64
-    base = simulate("uncoded", trace, n_rows, alpha=1.0, r=r,
-                    n_cycles=n_cycles, select_period=select_period)
-    rows = [{"scheme": "uncoded", "alpha": None, "cycles": base.cycles,
-             "reduction_%": 0.0, "switches": 0, "degraded": 0,
-             "parked": 0, "read_lat": round(base.avg_read_latency, 2)}]
-    for scheme in schemes:
-        for a in alphas:
-            res = simulate(scheme, trace, n_rows, alpha=a, r=r,
-                           n_cycles=n_cycles, select_period=select_period)
-            rows.append({
-                "scheme": scheme, "alpha": a, "cycles": res.cycles,
-                "reduction_%": round(100 * (1 - res.cycles / base.cycles), 1),
-                "switches": res.switches, "degraded": res.degraded_reads,
-                "parked": res.parked_writes,
-                "read_lat": round(res.avg_read_latency, 2),
-            })
+    base = SweepPoint(trace="banded", n_rows=n_rows, length=length,
+                      n_cores=8, n_banks=8, seed=seed, write_frac=0.3,
+                      select_period=select_period)
+    pts = paper_fig18(base, schemes=schemes, alphas=alphas, r=r)
+    rs = run_sweep(pts)
+    rows = []
+    for row in rs.rows():
+        uncoded = row["scheme"] == "uncoded"
+        rows.append({
+            "scheme": row["scheme"], "alpha": None if uncoded else row["alpha"],
+            "cycles": row["cycles"],
+            "reduction_%": row.get("cycle_reduction_%", 0.0),
+            "switches": 0 if uncoded else row["switches"],
+            "degraded": row["degraded_reads"], "parked": row["parked_writes"],
+            "read_lat": round(row["avg_read_latency"], 2),
+        })
     print("\n== Fig 18: dedup-like banded trace, cycles & switches vs α ==")
     print(table(rows, list(rows[0].keys())))
     emit("fig18_dedup", rows, {"r": r, "length": length, "n_rows": n_rows})

@@ -1,32 +1,32 @@
 """Fig 19 reproduction: the split-band augmentation (many narrow bands).
 Paper claim: with many bands, matching the baseline-trace gains requires
-larger α (more coded regions) or a larger memory partition coefficient r."""
+larger α (more coded regions) or a larger memory partition coefficient r.
+
+Runs through ``repro.sweep`` (the ``paper_fig19`` suite)."""
 from __future__ import annotations
 
 from benchmarks.common import emit, table
-from repro.sim.ramulator import simulate
-from repro.sim.trace import TraceSpec, split_band_trace
+from repro.sweep import SweepPoint, run_sweep
+from repro.sweep.workloads import paper_fig19
 
 
 def run(length: int = 96, n_rows: int = 320, seed: int = 0):
-    spec = TraceSpec(n_cores=8, length=length, n_banks=8, n_rows=n_rows,
-                     seed=seed, write_frac=0.3)
-    trace = split_band_trace(spec, n_bands=8)
-    n_cycles = int(length * 8 * 1.5) + 64
-    base = simulate("uncoded", trace, n_rows, alpha=1.0, r=0.05,
-                    n_cycles=n_cycles, select_period=64)
-    rows = [{"scheme": "uncoded", "alpha": None, "r": None,
-             "cycles": base.cycles, "reduction_%": 0.0, "switches": 0}]
-    for r in (0.05, 0.125, 0.25):
-        for a in (0.1, 0.25, 0.5, 1.0):
-            res = simulate("scheme_i", trace, n_rows, alpha=a, r=r,
-                           n_cycles=n_cycles, select_period=64)
-            rows.append({
-                "scheme": "scheme_i", "alpha": a, "r": r,
-                "cycles": res.cycles,
-                "reduction_%": round(100 * (1 - res.cycles / base.cycles), 1),
-                "switches": res.switches,
-            })
+    base = SweepPoint(n_rows=n_rows, length=length, n_cores=8, n_banks=8,
+                      seed=seed, write_frac=0.3, select_period=64)
+    pts = paper_fig19(base, rs=(0.05, 0.125, 0.25),
+                      alphas=(0.1, 0.25, 0.5, 1.0))
+    rs = run_sweep(pts)
+    rows = []
+    for row in rs.rows():
+        uncoded = row["scheme"] == "uncoded"
+        rows.append({
+            "scheme": row["scheme"],
+            "alpha": None if uncoded else row["alpha"],
+            "r": None if uncoded else row["r"],
+            "cycles": row["cycles"],
+            "reduction_%": row.get("cycle_reduction_%", 0.0),
+            "switches": 0 if uncoded else row["switches"],
+        })
     print("\n== Fig 19: split-band trace — gains need larger α or r ==")
     print(table(rows, list(rows[0].keys())))
     emit("fig19_split", rows, {"length": length, "n_rows": n_rows})

@@ -1,36 +1,36 @@
 """Fig 20 reproduction: the linear-ramp augmentation (drifting hot bands).
 Paper claim: the dynamic coding unit struggles to track a constantly moving
 primary access region — gains shrink vs the static-band case and switch
-counts rise with drift."""
+counts rise with drift.
+
+Runs through ``repro.sweep`` (the ``paper_fig20`` suite)."""
 from __future__ import annotations
 
 from benchmarks.common import emit, table
-from repro.sim.ramulator import simulate
-from repro.sim.trace import TraceSpec, banded_trace, ramp_trace
+from repro.sweep import SweepPoint, run_sweep
+from repro.sweep.workloads import drift_label, paper_fig20
+
+_NAMES = {0.0: "static", 0.25: "ramp_slow", 1.0: "ramp_fast"}
 
 
 def run(length: int = 96, n_rows: int = 320, seed: int = 0):
-    spec = TraceSpec(n_cores=8, length=length, n_banks=8, n_rows=n_rows,
-                     seed=seed, write_frac=0.3)
-    n_cycles = int(length * 8 * 1.5) + 64
+    base = SweepPoint(n_rows=n_rows, length=length, n_cores=8, n_banks=8,
+                      seed=seed, write_frac=0.3, select_period=64, r=0.05)
+    drifts = (0.0, 0.25, 1.0)
+    pts = paper_fig20(base, drifts=drifts, alphas=(0.1, 0.25))
+    rs = run_sweep(pts)
     rows = []
-    for name, drift in (("static", 0.0), ("ramp_slow", 0.25),
-                        ("ramp_fast", 1.0)):
-        space = spec.n_banks * spec.n_rows
-        if drift == 0.0:
-            trace = banded_trace(spec)
-        else:
-            trace = ramp_trace(spec, drift_total=space * drift)
-        base = simulate("uncoded", trace, n_rows, alpha=1.0, r=0.05,
-                        n_cycles=n_cycles, select_period=64)
-        for a in (0.1, 0.25):
-            res = simulate("scheme_i", trace, n_rows, alpha=a, r=0.05,
-                           n_cycles=n_cycles, select_period=64)
+    for drift in drifts:
+        label = drift_label(drift)
+        uncoded = rs.one(scheme="uncoded", label=label).result
+        for rec in rs.by(scheme="scheme_i", label=label):
             rows.append({
-                "trace": name, "alpha": a,
-                "uncoded_cycles": base.cycles, "coded_cycles": res.cycles,
-                "reduction_%": round(100 * (1 - res.cycles / base.cycles), 1),
-                "switches": res.switches,
+                "trace": _NAMES[drift], "alpha": rec.point.alpha,
+                "uncoded_cycles": uncoded.cycles,
+                "coded_cycles": rec.result.cycles,
+                "reduction_%": round(
+                    100 * (1 - rec.result.cycles / uncoded.cycles), 1),
+                "switches": rec.result.switches,
             })
     print("\n== Fig 20: ramp trace — drifting bands defeat dynamic coding ==")
     print(table(rows, list(rows[0].keys())))

@@ -1,6 +1,7 @@
 """§III-B scheme-comparison table: rate, storage overhead, locality,
 best/worst reads per cycle — the paper's analytical claims, measured from
-the actual code tables and pattern builder."""
+the actual code tables and pattern builder, plus end-to-end cycles on a
+shared uniform worst-case trace via the batched ``repro.sweep`` engine."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -9,6 +10,7 @@ from benchmarks.common import emit, table
 from repro.core import controller as ctl
 from repro.core.codes import get_tables
 from repro.core.state import make_params
+from repro.sweep import SweepPoint, run_points
 
 
 def _measure_best_case(name: str) -> int:
@@ -35,9 +37,18 @@ def _measure_best_case(name: str) -> int:
 
 
 def run(alpha: float = 0.25):
+    schemes = ("uncoded", "replication_2", "replication_4",
+               "scheme_i", "scheme_ii", "scheme_iii")
+    # end-to-end worst-case column: every scheme on the same uniform trace,
+    # one batched engine call per static shape (n_data differs for III)
+    pts = [SweepPoint(scheme=name, n_data=9 if name == "scheme_iii" else 8,
+                      n_rows=64, alpha=1.0, r=0.25, trace="uniform",
+                      n_cores=4, length=32, seed=0)
+           for name in schemes]
+    uniform_cycles = {name: res.cycles
+                      for name, res in zip(schemes, run_points(pts))}
     rows = []
-    for name in ("uncoded", "replication_2", "replication_4",
-                 "scheme_i", "scheme_ii", "scheme_iii"):
+    for name in schemes:
         nd = 9 if name == "scheme_iii" else 8
         t = get_tables(name, n_data=nd)
         s = t.scheme
@@ -51,6 +62,7 @@ def run(alpha: float = 0.25):
             "reads/bank": int(t.opt_n.min()) + 1 if s.n_parities else 1,
             "best_case_served": _measure_best_case(name)
             if name.startswith("scheme") else None,
+            "uniform_cycles": uniform_cycles[name],
         })
     print("\n== Scheme comparison (paper §III-B) ==")
     print(table(rows, list(rows[0].keys())))

@@ -37,7 +37,14 @@ from repro.core.controller import (  # noqa: F401
     build_write_pattern,
     jtables,
 )
-from repro.core.state import MemParams, MemState, init_state, make_params  # noqa: F401
+from repro.core.state import (  # noqa: F401
+    MemParams,
+    MemState,
+    TunableParams,
+    init_state,
+    make_params,
+    make_tunables,
+)
 from repro.core.system import (  # noqa: F401
     CodedMemorySystem,
     CycleOut,

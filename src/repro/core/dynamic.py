@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.codes import MAX_SIBS
 from repro.core.controller import JTables
-from repro.core.state import MemParams
+from repro.core.state import MemParams, TunableParams
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -66,6 +66,7 @@ def _encode_region_data(
 def dynamic_step(
     p: MemParams,
     t: JTables,
+    tn: TunableParams,
     cycle: jnp.ndarray,
     region_slot: jnp.ndarray,
     slot_region: jnp.ndarray,
@@ -78,6 +79,7 @@ def dynamic_step(
     enc_remaining: jnp.ndarray,
     enc_slot: jnp.ndarray,
     switches: jnp.ndarray,
+    quiesce=None,
 ) -> DynOut:
     if p.n_slots >= p.n_regions:  # static full coverage: unit disabled
         return DynOut(region_slot, slot_region, access_count, parity_valid,
@@ -108,7 +110,12 @@ def dynamic_step(
     enc_slot = jnp.where(complete, -1, enc_slot)
 
     # ---- periodic selection --------------------------------------------------
-    select = (cycle % p.select_period == 0) & (cycle > 0) & (enc_region < 0)
+    # ``quiesce``: the workload already drained — no traffic left to adapt
+    # to, so no new encodes start (in-flight ones still complete above).
+    period = (cycle % tn.select_period == 0) & (cycle > 0)
+    select = period & (enc_region < 0)
+    if quiesce is not None:
+        select = select & ~quiesce
     coded = region_slot >= 0
     # hottest uncoded region
     cand_counts = jnp.where(coded, -1, access_count)
@@ -144,8 +151,6 @@ def dynamic_step(
     enc_remaining = jnp.where(start, p.encode_cycles, enc_remaining)
 
     # windowed counts decay each period
-    access_count = jnp.where(
-        (cycle % p.select_period == 0) & (cycle > 0), access_count // 2, access_count
-    )
+    access_count = jnp.where(period, access_count // 2, access_count)
     return DynOut(region_slot, slot_region, access_count, parity_valid,
                   parity_data, enc_region, enc_remaining, enc_slot, switches)

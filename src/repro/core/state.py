@@ -34,7 +34,13 @@ NOP_PORT_PAD = 1  # port_busy has one trailing dummy slot used as a no-op sink
 
 
 class MemParams(NamedTuple):
-    """Static geometry (python ints; hashable, used as jit static args)."""
+    """Static geometry (python ints; hashable, used as jit static args).
+
+    Anything that is a *value* rather than a *shape* — the write-drain
+    thresholds and the dynamic-coding selection period — lives in
+    ``TunableParams`` instead, so sweeps can batch over it without
+    recompiling (one compiled program serves a whole tunable grid).
+    """
 
     n_data: int
     n_parities: int
@@ -48,12 +54,35 @@ class MemParams(NamedTuple):
     recode_cap: int
     max_syms: int
     encode_cycles: int    # cycles to encode one region into the staging slot
-    select_period: int    # T, dynamic re-selection period
-    wq_hi: int            # write-drain hysteresis thresholds
-    wq_lo: int
     recode_budget: int    # max recode entries retired per cycle
     coalesce: bool        # allow FROM_SYM / chained-decode reuse (off for the
                           # uncoded Ramulator-like baseline)
+
+
+class TunableParams(NamedTuple):
+    """Per-point scalar knobs (traced jnp arrays; a ``vmap`` batch axis).
+
+    These affect only data values inside the cycle engine, never array
+    shapes, so a batch of configurations differing in nothing but these
+    can share one compiled program. ``repro.sweep`` exploits exactly that.
+    """
+
+    select_period: jnp.ndarray  # () int32 — T, dynamic re-selection period
+    wq_hi: jnp.ndarray          # () int32 — write-drain hysteresis thresholds
+    wq_lo: jnp.ndarray          # () int32
+
+
+def make_tunables(
+    queue_depth: int = 10,
+    select_period: int = 512,
+    wq_hi: int = 8,
+    wq_lo: int = 2,
+) -> TunableParams:
+    return TunableParams(
+        select_period=jnp.int32(max(int(select_period), 1)),
+        wq_hi=jnp.int32(min(int(wq_hi), queue_depth - 1)),
+        wq_lo=jnp.int32(wq_lo),
+    )
 
 
 def make_params(
@@ -65,9 +94,6 @@ def make_params(
     recode_cap: int = 64,
     max_syms: int = 96,
     encode_rows_per_cycle: int = 64,
-    select_period: int = 512,
-    wq_hi: int = 8,
-    wq_lo: int = 2,
     recode_budget: int = 4,
     coalesce: bool = True,
 ) -> MemParams:
@@ -93,9 +119,6 @@ def make_params(
         recode_cap=recode_cap,
         max_syms=max_syms,
         encode_cycles=max(1, region_size // encode_rows_per_cycle),
-        select_period=select_period,
-        wq_hi=min(wq_hi, queue_depth - 1),
-        wq_lo=wq_lo,
         recode_budget=recode_budget,
         coalesce=coalesce if tables.n_parities > 0 else False,
     )

@@ -30,7 +30,8 @@ from repro.core import controller as ctl
 from repro.core.codes import MAX_OPTS, MAX_SIBS, CodeTables
 from repro.core.dynamic import dynamic_step
 from repro.core.recoding import recode_step
-from repro.core.state import MemParams, MemState, init_state
+from repro.core.state import (MemParams, MemState, TunableParams, init_state,
+                              make_tunables)
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -43,6 +44,13 @@ class Trace(NamedTuple):
     is_write: jnp.ndarray  # (n_cores, T) bool
     data: jnp.ndarray      # (n_cores, T) int32 write payloads
     valid: jnp.ndarray     # (n_cores, T) bool
+
+
+def drain_bound(n_cores: int, length: int) -> int:
+    """Worst-case cycle budget for a trace of ``length`` requests per core:
+    every request could serialize on a single port. The shared formula for
+    the looped (``sim.ramulator``) and batched (``repro.sweep``) paths."""
+    return int(n_cores * length * 1.5) + 64
 
 
 class SimState(NamedTuple):
@@ -76,13 +84,22 @@ class SimResult(NamedTuple):
 
 
 class CodedMemorySystem:
-    """Facade owning the static tables/params; methods are jit-compiled."""
+    """Facade owning the static tables/params; methods are jit-compiled.
 
-    def __init__(self, tables: CodeTables, params: MemParams, n_cores: int = 8):
+    ``tunables`` holds the default traced knobs (write-drain thresholds,
+    selection period); each ``cycle_fn``/``run`` call may override them with
+    an explicit ``TunableParams`` — that is how ``repro.sweep`` batches a
+    grid of tunables through one compiled program.
+    """
+
+    def __init__(self, tables: CodeTables, params: MemParams, n_cores: int = 8,
+                 tunables: Optional[TunableParams] = None):
         self.tables = tables
         self.p = params
         self.t = ctl.jtables(tables)
         self.n_cores = n_cores
+        self.tunables = (tunables if tunables is not None
+                         else make_tunables(queue_depth=params.queue_depth))
 
     # ------------------------------------------------------------------ init
     def init(self) -> SimState:
@@ -174,8 +191,17 @@ class CodedMemorySystem:
 
     # ------------------------------------------------------------- one cycle
     @functools.partial(jax.jit, static_argnums=0)
-    def cycle_fn(self, st: SimState, trace: Trace):
+    def cycle_fn(self, st: SimState, trace: Trace,
+                 tn: Optional[TunableParams] = None):
         p, t = self.p, self.t
+        if tn is None:
+            tn = self.tunables
+        # once the workload has drained there is no traffic to react to: the
+        # dynamic unit stops starting encodes, so the system reaches a
+        # quiescent fixed point (done + recode empty + encoder idle) that
+        # lets the sweep engine cut trailing dead cycles without changing
+        # any observable statistic.
+        was_done = st.done_cycle >= 0
         st = self._arbiter(st, trace)
         m = st.mem
         n_cand = p.n_data * p.queue_depth
@@ -186,7 +212,7 @@ class CodedMemorySystem:
         wq_occ = jnp.max(jnp.sum(m.wq_valid, axis=1))
         any_r = jnp.any(m.rq_valid)
         any_w = jnp.any(m.wq_valid)
-        wm = jnp.where(m.write_mode, wq_occ > p.wq_lo, wq_occ >= p.wq_hi)
+        wm = jnp.where(m.write_mode, wq_occ > tn.wq_lo, wq_occ >= tn.wq_hi)
         serve_writes = (wm | (~any_r & any_w)) & any_w
 
         def do_reads(m):
@@ -282,9 +308,10 @@ class CodedMemorySystem:
         )
         # dynamic coding unit
         dy = dynamic_step(
-            p, t, m.cycle, m.region_slot, m.slot_region, m.access_count,
+            p, t, tn, m.cycle, m.region_slot, m.slot_region, m.access_count,
             m.parked_count, m.parity_valid, m.parity_data, m.banks_data,
             m.enc_region, m.enc_remaining, m.enc_slot, m.switches,
+            quiesce=was_done,
         )
         m = m._replace(
             region_slot=dy.region_slot, slot_region=dy.slot_region,
@@ -304,15 +331,17 @@ class CodedMemorySystem:
 
     # ------------------------------------------------------------------- run
     @functools.partial(jax.jit, static_argnums=(0, 3))
-    def _run(self, st: SimState, trace: Trace, n_cycles: int):
+    def _run(self, st: SimState, trace: Trace, n_cycles: int,
+             tn: Optional[TunableParams] = None):
         def body(st, _):
-            st, out = self.cycle_fn(st, trace)
+            st, out = self.cycle_fn(st, trace, tn)
             return st, out.n_served
 
         return jax.lax.scan(body, st, None, length=n_cycles)
 
-    def run(self, trace: Trace, n_cycles: int) -> SimResult:
-        st, _ = self._run(self.init(), trace, n_cycles)
+    def run(self, trace: Trace, n_cycles: int,
+            tn: Optional[TunableParams] = None) -> SimResult:
+        st, _ = self._run(self.init(), trace, n_cycles, tn)
         return self.summarize(st)
 
     def summarize(self, st: SimState) -> SimResult:

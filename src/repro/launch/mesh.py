@@ -31,6 +31,13 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_sweep_mesh(n_devices: int = 0):
+    """1-D mesh over local devices; ``repro.sweep.engine`` lays the sweep
+    batch axis across it (data-parallel points, zero collectives)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("sweep",))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes that shard the global-batch dimension."""
     names = mesh.axis_names

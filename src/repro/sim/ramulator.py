@@ -1,17 +1,24 @@
 """Trace-driven evaluation driver (the paper's modified-Ramulator stage, §V-B).
 
 ``simulate`` runs one (scheme, α, r) configuration over a trace and returns a
-``SimResult``; ``compare_schemes``/``sweep_alpha`` reproduce the paper's
-figure axes (CPU cycles and dynamic-coding region switches vs α, per scheme,
-against the uncoded baseline with identical queues/arbitration).
+``SimResult`` — the looped per-point reference path. ``compare_schemes`` and
+``sweep_alpha`` reproduce the paper's figure axes (CPU cycles and
+dynamic-coding region switches vs α, per scheme, against the uncoded
+baseline) and are thin wrappers over the batched ``repro.sweep`` engine:
+points sharing a static shape run as one compiled program.
 """
 from __future__ import annotations
 
 from typing import Dict, Iterable, Optional
 
 from repro.core.codes import get_tables
-from repro.core.state import make_params
-from repro.core.system import CodedMemorySystem, SimResult, Trace
+from repro.core.state import make_params, make_tunables
+from repro.core.system import CodedMemorySystem, SimResult, Trace, drain_bound
+
+
+def default_n_cycles(trace: Trace) -> int:
+    """Generous drain bound: every request could serialize on one port."""
+    return drain_bound(int(trace.bank.shape[0]), int(trace.bank.shape[1]))
 
 
 def simulate(
@@ -23,16 +30,54 @@ def simulate(
     n_data: int = 8,
     n_cycles: Optional[int] = None,
     select_period: int = 256,
+    wq_hi: int = 8,
+    wq_lo: int = 2,
     **kw,
 ) -> SimResult:
+    """Looped reference path: one fresh compile + scan per configuration.
+
+    ``repro.sweep.engine`` is the batched production path; this stays as the
+    per-point reference the engine is validated against (bit-identical
+    results, see tests/test_sweep.py).
+    """
     tables = get_tables(scheme, n_data=n_data)
-    p = make_params(tables, n_rows=n_rows, alpha=alpha, r=r,
-                    select_period=select_period, **kw)
-    sys = CodedMemorySystem(tables, p, n_cores=trace.bank.shape[0])
+    p = make_params(tables, n_rows=n_rows, alpha=alpha, r=r, **kw)
+    tn = make_tunables(queue_depth=p.queue_depth, select_period=select_period,
+                       wq_hi=wq_hi, wq_lo=wq_lo)
+    sys = CodedMemorySystem(tables, p, n_cores=trace.bank.shape[0], tunables=tn)
     if n_cycles is None:
-        # generous drain bound: every request could serialize on one port
-        n_cycles = int(trace.bank.shape[0] * trace.bank.shape[1] * 1.5) + 64
+        n_cycles = default_n_cycles(trace)
     return sys.run(trace, n_cycles)
+
+
+def sweep_point(
+    scheme: str,
+    trace: Trace,
+    n_rows: int,
+    alpha: float = 1.0,
+    r: float = 0.05,
+    n_data: int = 8,
+    n_cycles: Optional[int] = None,
+    select_period: int = 256,
+    wq_hi: int = 8,
+    wq_lo: int = 2,
+    **kw,
+):
+    """Map ``simulate``-style kwargs + a materialized trace to a SweepPoint.
+
+    ``**kw`` forwards the remaining ``make_params`` knobs (queue_depth,
+    coalesce, recode_cap, max_syms, encode_rows_per_cycle, recode_budget),
+    which are all SweepPoint fields.
+    """
+    from repro.sweep.grid import SweepPoint
+    n_cores, length = (int(d) for d in trace.bank.shape)
+    return SweepPoint(
+        scheme=scheme, n_rows=n_rows, alpha=alpha, r=r, n_data=n_data,
+        n_cores=n_cores, length=length,
+        n_cycles=n_cycles if n_cycles is not None else default_n_cycles(trace),
+        trace="custom", select_period=select_period, wq_hi=wq_hi, wq_lo=wq_lo,
+        **kw,
+    )
 
 
 def compare_schemes(
@@ -43,7 +88,11 @@ def compare_schemes(
     schemes: Iterable[str] = ("uncoded", "scheme_i", "scheme_ii", "scheme_iii"),
     **kw,
 ) -> Dict[str, SimResult]:
-    return {s: simulate(s, trace, n_rows, alpha=alpha, r=r, **kw) for s in schemes}
+    from repro.sweep.engine import run_points
+    schemes = list(schemes)
+    pts = [sweep_point(s, trace, n_rows, alpha=alpha, r=r, **kw)
+           for s in schemes]
+    return dict(zip(schemes, run_points(pts, traces=[trace] * len(pts))))
 
 
 def sweep_alpha(
@@ -54,7 +103,11 @@ def sweep_alpha(
     r: float = 0.05,
     **kw,
 ) -> Dict[float, SimResult]:
-    return {a: simulate(scheme, trace, n_rows, alpha=a, r=r, **kw) for a in alphas}
+    from repro.sweep.engine import run_points
+    alphas = list(alphas)
+    pts = [sweep_point(scheme, trace, n_rows, alpha=a, r=r, **kw)
+           for a in alphas]
+    return dict(zip(alphas, run_points(pts, traces=[trace] * len(pts))))
 
 
 def cycle_reduction(baseline: SimResult, coded: SimResult) -> float:

@@ -1,0 +1,43 @@
+"""Batched sweep-and-replay engine: whole design-space sweeps as a handful
+of device programs.
+
+  grid      — SweepPoint coordinates + static-shape partitioning (one
+              compiled program per partition, vmap batch axis within)
+  workloads — named scenario suites; trace materialization + pytree stacking
+  engine    — vmapped ``CodedMemorySystem`` scan, optional device sharding
+  results   — flat result tables, JSON/CSV export, baseline normalization
+
+Quickstart (see docs/sweeps.md):
+
+    from repro.sweep import SweepPoint, grid, run_sweep
+    pts = grid(SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125,
+                          n_rows=128, length=64),
+               trace=("banded", "uniform"), seed=range(4))
+    rs = run_sweep(pts)          # one compile, one scan — not 8
+    rs.to_csv("sweep.csv")
+"""
+from repro.sweep.grid import (  # noqa: F401
+    GridBatch,
+    SweepPoint,
+    grid,
+    partition,
+    static_signature,
+)
+from repro.sweep.workloads import (  # noqa: F401
+    SUITES,
+    build_trace,
+    stack_traces,
+    suite,
+)
+from repro.sweep.engine import (  # noqa: F401
+    run_batch,
+    run_points,
+    run_sweep,
+    stack_tunables,
+    summarize_batch,
+    system_for,
+)
+from repro.sweep.results import (  # noqa: F401
+    SweepRecord,
+    SweepResultSet,
+)

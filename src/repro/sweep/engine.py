@@ -1,0 +1,186 @@
+"""Batched sweep engine: one compiled program per static shape, not per point.
+
+The looped reference path (``repro.sim.ramulator.simulate``) pays a fresh
+``jax.jit`` trace + compile, a full ``lax.scan`` launch and a host↔device
+sync for every sweep point. This engine instead:
+
+  1. partitions the sweep by static signature (``repro.sweep.grid``),
+  2. ``vmap``s ``CodedMemorySystem.cycle_fn`` over the point axis of each
+     partition — seeds, trace contents and ``TunableParams`` all batch —
+  3. runs one ``lax.scan`` over cycles for the whole partition, and
+  4. summarizes with a single device→host transfer per partition.
+
+Per-point results are bit-identical to the looped path (the cycle engine is
+pure integer arithmetic; ``vmap`` of ``cond`` evaluates both branches and
+selects, which cannot change the selected values). tests/test_sweep.py and
+benchmarks/bench_sweep.py both verify this.
+
+With more than one device, batches whose size divides the device count are
+sharded across a 1-D "sweep" mesh (``repro.launch.mesh.make_sweep_mesh``);
+``jit`` then partitions the scan across devices automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codes import get_tables
+from repro.core.state import TunableParams, make_params, make_tunables
+from repro.core.system import CodedMemorySystem, SimResult, SimState, Trace
+from repro.launch.mesh import make_sweep_mesh
+from repro.sweep import workloads
+from repro.sweep.grid import (GridBatch, SweepPoint, partition,
+                              static_signature)
+
+# One system (= one set of jit caches) per static signature, so re-running a
+# suite — or growing it along batchable axes — never recompiles.
+_SYSTEMS: Dict[Tuple, CodedMemorySystem] = {}
+
+
+def system_for(pt: SweepPoint) -> CodedMemorySystem:
+    sig = static_signature(pt)
+    sys = _SYSTEMS.get(sig)
+    if sys is None:
+        tables = get_tables(pt.scheme, n_data=pt.n_data)
+        params = make_params(tables, n_rows=pt.n_rows, alpha=pt.alpha, r=pt.r,
+                             queue_depth=pt.queue_depth, coalesce=pt.coalesce,
+                             recode_cap=pt.recode_cap, max_syms=pt.max_syms,
+                             encode_rows_per_cycle=pt.encode_rows_per_cycle,
+                             recode_budget=pt.recode_budget)
+        sys = CodedMemorySystem(tables, params, n_cores=pt.n_cores)
+        _SYSTEMS[sig] = sys
+    return sys
+
+
+def stack_tunables(points: Sequence[SweepPoint],
+                   queue_depth: int) -> TunableParams:
+    tns = [make_tunables(queue_depth=queue_depth,
+                         select_period=pt.select_period,
+                         wq_hi=pt.wq_hi, wq_lo=pt.wq_lo) for pt in points]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *tns)
+
+
+def _batched_init(sys: CodedMemorySystem, n: int) -> SimState:
+    st0 = sys.init()
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), st0)
+
+
+def _maybe_shard(trees, n_points: int):
+    """Lay the point axis across devices when it divides the device count."""
+    n_dev = len(jax.devices())
+    if n_dev <= 1 or n_points % n_dev != 0:
+        return trees
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sharding = NamedSharding(make_sweep_mesh(), P("sweep"))
+    return tuple(jax.device_put(t, sharding) for t in trees)
+
+
+def _all_quiescent(st_b: SimState) -> jnp.ndarray:
+    """True when no point can change any observable statistic anymore:
+    workload drained + recode ring empty + encoder idle (the dynamic unit
+    starts nothing new after drain — see ``dynamic_step``'s ``quiesce``)."""
+    m = st_b.mem
+    q = ((st_b.done_cycle >= 0) & (m.enc_region < 0)
+         & ~jnp.any(m.rc_valid, axis=-1))
+    return jnp.all(q)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
+def _scan_batch(sys: CodedMemorySystem, st_b: SimState, trace_b: Trace,
+                tn_b: TunableParams, n_cycles: int) -> SimState:
+    vstep = jax.vmap(sys.cycle_fn)
+
+    # while_loop instead of a fixed-length scan: the drain bound ``n_cycles``
+    # is a worst case (full serialization on one port); real sweeps quiesce
+    # far earlier, and post-quiescence cycles are observable no-ops, so
+    # early exit is bit-identical to running the bound out.
+    def cond(carry):
+        st, i = carry
+        return (i < n_cycles) & ~_all_quiescent(st)
+
+    def body(carry):
+        st, i = carry
+        st, _out = vstep(st, trace_b, tn_b)
+        return st, i + 1
+
+    st, _ = jax.lax.while_loop(cond, body, (st_b, jnp.int32(0)))
+    return st
+
+
+def summarize_batch(st_b: SimState) -> List[SimResult]:
+    """Batched SimState → per-point SimResults in one device→host transfer."""
+    host = jax.device_get(st_b)
+    m = host.mem
+    out = []
+    for b in range(np.asarray(host.done_cycle).shape[0]):
+        dc = int(host.done_cycle[b])
+        sr = int(m.served_reads[b])
+        sw = int(m.served_writes[b])
+        out.append(SimResult(
+            cycles=dc if dc >= 0 else int(m.cycle[b]),
+            completed=dc >= 0,
+            served_reads=sr,
+            served_writes=sw,
+            degraded_reads=int(m.degraded_reads[b]),
+            parked_writes=int(m.parked_writes[b]),
+            switches=int(m.switches[b]),
+            recode_backlog=int(np.sum(m.rc_valid[b])),
+            stall_cycles=int(m.stall_cycles[b]),
+            avg_read_latency=float(m.read_latency_sum[b]) / max(sr, 1),
+            avg_write_latency=float(m.write_latency_sum[b]) / max(sw, 1),
+        ))
+    return out
+
+
+def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
+              shard: bool = True) -> List[SimResult]:
+    """Evaluate one shape-compatible batch as a single device program."""
+    pts = batch.points
+    sys = system_for(pts[0])
+    if traces is None:
+        traces = [workloads.build_trace(pt) for pt in pts]
+    for pt, tr in zip(pts, traces):
+        if tuple(tr.bank.shape) != (pt.n_cores, pt.length):
+            raise ValueError(
+                f"trace shape {tuple(tr.bank.shape)} does not match point "
+                f"geometry ({pt.n_cores}, {pt.length})")
+    trace_b = workloads.stack_traces(traces)
+    tn_b = stack_tunables(pts, sys.p.queue_depth)
+    st_b = _batched_init(sys, len(pts))
+    if shard:
+        st_b, trace_b, tn_b = _maybe_shard((st_b, trace_b, tn_b), len(pts))
+    st = _scan_batch(sys, st_b, trace_b, tn_b, pts[0].resolved_cycles())
+    return summarize_batch(st)
+
+
+def run_points(points: Sequence[SweepPoint],
+               traces: Optional[Sequence[Trace]] = None,
+               shard: bool = True) -> List[SimResult]:
+    """Evaluate an arbitrary sweep; results align with ``points`` order."""
+    if traces is not None and len(traces) != len(points):
+        raise ValueError("traces must align 1:1 with points")
+    results: List[Optional[SimResult]] = [None] * len(points)
+    for batch in partition(points):
+        btraces = ([traces[i] for i in batch.indices]
+                   if traces is not None else None)
+        for i, res in zip(batch.indices, run_batch(batch, btraces, shard)):
+            results[i] = res
+    return results  # type: ignore[return-value]
+
+
+def run_sweep(points: Sequence[SweepPoint],
+              traces: Optional[Sequence[Trace]] = None,
+              shard: bool = True):
+    """Evaluate a sweep and wrap it in a ``SweepResultSet`` (results store)."""
+    from repro.sweep.results import SweepRecord, SweepResultSet
+    res = run_points(points, traces=traces, shard=shard)
+    return SweepResultSet([SweepRecord(pt, r) for pt, r in zip(points, res)])
+
+
+def clear_caches():
+    """Drop memoized systems (and their jit caches) — mainly for tests."""
+    _SYSTEMS.clear()

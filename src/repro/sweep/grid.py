@@ -1,0 +1,117 @@
+"""Config-grid layer: sweep points, static-shape partitioning, grid helpers.
+
+A design-space sweep (scheme × α × r × trace-shape × seed × tunables) mixes
+two kinds of coordinates:
+
+  * **static** coordinates that change array *shapes* inside the simulator —
+    scheme tables, ``n_rows``, α/r (via ``n_slots``/``region_size``), queue
+    depths, trace geometry. Points differing here need separate compiled
+    programs.
+  * **batchable** coordinates that only change array *values* — seeds, trace
+    generator + its kwargs, write fractions, ``select_period``/``wq_lo``/
+    ``wq_hi``. Points differing *only* here can share one compiled program
+    with the point index as a ``vmap`` batch axis.
+
+``partition`` groups points by their static signature so the engine runs a
+whole sweep as ``len(partition(points))`` device programs instead of
+``len(points)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.system import drain_bound
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One configuration in a design-space sweep (all plain python values)."""
+
+    # ---- static: memory-system geometry (separate compile per distinct value)
+    scheme: str = "scheme_i"
+    n_rows: int = 320
+    alpha: float = 1.0
+    r: float = 0.05
+    n_data: int = 8
+    queue_depth: int = 10
+    coalesce: bool = True
+    recode_cap: int = 64
+    max_syms: int = 96
+    encode_rows_per_cycle: int = 64
+    recode_budget: int = 4
+    # ---- static: trace geometry
+    n_cores: int = 8
+    n_banks: int = 8
+    length: int = 96
+    n_cycles: Optional[int] = None   # None = drain bound from length/n_cores
+    # ---- batchable: trace contents
+    trace: str = "banded"            # name in repro.sim.trace.TRACES
+    trace_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    seed: int = 0
+    write_frac: float = 0.3
+    issue_prob: float = 1.0
+    # ---- batchable: tunables (traced scalars in the cycle engine)
+    select_period: int = 256
+    wq_hi: int = 8
+    wq_lo: int = 2
+    # free-form tag carried through to result rows
+    label: str = ""
+
+    def replace(self, **kw) -> "SweepPoint":
+        return dataclasses.replace(self, **kw)
+
+    def resolved_cycles(self) -> int:
+        if self.n_cycles is not None:
+            return int(self.n_cycles)
+        return drain_bound(self.n_cores, self.length)
+
+
+def static_signature(pt: SweepPoint) -> Tuple:
+    """Hashable key of everything that forces a distinct compiled program."""
+    return (pt.scheme, pt.n_data, pt.n_rows, pt.alpha, pt.r, pt.queue_depth,
+            pt.coalesce, pt.recode_cap, pt.max_syms, pt.encode_rows_per_cycle,
+            pt.recode_budget, pt.n_cores, pt.n_banks, pt.length,
+            pt.resolved_cycles())
+
+
+@dataclasses.dataclass
+class GridBatch:
+    """All shape-compatible points of one sweep, plus their original indices."""
+
+    signature: Tuple
+    indices: List[int]
+    points: List[SweepPoint]
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+
+def partition(points: Sequence[SweepPoint]) -> List[GridBatch]:
+    """Group points by static signature, preserving first-seen batch order."""
+    batches: Dict[Tuple, GridBatch] = {}
+    for i, pt in enumerate(points):
+        sig = static_signature(pt)
+        b = batches.get(sig)
+        if b is None:
+            b = batches[sig] = GridBatch(sig, [], [])
+        b.indices.append(i)
+        b.points.append(pt)
+    return list(batches.values())
+
+
+def grid(base: Optional[SweepPoint] = None, **axes: Iterable) -> List[SweepPoint]:
+    """Cartesian product over SweepPoint fields.
+
+    >>> grid(alpha=(0.1, 0.25), seed=range(4))        # 8 points
+    Axis order follows kwargs order; the last axis varies fastest.
+    """
+    base = base or SweepPoint()
+    names = list(axes)
+    bad = [n for n in names if n not in SweepPoint.__dataclass_fields__]
+    if bad:
+        raise ValueError(f"unknown SweepPoint fields: {bad}")
+    values = [list(axes[n]) for n in names]
+    return [base.replace(**dict(zip(names, combo)))
+            for combo in itertools.product(*values)]

@@ -1,0 +1,128 @@
+"""Workload registry: named scenario suites + trace materialization/stacking.
+
+A suite is a function returning a list of ``SweepPoint``s; ``build_trace``
+materializes one point's trace via the ``repro.sim.trace`` generators, and
+``stack_traces`` turns shape-compatible traces into one batch-ready ``Trace``
+pytree with a leading point axis (what the engine ``vmap``s over).
+
+Trace generation is seeded NumPy, so every suite is deterministic per seed
+(tests/test_sweep.py locks this in).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.trace import TRACES, TraceSpec
+from repro.core.system import Trace
+from repro.sweep.grid import SweepPoint, grid
+
+
+def build_trace(pt: SweepPoint) -> Trace:
+    """Materialize one sweep point's request streams."""
+    gen = TRACES.get(pt.trace)
+    if gen is None:
+        raise KeyError(f"unknown trace generator {pt.trace!r}; "
+                       f"have {sorted(TRACES)}")
+    spec = TraceSpec(n_cores=pt.n_cores, length=pt.length, n_banks=pt.n_banks,
+                     n_rows=pt.n_rows, issue_prob=pt.issue_prob,
+                     write_frac=pt.write_frac, seed=pt.seed)
+    return gen(spec, **dict(pt.trace_kwargs))
+
+
+def stack_traces(traces: Sequence[Trace]) -> Trace:
+    """Stack shape-compatible traces along a new leading batch axis."""
+    shapes = {t.bank.shape for t in traces}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot batch traces of mixed shapes: {shapes}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
+
+
+# --------------------------------------------------------------------- suites
+def trace_zoo(base: SweepPoint = SweepPoint(), *,
+              seeds: Sequence[int] = (0, 1),
+              traces: Sequence[str] = ("banded", "split", "ramp", "uniform",
+                                       "zipf")) -> List[SweepPoint]:
+    """Every trace generator × seed on one memory configuration — the
+    one-batch scenario spread (all points are shape-compatible)."""
+    return grid(base, trace=traces, seed=seeds)
+
+
+def multi_seed(base: SweepPoint = SweepPoint(), *,
+               n_seeds: int = 8) -> List[SweepPoint]:
+    """Seed replication of a single scenario (confidence intervals)."""
+    return grid(base, seed=range(n_seeds))
+
+
+def tunable_grid(base: SweepPoint = SweepPoint(), *,
+                 select_periods: Sequence[int] = (32, 64, 256),
+                 wq_his: Sequence[int] = (4, 8)) -> List[SweepPoint]:
+    """Controller-knob exploration — one batch, one compile."""
+    return grid(base, select_period=select_periods, wq_hi=wq_his)
+
+
+def paper_fig18(base: SweepPoint = SweepPoint(), *,
+                schemes: Sequence[str] = ("scheme_i", "scheme_ii",
+                                          "scheme_iii"),
+                alphas: Sequence[float] = (0.05, 0.1, 0.25, 0.5, 1.0),
+                r: float = 0.05) -> List[SweepPoint]:
+    """Fig 18 axes: scheme × α on the dedup-like banded trace, plus the
+    uncoded baseline. Each (scheme, α) is its own static shape; the engine
+    still amortizes everything sharing a shape (e.g. seed replicates)."""
+    base = base.replace(trace="banded", r=r)
+    pts = [base.replace(scheme="uncoded", alpha=1.0)]
+    pts += grid(base, scheme=schemes, alpha=alphas)
+    return pts
+
+
+def paper_fig19(base: SweepPoint = SweepPoint(), *,
+                rs: Sequence[float] = (0.05, 0.125, 0.25),
+                alphas: Sequence[float] = (0.1, 0.25, 0.5, 1.0),
+                n_bands: int = 8) -> List[SweepPoint]:
+    """Fig 19 axes: α × r for scheme I on the split-band augmentation."""
+    base = base.replace(trace="split", trace_kwargs=(("n_bands", n_bands),),
+                        scheme="scheme_i")
+    pts = [base.replace(scheme="uncoded", alpha=1.0, r=0.05)]
+    pts += grid(base, r=rs, alpha=alphas)
+    return pts
+
+
+def drift_label(drift: float) -> str:
+    """Label every ``paper_fig20`` point carries; consumers (fig20_ramp)
+    select records with this instead of re-deriving the format."""
+    return f"drift={drift}"
+
+
+def paper_fig20(base: SweepPoint = SweepPoint(), *,
+                drifts: Sequence[float] = (0.0, 0.25, 1.0),
+                alphas: Sequence[float] = (0.1, 0.25)) -> List[SweepPoint]:
+    """Fig 20 axes: band drift × α (static bands vs slow/fast linear ramp).
+    All points — including drift=0 — are labeled ``drift_label(drift)``."""
+    pts: List[SweepPoint] = []
+    for drift in drifts:
+        space = base.n_banks * base.n_rows
+        tbase = (base.replace(trace="banded") if drift == 0.0 else
+                 base.replace(trace="ramp",
+                              trace_kwargs=(("drift_total", space * drift),)))
+        tbase = tbase.replace(label=drift_label(drift))
+        pts.append(tbase.replace(scheme="uncoded", alpha=1.0))
+        pts += grid(tbase.replace(scheme="scheme_i"), alpha=alphas)
+    return pts
+
+
+SUITES: Dict[str, Callable[..., List[SweepPoint]]] = {
+    "trace_zoo": trace_zoo,
+    "multi_seed": multi_seed,
+    "tunable_grid": tunable_grid,
+    "paper_fig18": paper_fig18,
+    "paper_fig19": paper_fig19,
+    "paper_fig20": paper_fig20,
+}
+
+
+def suite(name: str, base: SweepPoint = SweepPoint(), **kw) -> List[SweepPoint]:
+    if name not in SUITES:
+        raise KeyError(f"unknown suite {name!r}; have {sorted(SUITES)}")
+    return SUITES[name](base, **kw)

@@ -1,0 +1,135 @@
+"""repro.sweep: the batched engine must be bit-identical to the looped
+reference path, suites must be deterministic, and the grid/results layers
+must partition and export correctly."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.sim.ramulator import simulate
+from repro.sweep import (SweepPoint, grid, partition, run_points, run_sweep,
+                         static_signature)
+from repro.sweep.workloads import build_trace, stack_traces, suite
+
+BASE = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=32,
+                  n_cores=3, n_banks=8, length=10, select_period=16)
+
+
+def _looped(pt: SweepPoint):
+    return simulate(pt.scheme, build_trace(pt), pt.n_rows, alpha=pt.alpha,
+                    r=pt.r, n_data=pt.n_data, n_cycles=pt.resolved_cycles(),
+                    select_period=pt.select_period, wq_hi=pt.wq_hi,
+                    wq_lo=pt.wq_lo, queue_depth=pt.queue_depth)
+
+
+@pytest.mark.parametrize("scheme", ["uncoded", "scheme_i", "scheme_ii",
+                                    "scheme_iii"])
+def test_batched_matches_looped_per_scheme(scheme):
+    """Every scheme: a (trace × seed) batch produces SimResults bit-identical
+    to one-config-at-a-time simulation."""
+    pts = grid(BASE.replace(scheme=scheme),
+               trace=("banded", "uniform"), seed=(0, 1))
+    batched = run_points(pts)
+    for pt, got in zip(pts, batched):
+        assert got == _looped(pt), pt
+
+
+def test_batched_matches_looped_tunable_axis():
+    """TunableParams (select_period/wq) batch as a vmap axis, not a shape."""
+    pts = grid(BASE, select_period=(8, 16), wq_hi=(4, 8))
+    assert len(partition(pts)) == 1          # one compile for the whole grid
+    batched = run_points(pts)
+    for pt, got in zip(pts, batched):
+        assert got == _looped(pt), pt
+
+
+def test_batched_matches_looped_mixed_shapes():
+    """A sweep mixing static shapes (α, r) partitions into several batches
+    and still reassembles results in point order, identical to looped."""
+    pts = grid(BASE, alpha=(0.25, 1.0), r=(0.125, 0.25))
+    assert len(partition(pts)) == 4          # 2 alphas × 2 rs
+    batched = run_points(pts)
+    for pt, got in zip(pts, batched):
+        assert got == _looped(pt), pt
+
+
+def test_partition_groups_only_shape_compatible_points():
+    pts = grid(BASE, seed=range(4))
+    assert len({static_signature(pt) for pt in pts}) == 1
+    assert len(partition(pts)) == 1
+    pts2 = pts + [BASE.replace(n_rows=64)]
+    batches = partition(pts2)
+    assert len(batches) == 2
+    assert batches[0].indices == [0, 1, 2, 3] and batches[1].indices == [4]
+
+
+def test_workload_suites_deterministic():
+    """Same suite + seed → identical points and bit-identical traces."""
+    a, b = suite("trace_zoo", BASE), suite("trace_zoo", BASE)
+    assert a == b
+    for pa, pb in zip(a, b):
+        ta, tb = build_trace(pa), build_trace(pb)
+        for xa, xb in zip(ta, tb):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    # different seeds → different request streams
+    t0 = build_trace(BASE.replace(seed=0))
+    t1 = build_trace(BASE.replace(seed=1))
+    assert not np.array_equal(np.asarray(t0.row), np.asarray(t1.row))
+
+
+def test_stack_traces_rejects_mixed_shapes():
+    with pytest.raises(ValueError):
+        stack_traces([build_trace(BASE), build_trace(BASE.replace(length=12))])
+
+
+def test_results_store_roundtrip_and_baseline(tmp_path):
+    pts = ([BASE.replace(scheme="uncoded", alpha=1.0)]
+           + grid(BASE, seed=(0,), select_period=(8, 16)))
+    rs = run_sweep(pts)
+    rows = rs.rows()
+    assert len(rows) == len(pts)
+    base_cycles = rows[0]["cycles"]
+    for row in rows[1:]:
+        assert row["baseline_cycles"] == base_cycles
+        assert row["speedup"] == round(base_cycles / max(row["cycles"], 1), 4)
+    jpath = rs.to_json(os.path.join(tmp_path, "s.json"), meta={"k": 1})
+    with open(jpath) as f:
+        blob = json.load(f)
+    assert blob["meta"] == {"k": 1} and len(blob["rows"]) == len(pts)
+    cpath = rs.to_csv(os.path.join(tmp_path, "s.csv"))
+    with open(cpath) as f:
+        lines = f.read().strip().splitlines()
+    assert len(lines) == len(pts) + 1
+    assert lines[0].startswith("label,scheme,alpha")
+    # coordinate lookups
+    assert rs.one(scheme="uncoded").result.cycles == base_cycles
+    assert len(rs.by(scheme="scheme_i")) == len(pts) - 1
+
+
+def test_ambiguous_baseline_raises():
+    """Two distinct baselines under one match key must not be silently
+    resolved first-seen; rows() demands a distinguishing match coordinate."""
+    pts = [BASE.replace(scheme="uncoded", select_period=8),
+           BASE.replace(scheme="uncoded", select_period=64, wq_hi=3, wq_lo=0),
+           BASE]
+    rs = run_sweep(pts)
+    r0, r1 = rs.records[0].result.cycles, rs.records[1].result.cycles
+    if r0 != r1:       # tunables differ enough to change completion time
+        with pytest.raises(ValueError, match="ambiguous baseline"):
+            rs.rows()
+    # extending match with the distinguishing coordinate always works
+    rows = rs.rows(match=("trace", "seed", "length", "select_period"))
+    assert rows[0]["speedup"] == 1.0
+
+
+def test_compare_schemes_wrapper_matches_simulate():
+    """The ramulator wrappers (now engine-backed) equal direct simulation."""
+    from repro.sim.ramulator import compare_schemes
+    trace = build_trace(BASE)
+    out = compare_schemes(trace, BASE.n_rows, alpha=0.25, r=0.125,
+                          schemes=("uncoded", "scheme_i"), select_period=16)
+    for s in ("uncoded", "scheme_i"):
+        want = simulate(s, trace, BASE.n_rows, alpha=0.25, r=0.125,
+                        select_period=16)
+        assert out[s] == want, s
