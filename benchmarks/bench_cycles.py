@@ -1,0 +1,120 @@
+"""Cycle-throughput benchmark: reference vs vectorized scheduler.
+
+Evaluates the 16-point ``bench_sweep`` grid (4 trace generators × 2 seeds ×
+2 select periods) through four pipelines:
+
+  * scheduler ∈ {reference, vectorized} — the sequential greedy loops vs the
+    compacted work-proportional builders (see docs/performance.md);
+  * path ∈ {looped, batched} — one ``simulate`` compile+scan per point vs
+    the ``repro.sweep`` engine's single vmapped program (batched also gets a
+    warm repeat, where compile cost is amortized away).
+
+Per-point results must be identical across all four (the scheduler
+equivalence contract, enforced here and in tests/test_scheduler_equiv.py).
+Reports simulated cycles/second and the vectorized-over-reference speedup;
+the headline number is warm batched (the production configuration). Emits
+``experiments/bench/BENCH_cycle_throughput.json``.
+
+``--smoke`` shrinks the grid and skips the looped pipelines — CI runs it on
+every push and fails if the vectorized scheduler is slower than the
+reference (speedup < 1).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Timer, emit, table
+from repro.sim.ramulator import simulate
+from repro.sweep import run_points
+from repro.sweep.engine import clear_caches
+from benchmarks.bench_sweep import make_grid
+
+SCHEDULERS = ("reference", "vectorized")
+
+
+def _points(scheduler: str, length: int, n_rows: int):
+    return [pt.replace(scheduler=scheduler)
+            for pt in make_grid(length=length, n_rows=n_rows)]
+
+
+def _sim_cycles(results) -> int:
+    return sum(r.cycles for r in results)
+
+
+def run(length: int = 48, n_rows: int = 128, smoke: bool = False,
+        target: float = 3.0):
+    if smoke:
+        length, n_rows, target = 16, 64, 1.0
+    rows = []
+    results = {}
+    wall = {}
+    for sched in SCHEDULERS:
+        pts = _points(sched, length, n_rows)
+        traces = None
+        if not smoke:
+            from repro.sweep.workloads import build_trace
+            traces = [build_trace(pt) for pt in pts]
+            with Timer() as t_loop:
+                looped = [simulate(pt.scheme, tr, pt.n_rows, alpha=pt.alpha,
+                                   r=pt.r, n_cycles=pt.resolved_cycles(),
+                                   select_period=pt.select_period,
+                                   wq_hi=pt.wq_hi, wq_lo=pt.wq_lo,
+                                   queue_depth=pt.queue_depth,
+                                   scheduler=pt.scheduler)
+                          for pt, tr in zip(pts, traces)]
+            results[(sched, "looped")] = looped
+            rows.append({"scheduler": sched, "path": "looped",
+                         "wall_s": round(t_loop.s, 2),
+                         "sim_cycles/s": round(_sim_cycles(looped) / t_loop.s, 1)})
+        with Timer() as t_cold:
+            batched = run_points(pts, traces=traces)
+        with Timer() as t_warm:
+            batched2 = run_points(pts, traces=traces)
+        assert batched == batched2, "batched path is nondeterministic"
+        results[(sched, "batched")] = batched
+        wall[sched] = t_warm.s
+        rows.append({"scheduler": sched, "path": "batched (cold)",
+                     "wall_s": round(t_cold.s, 2),
+                     "sim_cycles/s": round(_sim_cycles(batched) / t_cold.s, 1)})
+        rows.append({"scheduler": sched, "path": "batched (warm)",
+                     "wall_s": round(t_warm.s, 2),
+                     "sim_cycles/s": round(_sim_cycles(batched) / t_warm.s, 1)})
+
+    # scheduler equivalence: every pipeline returns the same per-point stats
+    base = results[("reference", "batched")]
+    identical = all(res == base for res in results.values())
+    speedup = wall["reference"] / wall["vectorized"]
+    for r in rows:
+        if r["scheduler"] == "vectorized" and r["path"] == "batched (warm)":
+            r["speedup_vs_reference"] = round(speedup, 2)
+
+    n_pts = len(make_grid(length=length, n_rows=n_rows))
+    print(f"\n== bench_cycles: {n_pts}-point grid, length={length}, "
+          f"n_rows={n_rows}{' [smoke]' if smoke else ''} ==")
+    print(table(rows, ["scheduler", "path", "wall_s", "sim_cycles/s",
+                       "speedup_vs_reference"]))
+    ident = "IDENTICAL" if identical else "MISMATCH"
+    ok = identical and speedup >= target
+    print(f"per-point results across schedulers/paths: {ident}")
+    print(f"vectorized vs reference (batched warm): {speedup:.1f}x "
+          f"(target >={target:g}x) -> {'PASS' if ok else 'FAIL'}")
+    emit("BENCH_cycle_throughput", rows, {
+        "n_points": n_pts, "length": length, "n_rows": n_rows,
+        "smoke": smoke, "identical": identical,
+        "speedup_vectorized_vs_reference": speedup, "target": target,
+    })
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--length", type=int, default=48)
+    ap.add_argument("--n-rows", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid, batched-only, pass bar at 1x (CI)")
+    ap.add_argument("--target", type=float, default=3.0)
+    args = ap.parse_args()
+    clear_caches()
+    ok = run(length=args.length, n_rows=args.n_rows, smoke=args.smoke,
+             target=args.target)
+    raise SystemExit(0 if ok else 1)

@@ -3,10 +3,18 @@
 Public surface:
   codes      — Scheme I/II/III + replication/uncoded baselines (§III)
   state      — MemParams/MemState pytrees (code status table refinement, §IV-A)
-  controller — read/write pattern builders (§IV-B/C)
+  controller — read/write pattern builders (§IV-B/C), work-proportional
+  controller_ref — the sequential reference builders they are verified against
   recoding   — ReCoding unit (§IV-D)
   dynamic    — dynamic coding unit (§IV-E)
   system     — CodedMemorySystem cycle engine + trace-driven run()
+
+The scheduler hot path (pattern builders, write commit, core arbiter, recode
+scan) ships in two interchangeable implementations selected by
+``make_params(scheduler=...)``: ``"vectorized"`` (default, cost proportional
+to queued work) and ``"reference"`` (the paper-flowchart sequential loops).
+Both produce bit-identical plans and simulation results — see
+docs/performance.md.
 """
 from repro.core.codes import (  # noqa: F401
     MAX_OPTS,
@@ -41,6 +49,7 @@ from repro.core.state import (  # noqa: F401
     MemParams,
     MemState,
     TunableParams,
+    derive_geometry,
     init_state,
     make_params,
     make_tunables,

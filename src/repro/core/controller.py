@@ -1,11 +1,12 @@
 """Read/write pattern builders (paper §IV-B, §IV-C; Figs 11-14).
 
-Both builders are *vectorized greedy matchers*: candidates (queued requests)
-are visited oldest-first; each is assigned the cheapest feasible serving
-action this memory cycle, where cost counts the single-port banks the action
+Both builders are *greedy matchers*: candidates (queued requests) are
+visited oldest-first; each is assigned the cheapest feasible serving action
+this memory cycle, where cost counts the single-port banks the action
 consumes. Ties prefer parity-based service over direct reads so that data
-ports remain available for rows without parity coverage — this reproduces the
-paper's best-case chained-decode schedules (§III-B) to within one request.
+ports remain available for rows without parity coverage — this reproduces
+the paper's best-case chained-decode schedules (§III-B) to within one
+request.
 
 Read actions (cost → score = 2*cost + is_direct):
   * FROM_SYM  — the row was already fetched/decoded this cycle (chained
@@ -23,15 +24,55 @@ Write actions:
                 option k (paper Fig 14); sets ``fresh_loc = j+1``; enqueues a
                 recode request. Requires recode-queue space so the parked
                 value can always be drained back.
+
+Scheduling algorithm (the per-cycle hot path)
+---------------------------------------------
+The *reference* builders (``repro.core.controller_ref``) walk **all**
+N = ``n_data × queue_depth`` candidate slots in a ``lax.fori_loop``, and
+each iteration re-scans a ``max_syms``-entry symbol list three times — an
+O(N · max_syms) sequential chain per simulated cycle, paid in full even
+when every queue is empty, that neither ``vmap`` nor sharding can hide.
+
+The builders here compute the **same plans, bit for bit**, but make the
+walk's cost track the work a cycle actually contains:
+
+  * **compacted trip count** — candidates are age-sorted with invalid slots
+    keyed to +inf, and the walk stops after the last valid position
+    (`lax.while_loop`). Idle queues cost zero iterations; the engine's
+    post-drain cycles and the off-duty builder of each read/write cycle
+    (see ``CodedMemorySystem.cycle_fn``) collapse to the fixed setup cost.
+  * **O(1) symbol set** — the chained-decode symbols materialized this
+    cycle live in an (n_data, n_rows) bit-matrix with scalar lookups
+    instead of 3×``max_syms``-element scans per candidate. Set semantics
+    equal the reference's append-list whenever its capacity cannot bind
+    (below).
+  * **hoisted candidate tables** — per-candidate geometry (freshness,
+    parity options, validity, sibling/port ids) is gathered once, outside
+    the walk; each iteration is ~30 scalar ops against it.
+
+The greedy semantics are genuinely sequential only across candidates that
+contend (same ports, or symbols on the same row of one parity group), so
+serving decisions cannot simply be computed independently — but everything
+*around* that chain is vectorized: the core arbiter ranks cores per
+destination queue and scatters once, the write datapath commits via an
+age-rank scatter-max, and the ReCoding unit retires ring entries in
+budget-bounded parallel rounds (see ``system.py`` / ``recoding.py``).
+
+Equivalence contract: plans are bit-identical to the reference whenever
+``max_syms >= n_ports`` (symbols materialized per cycle are bounded by port
+claims, so the reference's symbol-list cap cannot bind; the default
+``max_syms=96`` satisfies this for every supported scheme). When the bound
+fails — or ``make_params(scheduler="reference")`` asks for it — the builders
+transparently fall back to the reference implementation. Randomized and
+end-to-end equivalence is enforced by tests/test_scheduler_equiv.py.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.codes import MAX_OPTS, MAX_SIBS, CodeTables
+from repro.core.codes import MAX_OPTS, CodeTables
 from repro.core.state import MemParams
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
@@ -78,139 +119,6 @@ class ReadPlan(NamedTuple):
     n_degraded: jnp.ndarray  # () int32 — served via parity/symbol reuse
 
 
-def build_read_pattern(
-    p: MemParams,
-    t: JTables,
-    cand_bank: jnp.ndarray,
-    cand_row: jnp.ndarray,
-    cand_age: jnp.ndarray,
-    cand_valid: jnp.ndarray,
-    port_busy: jnp.ndarray,
-    fresh_loc: jnp.ndarray,
-    parity_valid: jnp.ndarray,
-    region_slot: jnp.ndarray,
-) -> ReadPlan:
-    n = cand_bank.shape[0]
-    rs = p.region_size
-    order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
-
-    served0 = jnp.zeros((n,), bool)
-    mode0 = jnp.full((n,), MODE_UNSERVED, jnp.int32)
-    sym_bank0 = jnp.full((p.max_syms,), -1, jnp.int32)
-    sym_row0 = jnp.full((p.max_syms,), -1, jnp.int32)
-
-    def body(k, carry):
-        port_busy, served, mode, sym_bank, sym_row, sym_cnt = carry
-        c = order[k]
-        b = jnp.maximum(cand_bank[c], 0)
-        i = jnp.maximum(cand_row[c], 0)
-        valid = cand_valid[c]
-
-        fl = fresh_loc[b, i]
-        fresh_in_bank = fl == 0
-        slot = region_slot[i // rs]
-        coded = slot >= 0
-        pr = jnp.maximum(slot, 0) * rs + i % rs
-        arange_s = jnp.arange(p.max_syms)
-
-        def has_sym(x):
-            return jnp.any((sym_bank == x) & (sym_row == i) & (arange_s < sym_cnt))
-
-        # --- score every action ------------------------------------------
-        # action 0: from-symbol (chained decode reuse)
-        f_sym = valid & fresh_in_bank & has_sym(b) & bool(p.coalesce)
-        # action 1: direct
-        f_dir = valid & fresh_in_bank & ~port_busy[b]
-        # actions 2..2+MAX_OPTS-1: degraded read via option k
-        opt_scores = []
-        opt_feas = []
-        opt_need0 = []
-        opt_need1 = []
-        for kk in range(MAX_OPTS):
-            j = t.opt_parity[b, kk]
-            jj = jnp.maximum(j, 0)
-            pv = (j >= 0) & coded & parity_valid[jj, pr]
-            pfree = ~port_busy[t.par_port[jj]]
-            s0 = t.opt_sibs[b, kk, 0]
-            s1 = t.opt_sibs[b, kk, 1]
-            sa0 = has_sym(s0) & (s0 >= 0)
-            sa1 = has_sym(s1) & (s1 >= 0)
-            ok0 = (s0 < 0) | sa0 | ~port_busy[jnp.maximum(s0, 0)]
-            ok1 = (s1 < 0) | sa1 | ~port_busy[jnp.maximum(s1, 0)]
-            need0 = (s0 >= 0) & ~sa0
-            need1 = (s1 >= 0) & ~sa1
-            feas = valid & fresh_in_bank & pv & pfree & ok0 & ok1
-            cost = 1 + need0.astype(jnp.int32) + need1.astype(jnp.int32)
-            opt_feas.append(feas)
-            opt_scores.append(2 * cost)
-            opt_need0.append(need0)
-            opt_need1.append(need1)
-        # last action: redirect (fresh value parked in parity fl-1)
-        hold_port = t.par_port[jnp.maximum(fl - 1, 0)]
-        f_rd = valid & (fl > 0) & ~port_busy[hold_port]
-
-        scores = jnp.stack(
-            [jnp.where(f_sym, 0, INF_SCORE), jnp.where(f_dir, 3, INF_SCORE)]
-            + [jnp.where(f, s, INF_SCORE) for f, s in zip(opt_feas, opt_scores)]
-            + [jnp.where(f_rd, 2, INF_SCORE)]
-        )
-        act = jnp.argmin(scores).astype(jnp.int32)
-        found = scores[act] < INF_SCORE
-
-        is_dir = found & (act == 1)
-        is_opt = found & (act >= 2) & (act < 2 + MAX_OPTS)
-        is_rd = found & (act == 2 + MAX_OPTS)
-        k_sel = jnp.clip(act - 2, 0, MAX_OPTS - 1)
-        need0_sel = jnp.stack(opt_need0)[k_sel]
-        need1_sel = jnp.stack(opt_need1)[k_sel]
-        j_sel = t.opt_parity[b, k_sel]
-        sib0 = t.opt_sibs[b, k_sel, 0]
-        sib1 = t.opt_sibs[b, k_sel, 1]
-
-        nop = jnp.int32(p.n_ports)  # dummy sink slot
-        p_dir = jnp.where(is_dir, b, nop)
-        p_par = jnp.where(
-            is_opt, t.par_port[jnp.maximum(j_sel, 0)], jnp.where(is_rd, hold_port, nop)
-        )
-        p_s0 = jnp.where(is_opt & need0_sel, jnp.maximum(sib0, 0), nop)
-        p_s1 = jnp.where(is_opt & need1_sel, jnp.maximum(sib1, 0), nop)
-        port_busy = (
-            port_busy.at[p_dir].set(True)
-            .at[p_par].set(True)
-            .at[p_s0].set(True)
-            .at[p_s1].set(True)
-        )
-        # materialized symbols this cycle (enable chained decodes)
-        def app(sb, sr, cnt, bank, do):
-            do = do & (cnt < p.max_syms)
-            idx = jnp.minimum(cnt, p.max_syms - 1)
-            sb = sb.at[idx].set(jnp.where(do, bank, sb[idx]))
-            sr = sr.at[idx].set(jnp.where(do, i, sr[idx]))
-            return sb, sr, cnt + do.astype(jnp.int32)
-
-        sym_bank, sym_row, sym_cnt = app(sym_bank, sym_row, sym_cnt, b, is_dir | is_opt)
-        sym_bank, sym_row, sym_cnt = app(
-            sym_bank, sym_row, sym_cnt, jnp.maximum(sib0, 0), is_opt & need0_sel
-        )
-        sym_bank, sym_row, sym_cnt = app(
-            sym_bank, sym_row, sym_cnt, jnp.maximum(sib1, 0), is_opt & need1_sel
-        )
-
-        served = served.at[c].set(found)
-        mode = mode.at[c].set(jnp.where(found, act - 0, MODE_UNSERVED))
-        return port_busy, served, mode, sym_bank, sym_row, sym_cnt
-
-    carry = (port_busy, served0, mode0, sym_bank0, sym_row0, jnp.int32(0))
-    port_busy, served, mode, _, _, _ = jax.lax.fori_loop(0, n, body, carry)
-    # mode indices: 0 from_sym, 1 direct, 2..5 options, 6 redirect — map to
-    # public constants (identical numbering by construction).
-    n_served = jnp.sum(served).astype(jnp.int32)
-    n_degraded = jnp.sum(
-        served & ((mode == MODE_FROM_SYM) | ((mode >= MODE_OPT0) & (mode < MODE_REDIRECT)))
-    ).astype(jnp.int32)
-    return ReadPlan(served, mode, port_busy, n_served, n_degraded)
-
-
 class WritePlan(NamedTuple):
     served: jnp.ndarray       # (N,) bool
     mode: jnp.ndarray         # (N,) int32
@@ -223,20 +131,154 @@ class WritePlan(NamedTuple):
     rc_valid: jnp.ndarray
     n_served: jnp.ndarray
     n_parked: jnp.ndarray
+    n_rc_dropped: jnp.ndarray  # () int32 — recode requests lost to a full ring
 
 
-def _rc_push(rc_bank, rc_row, rc_valid, b, i, do):
-    """Push (b, i) into the recode ring unless present; returns ok flag."""
-    dup = jnp.any(rc_valid & (rc_bank == b) & (rc_row == i))
-    free = ~rc_valid
-    has_free = jnp.any(free)
-    idx = jnp.argmax(free)  # first free slot
-    do_ins = do & ~dup & has_free
-    rc_bank = rc_bank.at[idx].set(jnp.where(do_ins, b, rc_bank[idx]))
-    rc_row = rc_row.at[idx].set(jnp.where(do_ins, i, rc_row[idx]))
-    rc_valid = rc_valid.at[idx].set(jnp.where(do_ins, True, rc_valid[idx]))
-    ok = dup | has_free
-    return rc_bank, rc_row, rc_valid, ok
+def _use_reference(p: MemParams) -> bool:
+    return p.scheduler == "reference" or p.max_syms < p.n_ports
+
+
+def _walk_bounds(cand_age, cand_valid):
+    """Age order + trip bound covering every valid candidate.
+
+    Invalid slots sort to the back via an +inf key; the walk only needs to
+    reach the last position holding a valid candidate (they act as no-ops in
+    the body, exactly as in the reference loop, so skipping the tail is
+    unobservable)."""
+    n = cand_age.shape[0]
+    order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
+    last = jnp.max(jnp.where(cand_valid[order],
+                             jnp.arange(n, dtype=jnp.int32), -1))
+    return order, last + 1
+
+
+def build_read_pattern(
+    p: MemParams,
+    t: JTables,
+    cand_bank: jnp.ndarray,
+    cand_row: jnp.ndarray,
+    cand_age: jnp.ndarray,
+    cand_valid: jnp.ndarray,
+    port_busy: jnp.ndarray,
+    fresh_loc: jnp.ndarray,
+    parity_valid: jnp.ndarray,
+    region_slot: jnp.ndarray,
+) -> ReadPlan:
+    if _use_reference(p):
+        from repro.core import controller_ref
+        return controller_ref.build_read_pattern_ref(
+            p, t, cand_bank, cand_row, cand_age, cand_valid, port_busy,
+            fresh_loc, parity_valid, region_slot)
+
+    import jax
+
+    n = cand_bank.shape[0]
+    rs = p.region_size
+    order, n_trips = _walk_bounds(cand_age, cand_valid)
+    nop = jnp.int32(p.n_ports)
+
+    # ---- per-candidate tables, gathered once (read state is loop-invariant)
+    b = jnp.maximum(cand_bank, 0)
+    i = jnp.maximum(cand_row, 0)
+    fl = fresh_loc[b, i]
+    fresh_in_bank = fl == 0
+    slot = region_slot[i // rs]
+    coded = slot >= 0
+    pr = jnp.maximum(slot, 0) * rs + i % rs
+    hold_port = t.par_port[jnp.maximum(fl - 1, 0)]
+    # a negative hold_port (scheme with no parities) wraps the reference's
+    # REDIRECT gather/claim onto the dummy sink slot — point it there
+    hold_idx = jnp.where(hold_port < 0, nop, hold_port)
+    optj = t.opt_parity[b]                    # (N, K)
+    optjj = jnp.maximum(optj, 0)
+    opt_pv = (optj >= 0) & coded[:, None] & parity_valid[optjj, pr[:, None]]
+    opt_pport = t.par_port[optjj]
+    s0 = t.opt_sibs[b][:, :, 0]
+    s1 = t.opt_sibs[b][:, :, 1]
+    s0c = jnp.maximum(s0, 0)
+    s1c = jnp.maximum(s1, 0)
+    may_serve = cand_valid & fresh_in_bank
+    can_rd = cand_valid & (fl > 0)
+    opt_may = may_serve[:, None] & opt_pv
+
+    served0 = jnp.zeros((n,), bool)
+    mode0 = jnp.full((n,), MODE_UNSERVED, jnp.int32)
+    sym0 = jnp.zeros((p.n_data, p.n_rows), bool)   # materialized this cycle
+
+    def cond(carry):
+        return carry[0] < n_trips
+
+    def body(carry):
+        k, port_busy, sym, served, mode = carry
+        c = order[k]
+        bc = b[c]
+        ic = i[c]
+
+        # --- score every action ------------------------------------------
+        f_sym = may_serve[c] & sym[bc, ic] & bool(p.coalesce)
+        f_dir = may_serve[c] & ~port_busy[bc]
+        s0r, s1r = s0[c], s1[c]                  # (K,)
+        s0cr, s1cr = s0c[c], s1c[c]
+        sa0 = sym[s0cr, ic] & (s0r >= 0)
+        sa1 = sym[s1cr, ic] & (s1r >= 0)
+        ok0 = (s0r < 0) | sa0 | ~port_busy[s0cr]
+        ok1 = (s1r < 0) | sa1 | ~port_busy[s1cr]
+        need0 = (s0r >= 0) & ~sa0
+        need1 = (s1r >= 0) & ~sa1
+        feas = opt_may[c] & ~port_busy[opt_pport[c]] & ok0 & ok1
+        cost = 1 + need0.astype(jnp.int32) + need1.astype(jnp.int32)
+        f_rd = can_rd[c] & ~port_busy[hold_idx[c]]
+        scores = jnp.concatenate([
+            jnp.where(f_sym, 0, INF_SCORE)[None],
+            jnp.where(f_dir, 3, INF_SCORE)[None],
+            jnp.where(feas, 2 * cost, INF_SCORE),
+            jnp.where(f_rd, 2, INF_SCORE)[None],
+        ])
+        act = jnp.argmin(scores).astype(jnp.int32)
+        found = scores[act] < INF_SCORE
+
+        is_dir = found & (act == 1)
+        is_opt = found & (act >= 2) & (act < 2 + MAX_OPTS)
+        is_rd = found & (act == 2 + MAX_OPTS)
+        k_sel = jnp.clip(act - 2, 0, MAX_OPTS - 1)
+        need0_sel = need0[k_sel]
+        need1_sel = need1[k_sel]
+        sib0 = s0cr[k_sel]
+        sib1 = s1cr[k_sel]
+
+        # --- claim ports (the nop scatters mark the sink, as the ref does)
+        p_dir = jnp.where(is_dir, bc, nop)
+        p_par = jnp.where(is_opt, opt_pport[c, k_sel],
+                          jnp.where(is_rd, hold_idx[c], nop))
+        p_s0 = jnp.where(is_opt & need0_sel, sib0, nop)
+        p_s1 = jnp.where(is_opt & need1_sel, sib1, nop)
+        port_busy = (port_busy.at[p_dir].set(True).at[p_par].set(True)
+                     .at[p_s0].set(True).at[p_s1].set(True))
+
+        # --- materialize symbols (set semantics; cap can't bind, see module
+        # docstring)
+        oob = jnp.int32(p.n_data)
+        sym = sym.at[jnp.where(is_dir | is_opt, bc, oob), ic].set(
+            True, mode="drop")
+        sym = sym.at[jnp.where(is_opt & need0_sel, sib0, oob), ic].set(
+            True, mode="drop")
+        sym = sym.at[jnp.where(is_opt & need1_sel, sib1, oob), ic].set(
+            True, mode="drop")
+
+        served = served.at[c].set(found)
+        mode = mode.at[c].set(jnp.where(found, act, MODE_UNSERVED))
+        return k + 1, port_busy, sym, served, mode
+
+    carry = (jnp.int32(0), port_busy, sym0, served0, mode0)
+    _, port_busy, _, served, mode = jax.lax.while_loop(cond, body, carry)
+    # the reference's no-op scatters leave the sink slot marked busy even
+    # when it never reaches a valid candidate
+    port_busy = port_busy.at[p.n_ports].set(True)
+    n_served = jnp.sum(served).astype(jnp.int32)
+    n_degraded = jnp.sum(
+        served & ((mode == MODE_FROM_SYM) | ((mode >= MODE_OPT0) & (mode < MODE_REDIRECT)))
+    ).astype(jnp.int32)
+    return ReadPlan(served, mode, port_busy, n_served, n_degraded)
 
 
 def build_write_pattern(
@@ -255,91 +297,122 @@ def build_write_pattern(
     rc_row: jnp.ndarray,
     rc_valid: jnp.ndarray,
 ) -> WritePlan:
+    if _use_reference(p):
+        from repro.core import controller_ref
+        return controller_ref.build_write_pattern_ref(
+            p, t, cand_bank, cand_row, cand_age, cand_valid, port_busy,
+            fresh_loc, parity_valid, region_slot, parked_count, rc_bank,
+            rc_row, rc_valid)
+
+    import jax
+
     n = cand_bank.shape[0]
     rs = p.region_size
-    order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
+    order, n_trips = _walk_bounds(cand_age, cand_valid)
+    nop = jnp.int32(p.n_ports)
+
+    # ---- per-candidate tables, gathered once ---------------------------
+    b = jnp.maximum(cand_bank, 0)
+    i = jnp.maximum(cand_row, 0)
+    region = i // rs
+    slot = region_slot[region]
+    coded = slot >= 0
+    pr = jnp.maximum(slot, 0) * rs + i % rs
+    optj = t.opt_parity[b]                    # (N, K)
+    optjj = jnp.maximum(optj, 0)
+    opt_pport = t.par_port[optjj]
+    mem = t.par_members[optjj]                # (N, K, MAX_SIBS+1)
+    memc = jnp.maximum(mem, 0)
+    park_possible = cand_valid[:, None] & (optj >= 0) & coded[:, None]
+    need_rc_dir = coded & (t.opt_n[b] > 0)
+    park_base = 2 + jnp.arange(MAX_OPTS, dtype=jnp.int32)
+
     served0 = jnp.zeros((n,), bool)
     mode0 = jnp.full((n,), WMODE_UNSERVED, jnp.int32)
 
-    def body(k, carry):
-        (port_busy, served, mode, fresh_loc, parity_valid, parked_count,
-         rc_bank, rc_row, rc_valid) = carry
+    def cond(carry):
+        return carry[0] < n_trips
+
+    def body(carry):
+        (k, port_busy, served, mode, fresh_loc, parity_valid, parked_count,
+         rc_bank, rc_row, rc_valid, dropped) = carry
         c = order[k]
-        b = jnp.maximum(cand_bank[c], 0)
-        i = jnp.maximum(cand_row[c], 0)
-        valid = cand_valid[c]
-        region = i // rs
-        slot = region_slot[region]
-        coded = slot >= 0
-        pr = jnp.maximum(slot, 0) * rs + i % rs
-        fl = fresh_loc[b, i]
+        bc = b[c]
+        ic = i[c]
+        flc = fresh_loc[bc, ic]
         rc_space = jnp.any(~rc_valid)
 
-        # direct write (score 1)
-        f_dir = valid & ~port_busy[b]
-        # park into parity option k (score 2 + k): requires coded region,
-        # parity port free, slot row not already parked by a *different*
-        # member, recode space.
-        park_feas = []
-        for kk in range(MAX_OPTS):
-            j = t.opt_parity[b, kk]
-            jj = jnp.maximum(j, 0)
-            pfree = ~port_busy[t.par_port[jj]]
-            # another member of j parked here?
-            occ = jnp.zeros((), bool)
-            for mm in range(MAX_SIBS + 1):
-                m = t.par_members[jj, mm]
-                occ = occ | ((m >= 0) & (m != b) & (fresh_loc[jnp.maximum(m, 0), i] == jj + 1))
-            park_feas.append(valid & (j >= 0) & coded & pfree & ~occ & rc_space)
-        scores = jnp.stack(
-            [jnp.where(f_dir, 1, INF_SCORE)]
-            + [jnp.where(f, 2 + kk, INF_SCORE) for kk, f in enumerate(park_feas)]
-        )
+        # --- score direct + park options ---------------------------------
+        f_dir = cand_valid[c] & ~port_busy[bc]
+        occ = jnp.any(
+            (mem[c] >= 0) & (mem[c] != bc)
+            & (fresh_loc[memc[c], ic] == optjj[c][:, None] + 1), axis=1)
+        park_feas = (park_possible[c] & ~port_busy[opt_pport[c]] & ~occ
+                     & rc_space)
+        scores = jnp.concatenate([
+            jnp.where(f_dir, 1, INF_SCORE)[None],
+            jnp.where(park_feas, park_base, INF_SCORE),
+        ])
         act = jnp.argmin(scores).astype(jnp.int32)
         found = scores[act] < INF_SCORE
         is_dir = found & (act == 0)
         is_park = found & (act >= 1)
         k_sel = jnp.clip(act - 1, 0, MAX_OPTS - 1)
-        j_sel = jnp.maximum(t.opt_parity[b, k_sel], 0)
+        j_sel = optjj[c, k_sel]
 
-        nop = jnp.int32(p.n_ports)
-        port_busy = port_busy.at[jnp.where(is_dir, b, nop)].set(True)
-        port_busy = port_busy.at[jnp.where(is_park, t.par_port[j_sel], nop)].set(True)
+        port_busy = port_busy.at[jnp.where(is_dir, bc, nop)].set(True)
+        port_busy = port_busy.at[
+            jnp.where(is_park, opt_pport[c, k_sel], nop)].set(True)
 
-        # freshness bookkeeping -------------------------------------------
-        was_parked = fl > 0
-        # direct: fresh -> bank; all covering parities of b become stale
-        new_fl = jnp.where(is_dir, 0, jnp.where(is_park, j_sel + 1, fl))
-        fresh_loc = fresh_loc.at[b, i].set(new_fl)
-        # parked_count delta for this row's region
+        # --- freshness bookkeeping ---------------------------------------
+        was_parked = flc > 0
+        new_fl = jnp.where(is_dir, 0, jnp.where(is_park, j_sel + 1, flc))
+        fresh_loc = fresh_loc.at[bc, ic].set(new_fl)
         delta = (
             is_park.astype(jnp.int32) * (~was_parked).astype(jnp.int32)
             - is_dir.astype(jnp.int32) * was_parked.astype(jnp.int32)
         )
-        parked_count = parked_count.at[region].add(delta)
+        parked_count = parked_count.at[region[c]].add(delta)
         # parity invalidation
-        for kk in range(MAX_OPTS):
-            j = t.opt_parity[b, kk]
-            jj = jnp.maximum(j, 0)
-            inv = (j >= 0) & coded & (is_dir | (is_park & (jj == j_sel)))
-            parity_valid = parity_valid.at[jj, pr].set(
-                jnp.where(inv, False, parity_valid[jj, pr])
-            )
+        inv = ((optj[c] >= 0) & coded[c]
+               & (is_dir | (is_park & (optjj[c] == j_sel))))
+        parity_valid = parity_valid.at[
+            jnp.where(inv, optjj[c], parity_valid.shape[0]), pr[c]].set(
+                False, mode="drop")
         # recode request so freshness is eventually restored
-        need_rc = (is_dir & coded & (t.opt_n[b] > 0)) | is_park
-        rc_bank, rc_row, rc_valid, _ = _rc_push(rc_bank, rc_row, rc_valid, b, i, need_rc)
+        need_rc = (is_dir & need_rc_dir[c]) | is_park
+        rc_bank, rc_row, rc_valid, ok = _rc_push(
+            rc_bank, rc_row, rc_valid, bc, ic, need_rc)
+        dropped = dropped + (need_rc & ~ok).astype(jnp.int32)
 
         served = served.at[c].set(found)
         mode = mode.at[c].set(jnp.where(found, act, WMODE_UNSERVED))
-        return (port_busy, served, mode, fresh_loc, parity_valid, parked_count,
-                rc_bank, rc_row, rc_valid)
+        return (k + 1, port_busy, served, mode, fresh_loc, parity_valid,
+                parked_count, rc_bank, rc_row, rc_valid, dropped)
 
-    carry = (port_busy, served0, mode0, fresh_loc, parity_valid, parked_count,
-             rc_bank, rc_row, rc_valid)
-    out = jax.lax.fori_loop(0, n, body, carry)
-    (port_busy, served, mode, fresh_loc, parity_valid, parked_count,
-     rc_bank, rc_row, rc_valid) = out
+    carry = (jnp.int32(0), port_busy, served0, mode0, fresh_loc,
+             parity_valid, parked_count, rc_bank, rc_row, rc_valid,
+             jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, carry)
+    (_, port_busy, served, mode, fresh_loc, parity_valid, parked_count,
+     rc_bank, rc_row, rc_valid, dropped) = out
+    port_busy = port_busy.at[p.n_ports].set(True)   # ref's no-op scatters
     n_served = jnp.sum(served).astype(jnp.int32)
     n_parked = jnp.sum(served & (mode >= WMODE_PARK0)).astype(jnp.int32)
     return WritePlan(served, mode, port_busy, fresh_loc, parity_valid,
-                     parked_count, rc_bank, rc_row, rc_valid, n_served, n_parked)
+                     parked_count, rc_bank, rc_row, rc_valid, n_served,
+                     n_parked, dropped)
+
+
+def _rc_push(rc_bank, rc_row, rc_valid, b, i, do):
+    """Push (b, i) into the recode ring unless present; returns ok flag."""
+    dup = jnp.any(rc_valid & (rc_bank == b) & (rc_row == i))
+    free = ~rc_valid
+    has_free = jnp.any(free)
+    idx = jnp.argmax(free)  # first free slot
+    do_ins = do & ~dup & has_free
+    rc_bank = rc_bank.at[idx].set(jnp.where(do_ins, b, rc_bank[idx]))
+    rc_row = rc_row.at[idx].set(jnp.where(do_ins, i, rc_row[idx]))
+    rc_valid = rc_valid.at[idx].set(jnp.where(do_ins, True, rc_valid[idx]))
+    ok = dup | has_free
+    return rc_bank, rc_row, rc_valid, ok

@@ -1,0 +1,272 @@
+"""Reference pattern builders: the sequential greedy matchers (paper Fig 11).
+
+These are the original ``lax.fori_loop`` implementations — one iteration per
+candidate, oldest first, scatters in every step. They define the scheduling
+semantics; ``repro.core.controller`` re-implements them as compacted,
+work-proportional builders that must produce bit-identical plans (see
+tests/test_scheduler_equiv.py and docs/performance.md for the equivalence
+contract). Select them end-to-end with ``make_params(scheduler="reference")``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codes import MAX_OPTS, MAX_SIBS
+from repro.core.state import MemParams
+
+from repro.core.controller import (  # noqa: F401  (shared constants/plans)
+    INF_SCORE,
+    INT32_MAX,
+    JTables,
+    MODE_FROM_SYM,
+    MODE_OPT0,
+    MODE_REDIRECT,
+    MODE_UNSERVED,
+    ReadPlan,
+    WMODE_PARK0,
+    WMODE_UNSERVED,
+    WritePlan,
+    _rc_push,
+)
+
+
+def build_read_pattern_ref(
+    p: MemParams,
+    t: JTables,
+    cand_bank: jnp.ndarray,
+    cand_row: jnp.ndarray,
+    cand_age: jnp.ndarray,
+    cand_valid: jnp.ndarray,
+    port_busy: jnp.ndarray,
+    fresh_loc: jnp.ndarray,
+    parity_valid: jnp.ndarray,
+    region_slot: jnp.ndarray,
+) -> ReadPlan:
+    n = cand_bank.shape[0]
+    rs = p.region_size
+    order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
+
+    served0 = jnp.zeros((n,), bool)
+    mode0 = jnp.full((n,), MODE_UNSERVED, jnp.int32)
+    sym_bank0 = jnp.full((p.max_syms,), -1, jnp.int32)
+    sym_row0 = jnp.full((p.max_syms,), -1, jnp.int32)
+
+    def body(k, carry):
+        port_busy, served, mode, sym_bank, sym_row, sym_cnt = carry
+        c = order[k]
+        b = jnp.maximum(cand_bank[c], 0)
+        i = jnp.maximum(cand_row[c], 0)
+        valid = cand_valid[c]
+
+        fl = fresh_loc[b, i]
+        fresh_in_bank = fl == 0
+        slot = region_slot[i // rs]
+        coded = slot >= 0
+        pr = jnp.maximum(slot, 0) * rs + i % rs
+        arange_s = jnp.arange(p.max_syms)
+
+        def has_sym(x):
+            return jnp.any((sym_bank == x) & (sym_row == i) & (arange_s < sym_cnt))
+
+        # --- score every action ------------------------------------------
+        # action 0: from-symbol (chained decode reuse)
+        f_sym = valid & fresh_in_bank & has_sym(b) & bool(p.coalesce)
+        # action 1: direct
+        f_dir = valid & fresh_in_bank & ~port_busy[b]
+        # actions 2..2+MAX_OPTS-1: degraded read via option k
+        opt_scores = []
+        opt_feas = []
+        opt_need0 = []
+        opt_need1 = []
+        for kk in range(MAX_OPTS):
+            j = t.opt_parity[b, kk]
+            jj = jnp.maximum(j, 0)
+            pv = (j >= 0) & coded & parity_valid[jj, pr]
+            pfree = ~port_busy[t.par_port[jj]]
+            s0 = t.opt_sibs[b, kk, 0]
+            s1 = t.opt_sibs[b, kk, 1]
+            sa0 = has_sym(s0) & (s0 >= 0)
+            sa1 = has_sym(s1) & (s1 >= 0)
+            ok0 = (s0 < 0) | sa0 | ~port_busy[jnp.maximum(s0, 0)]
+            ok1 = (s1 < 0) | sa1 | ~port_busy[jnp.maximum(s1, 0)]
+            need0 = (s0 >= 0) & ~sa0
+            need1 = (s1 >= 0) & ~sa1
+            feas = valid & fresh_in_bank & pv & pfree & ok0 & ok1
+            cost = 1 + need0.astype(jnp.int32) + need1.astype(jnp.int32)
+            opt_feas.append(feas)
+            opt_scores.append(2 * cost)
+            opt_need0.append(need0)
+            opt_need1.append(need1)
+        # last action: redirect (fresh value parked in parity fl-1)
+        hold_port = t.par_port[jnp.maximum(fl - 1, 0)]
+        f_rd = valid & (fl > 0) & ~port_busy[hold_port]
+
+        scores = jnp.stack(
+            [jnp.where(f_sym, 0, INF_SCORE), jnp.where(f_dir, 3, INF_SCORE)]
+            + [jnp.where(f, s, INF_SCORE) for f, s in zip(opt_feas, opt_scores)]
+            + [jnp.where(f_rd, 2, INF_SCORE)]
+        )
+        act = jnp.argmin(scores).astype(jnp.int32)
+        found = scores[act] < INF_SCORE
+
+        is_dir = found & (act == 1)
+        is_opt = found & (act >= 2) & (act < 2 + MAX_OPTS)
+        is_rd = found & (act == 2 + MAX_OPTS)
+        k_sel = jnp.clip(act - 2, 0, MAX_OPTS - 1)
+        need0_sel = jnp.stack(opt_need0)[k_sel]
+        need1_sel = jnp.stack(opt_need1)[k_sel]
+        j_sel = t.opt_parity[b, k_sel]
+        sib0 = t.opt_sibs[b, k_sel, 0]
+        sib1 = t.opt_sibs[b, k_sel, 1]
+
+        nop = jnp.int32(p.n_ports)  # dummy sink slot
+        p_dir = jnp.where(is_dir, b, nop)
+        p_par = jnp.where(
+            is_opt, t.par_port[jnp.maximum(j_sel, 0)], jnp.where(is_rd, hold_port, nop)
+        )
+        p_s0 = jnp.where(is_opt & need0_sel, jnp.maximum(sib0, 0), nop)
+        p_s1 = jnp.where(is_opt & need1_sel, jnp.maximum(sib1, 0), nop)
+        port_busy = (
+            port_busy.at[p_dir].set(True)
+            .at[p_par].set(True)
+            .at[p_s0].set(True)
+            .at[p_s1].set(True)
+        )
+        # materialized symbols this cycle (enable chained decodes)
+        def app(sb, sr, cnt, bank, do):
+            do = do & (cnt < p.max_syms)
+            idx = jnp.minimum(cnt, p.max_syms - 1)
+            sb = sb.at[idx].set(jnp.where(do, bank, sb[idx]))
+            sr = sr.at[idx].set(jnp.where(do, i, sr[idx]))
+            return sb, sr, cnt + do.astype(jnp.int32)
+
+        sym_bank, sym_row, sym_cnt = app(sym_bank, sym_row, sym_cnt, b, is_dir | is_opt)
+        sym_bank, sym_row, sym_cnt = app(
+            sym_bank, sym_row, sym_cnt, jnp.maximum(sib0, 0), is_opt & need0_sel
+        )
+        sym_bank, sym_row, sym_cnt = app(
+            sym_bank, sym_row, sym_cnt, jnp.maximum(sib1, 0), is_opt & need1_sel
+        )
+
+        served = served.at[c].set(found)
+        mode = mode.at[c].set(jnp.where(found, act - 0, MODE_UNSERVED))
+        return port_busy, served, mode, sym_bank, sym_row, sym_cnt
+
+    carry = (port_busy, served0, mode0, sym_bank0, sym_row0, jnp.int32(0))
+    port_busy, served, mode, _, _, _ = jax.lax.fori_loop(0, n, body, carry)
+    # mode indices: 0 from_sym, 1 direct, 2..5 options, 6 redirect — map to
+    # public constants (identical numbering by construction).
+    n_served = jnp.sum(served).astype(jnp.int32)
+    n_degraded = jnp.sum(
+        served & ((mode == MODE_FROM_SYM) | ((mode >= MODE_OPT0) & (mode < MODE_REDIRECT)))
+    ).astype(jnp.int32)
+    return ReadPlan(served, mode, port_busy, n_served, n_degraded)
+
+
+def build_write_pattern_ref(
+    p: MemParams,
+    t: JTables,
+    cand_bank: jnp.ndarray,
+    cand_row: jnp.ndarray,
+    cand_age: jnp.ndarray,
+    cand_valid: jnp.ndarray,
+    port_busy: jnp.ndarray,
+    fresh_loc: jnp.ndarray,
+    parity_valid: jnp.ndarray,
+    region_slot: jnp.ndarray,
+    parked_count: jnp.ndarray,
+    rc_bank: jnp.ndarray,
+    rc_row: jnp.ndarray,
+    rc_valid: jnp.ndarray,
+) -> WritePlan:
+    n = cand_bank.shape[0]
+    rs = p.region_size
+    order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
+    served0 = jnp.zeros((n,), bool)
+    mode0 = jnp.full((n,), WMODE_UNSERVED, jnp.int32)
+
+    def body(k, carry):
+        (port_busy, served, mode, fresh_loc, parity_valid, parked_count,
+         rc_bank, rc_row, rc_valid, dropped) = carry
+        c = order[k]
+        b = jnp.maximum(cand_bank[c], 0)
+        i = jnp.maximum(cand_row[c], 0)
+        valid = cand_valid[c]
+        region = i // rs
+        slot = region_slot[region]
+        coded = slot >= 0
+        pr = jnp.maximum(slot, 0) * rs + i % rs
+        fl = fresh_loc[b, i]
+        rc_space = jnp.any(~rc_valid)
+
+        # direct write (score 1)
+        f_dir = valid & ~port_busy[b]
+        # park into parity option k (score 2 + k): requires coded region,
+        # parity port free, slot row not already parked by a *different*
+        # member, recode space.
+        park_feas = []
+        for kk in range(MAX_OPTS):
+            j = t.opt_parity[b, kk]
+            jj = jnp.maximum(j, 0)
+            pfree = ~port_busy[t.par_port[jj]]
+            # another member of j parked here?
+            occ = jnp.zeros((), bool)
+            for mm in range(MAX_SIBS + 1):
+                m = t.par_members[jj, mm]
+                occ = occ | ((m >= 0) & (m != b) & (fresh_loc[jnp.maximum(m, 0), i] == jj + 1))
+            park_feas.append(valid & (j >= 0) & coded & pfree & ~occ & rc_space)
+        scores = jnp.stack(
+            [jnp.where(f_dir, 1, INF_SCORE)]
+            + [jnp.where(f, 2 + kk, INF_SCORE) for kk, f in enumerate(park_feas)]
+        )
+        act = jnp.argmin(scores).astype(jnp.int32)
+        found = scores[act] < INF_SCORE
+        is_dir = found & (act == 0)
+        is_park = found & (act >= 1)
+        k_sel = jnp.clip(act - 1, 0, MAX_OPTS - 1)
+        j_sel = jnp.maximum(t.opt_parity[b, k_sel], 0)
+
+        nop = jnp.int32(p.n_ports)
+        port_busy = port_busy.at[jnp.where(is_dir, b, nop)].set(True)
+        port_busy = port_busy.at[jnp.where(is_park, t.par_port[j_sel], nop)].set(True)
+
+        # freshness bookkeeping -------------------------------------------
+        was_parked = fl > 0
+        # direct: fresh -> bank; all covering parities of b become stale
+        new_fl = jnp.where(is_dir, 0, jnp.where(is_park, j_sel + 1, fl))
+        fresh_loc = fresh_loc.at[b, i].set(new_fl)
+        # parked_count delta for this row's region
+        delta = (
+            is_park.astype(jnp.int32) * (~was_parked).astype(jnp.int32)
+            - is_dir.astype(jnp.int32) * was_parked.astype(jnp.int32)
+        )
+        parked_count = parked_count.at[region].add(delta)
+        # parity invalidation
+        for kk in range(MAX_OPTS):
+            j = t.opt_parity[b, kk]
+            jj = jnp.maximum(j, 0)
+            inv = (j >= 0) & coded & (is_dir | (is_park & (jj == j_sel)))
+            parity_valid = parity_valid.at[jj, pr].set(
+                jnp.where(inv, False, parity_valid[jj, pr])
+            )
+        # recode request so freshness is eventually restored
+        need_rc = (is_dir & coded & (t.opt_n[b] > 0)) | is_park
+        rc_bank, rc_row, rc_valid, ok = _rc_push(rc_bank, rc_row, rc_valid, b, i, need_rc)
+        dropped = dropped + (need_rc & ~ok).astype(jnp.int32)
+
+        served = served.at[c].set(found)
+        mode = mode.at[c].set(jnp.where(found, act, WMODE_UNSERVED))
+        return (port_busy, served, mode, fresh_loc, parity_valid, parked_count,
+                rc_bank, rc_row, rc_valid, dropped)
+
+    carry = (port_busy, served0, mode0, fresh_loc, parity_valid, parked_count,
+             rc_bank, rc_row, rc_valid, jnp.int32(0))
+    out = jax.lax.fori_loop(0, n, body, carry)
+    (port_busy, served, mode, fresh_loc, parity_valid, parked_count,
+     rc_bank, rc_row, rc_valid, dropped) = out
+    n_served = jnp.sum(served).astype(jnp.int32)
+    n_parked = jnp.sum(served & (mode >= WMODE_PARK0)).astype(jnp.int32)
+    return WritePlan(served, mode, port_busy, fresh_loc, parity_valid,
+                     parked_count, rc_bank, rc_row, rc_valid, n_served,
+                     n_parked, dropped)

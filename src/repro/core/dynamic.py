@@ -125,7 +125,11 @@ def dynamic_step(
     evict_counts = jnp.where(coded & (parked_count == 0), access_count, INT32_MAX)
     victim = jnp.argmin(evict_counts).astype(jnp.int32)
     victim_count = evict_counts[victim]
-    free_slot_mask = slot_region < 0
+    # slots at or past the point's traced budget are never offered as free:
+    # a sweep can allocate parity state once at the grid's max ⌊α/r⌋ and let
+    # each point use only its own budget (repro.sweep batches α this way)
+    budget = jnp.minimum(tn.n_slots_active, p.n_slots)
+    free_slot_mask = (slot_region < 0) & (jnp.arange(p.n_slots) < budget)
     has_free = jnp.any(free_slot_mask)
     free_slot = jnp.argmax(free_slot_mask).astype(jnp.int32)
 

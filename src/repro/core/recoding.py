@@ -53,6 +53,142 @@ def recode_step(
     banks_data: jnp.ndarray,
     parity_data: jnp.ndarray,
 ) -> RecodeOut:
+    """Retire up to ``recode_budget`` ring entries whose ports are all idle.
+
+    Vectorized as a *cursor walk*: only retirements mutate shared state
+    (moot removals clear just the entry's own slot), so the sequential scan
+    collapses to at most ``recode_budget + 1`` trips. Each trip evaluates
+    every remaining entry's work set and port needs in parallel under the
+    current state, retires the first feasible one past the cursor, and
+    removes the moot entries the scan passed over on the way (their view is
+    unchanged within a trip — nothing between two retirements mutates
+    state). Retirement order, port charges, budget accounting and the ring
+    left behind are bit-identical to the sequential scan
+    (``recode_step_ref``); an empty or workless ring costs one trip.
+    """
+    if p.scheduler == "reference":
+        return recode_step_ref(p, t, port_busy, fresh_loc, parity_valid,
+                               parked_count, rc_bank, rc_row, rc_valid,
+                               region_slot, banks_data, parity_data)
+    rs = p.region_size
+    cap = rc_valid.shape[0]
+    b = jnp.maximum(rc_bank, 0)                 # (E,)
+    i = jnp.maximum(rc_row, 0)
+    region = i // rs
+    slot = region_slot[region]
+    coded = slot >= 0
+    pr = jnp.maximum(slot, 0) * rs + i % rs
+    optj = t.opt_parity[b]                      # (E, K)
+    optjj = jnp.maximum(optj, 0)
+    opt_pport = t.par_port[optjj]
+    mem = t.par_members[optjj]                  # (E, K, MAX_SIBS+1)
+    memc = jnp.maximum(mem, 0)
+    epos = jnp.arange(cap, dtype=jnp.int32)
+    nsink = jnp.int32(p.n_ports)     # masked-index slot: never busy/claimed
+    oob_j = jnp.int32(parity_valid.shape[0])
+
+    def cond(carry):
+        cursor, budget = carry[0], carry[1]
+        return (budget > 0) & (cursor < cap)
+
+    def body(carry):
+        (cursor, budget, port_busy, fresh_loc, parity_valid, parked_count,
+         rc_valid, banks_data, parity_data) = carry
+        # ---- per-entry work set under the current state ------------------
+        fl = fresh_loc[b, i]
+        parked = fl > 0
+        holder = jnp.maximum(fl - 1, 0)
+        blocked = jnp.any(
+            (mem >= 0) & (mem != b[:, None, None])
+            & (fresh_loc[memc, i[:, None, None]] == optjj[:, :, None] + 1),
+            axis=2)                                              # (E, K)
+        need = (optj >= 0) & coded[:, None] & (
+            ~parity_valid[optjj, pr[:, None]] | parked[:, None])
+        recompute = need & ~blocked
+        blocked_l = need & blocked
+        has_work = parked | jnp.any(recompute, axis=1)
+        pending = rc_valid & (epos > cursor)
+        work = pending & coded & has_work
+        moot = pending & ~(coded & has_work)
+
+        # needed ports as an (E, 2 + K + K*(MAX_SIBS+1)) index matrix;
+        # masked entries point at the never-busy sink gather slot
+        rc_k = recompute & work[:, None]
+        needed_idx = jnp.concatenate([
+            jnp.where(work, b, nsink)[:, None],
+            jnp.where(work & parked, t.par_port[holder], nsink)[:, None],
+            jnp.where(rc_k, opt_pport, nsink),
+            jnp.where(rc_k[:, :, None] & (mem >= 0), memc,
+                      nsink).reshape(cap, -1),
+        ], axis=1)
+        pb_ext = jnp.concatenate([port_busy[: p.n_ports],
+                                  jnp.zeros((1,), bool)])
+        tf = work & ~jnp.any(pb_ext[needed_idx], axis=1)
+
+        # ---- retire the first feasible entry past the cursor -------------
+        any_tf = jnp.any(tf)
+        e = jnp.argmax(tf).astype(jnp.int32)     # first True (0 if none)
+        seg_end = jnp.where(any_tf, e, cap)
+        # moot entries the scan walked past are dropped (budget still > 0
+        # at their turn — cond guarantees it, and nothing in the segment
+        # between two retirements mutates their inputs)
+        rc_valid = rc_valid & ~(moot & (epos < seg_end))
+        rc_valid = rc_valid.at[e].set(jnp.where(any_tf, False, rc_valid[e]))
+
+        idxs = needed_idx[e]
+        port_busy = port_busy.at[
+            jnp.where(any_tf & (idxs < p.n_ports), idxs,
+                      p.n_ports + 1)].set(True, mode="drop")
+        eb, ei, epr = b[e], i[e], pr[e]
+        e_parked = parked[e]
+        restored = jnp.where(any_tf & e_parked,
+                             parity_data[holder[e], epr], banks_data[eb, ei])
+        banks_data = banks_data.at[eb, ei].set(restored)
+        fresh_loc = fresh_loc.at[eb, ei].set(
+            jnp.where(any_tf, 0, fresh_loc[eb, ei]))
+        parked_count = parked_count.at[region[e]].add(
+            -(any_tf & e_parked).astype(jnp.int32))
+        do_k = recompute[e] & any_tf                       # (K,)
+        inv_k = blocked_l[e] & any_tf & e_parked
+        val = jnp.zeros((MAX_OPTS,), jnp.int32)
+        for mm in range(MAX_SIBS + 1):
+            mv = mem[e, :, mm]
+            val = val ^ jnp.where(mv >= 0, banks_data[memc[e, :, mm], ei], 0)
+        parity_data = parity_data.at[
+            jnp.where(do_k, optjj[e], oob_j), epr].set(val, mode="drop")
+        parity_valid = parity_valid.at[
+            jnp.where(do_k | inv_k, optjj[e], oob_j), epr].set(
+                do_k, mode="drop")
+
+        cursor = jnp.where(any_tf, e, jnp.int32(cap))
+        budget = budget - any_tf.astype(jnp.int32)
+        return (cursor, budget, port_busy, fresh_loc, parity_valid,
+                parked_count, rc_valid, banks_data, parity_data)
+
+    carry = (jnp.int32(-1), jnp.int32(p.recode_budget), port_busy, fresh_loc,
+             parity_valid, parked_count, rc_valid, banks_data, parity_data)
+    out = jax.lax.while_loop(cond, body, carry)
+    (_, budget, port_busy, fresh_loc, parity_valid, parked_count, rc_valid,
+     banks_data, parity_data) = out
+    return RecodeOut(port_busy, fresh_loc, parity_valid, parked_count,
+                     rc_valid, banks_data, parity_data,
+                     jnp.int32(p.recode_budget) - budget)
+
+
+def recode_step_ref(
+    p: MemParams,
+    t: JTables,
+    port_busy: jnp.ndarray,
+    fresh_loc: jnp.ndarray,
+    parity_valid: jnp.ndarray,
+    parked_count: jnp.ndarray,
+    rc_bank: jnp.ndarray,
+    rc_row: jnp.ndarray,
+    rc_valid: jnp.ndarray,
+    region_slot: jnp.ndarray,
+    banks_data: jnp.ndarray,
+    parity_data: jnp.ndarray,
+) -> RecodeOut:
     rs = p.region_size
     nop = jnp.int32(p.n_ports)
 

@@ -23,7 +23,7 @@ Dynamic coding (§IV-E): rows are grouped into ``n_regions`` regions of
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,6 +57,8 @@ class MemParams(NamedTuple):
     recode_budget: int    # max recode entries retired per cycle
     coalesce: bool        # allow FROM_SYM / chained-decode reuse (off for the
                           # uncoded Ramulator-like baseline)
+    scheduler: str = "vectorized"  # "vectorized" (compacted-walk builders) or
+                                   # "reference" (the sequential greedy loops)
 
 
 class TunableParams(NamedTuple):
@@ -70,6 +72,9 @@ class TunableParams(NamedTuple):
     select_period: jnp.ndarray  # () int32 — T, dynamic re-selection period
     wq_hi: jnp.ndarray          # () int32 — write-drain hysteresis thresholds
     wq_lo: jnp.ndarray          # () int32
+    n_slots_active: jnp.ndarray  # () int32 — parity-slot budget this point may
+                                 # use (≤ MemParams.n_slots; lets an α axis
+                                 # batch over one max-α allocation)
 
 
 def make_tunables(
@@ -77,12 +82,26 @@ def make_tunables(
     select_period: int = 512,
     wq_hi: int = 8,
     wq_lo: int = 2,
+    n_slots_active: int = jnp.iinfo(jnp.int32).max,
 ) -> TunableParams:
     return TunableParams(
         select_period=jnp.int32(max(int(select_period), 1)),
         wq_hi=jnp.int32(min(int(wq_hi), queue_depth - 1)),
         wq_lo=jnp.int32(wq_lo),
+        n_slots_active=jnp.int32(n_slots_active),
     )
+
+
+def derive_geometry(n_rows: int, alpha: float, r: float):
+    """(region_size, n_regions, n_slots) implied by an (n_rows, α, r) point.
+
+    Shared by ``make_params`` and ``repro.sweep.grid.static_signature`` so the
+    sweep layer can reason about which points share compiled shapes.
+    """
+    region_size = max(1, int(round(n_rows * r)))
+    n_regions = -(-n_rows // region_size)
+    n_slots = min(int(np.floor(alpha / r + 1e-9)), n_regions)
+    return region_size, n_regions, max(n_slots, 1)
 
 
 def make_params(
@@ -96,11 +115,22 @@ def make_params(
     encode_rows_per_cycle: int = 64,
     recode_budget: int = 4,
     coalesce: bool = True,
+    scheduler: str = "vectorized",
+    n_slots_alloc: Optional[int] = None,
 ) -> MemParams:
-    region_size = max(1, int(round(n_rows * r)))
-    n_regions = -(-n_rows // region_size)
-    n_slots = min(int(np.floor(alpha / r + 1e-9)), n_regions)
-    n_slots = max(n_slots, 1)
+    region_size, n_regions, n_slots = derive_geometry(n_rows, alpha, r)
+    if n_slots_alloc is not None:
+        # Over-allocate parity state (a sweep batches several α budgets over
+        # one compiled shape); the per-point budget rides in
+        # ``TunableParams.n_slots_active`` and masks the extra slots off.
+        if n_slots_alloc < n_slots:
+            raise ValueError(
+                f"n_slots_alloc={n_slots_alloc} < derived n_slots={n_slots}")
+        if (n_slots_alloc >= n_regions) != (n_slots >= n_regions):
+            raise ValueError(
+                "n_slots_alloc must not change full-coverage status "
+                f"(alloc {n_slots_alloc}, derived {n_slots}, regions {n_regions})")
+        n_slots = n_slots_alloc
     # §IV-E says "up to α/r − 1 regions" with one reserved for staging, but the
     # paper's own experiment discussion (§V-C: "⌊α/r⌋ = 2 … we can select 2
     # regions" at α=0.1, r=0.05) uses ⌊α/r⌋ active regions; we follow §V-C and
@@ -121,6 +151,7 @@ def make_params(
         encode_cycles=max(1, region_size // encode_rows_per_cycle),
         recode_budget=recode_budget,
         coalesce=coalesce if tables.n_parities > 0 else False,
+        scheduler=scheduler,
     )
 
 
@@ -166,6 +197,7 @@ class MemState(NamedTuple):
     read_latency_sum: jnp.ndarray  # () int64-ish int32
     write_latency_sum: jnp.ndarray
     stall_cycles: jnp.ndarray   # () int32 (core-stall events)
+    rc_dropped: jnp.ndarray     # () int32 (recode requests lost to a full ring)
 
 
 def init_state(p: MemParams) -> MemState:
@@ -213,4 +245,5 @@ def init_state(p: MemParams) -> MemState:
         read_latency_sum=z,
         write_latency_sum=z,
         stall_cycles=z,
+        rc_dropped=z,
     )

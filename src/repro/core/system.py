@@ -81,6 +81,7 @@ class SimResult(NamedTuple):
     stall_cycles: int
     avg_read_latency: float
     avg_write_latency: float
+    rc_dropped: int = 0   # recode requests lost to a full ring (write path)
 
 
 class CodedMemorySystem:
@@ -111,6 +112,84 @@ class CodedMemorySystem:
 
     # --------------------------------------------------------------- arbiter
     def _arbiter(self, st: SimState, trace: Trace):
+        """Push each core's pending request into its destination queue.
+
+        Vectorized: cores are ranked within their destination (bank, r/w)
+        queue by core index — the same service order the sequential loop
+        walks — and all pushes land in one scatter. The first ``rank`` free
+        slots of a queue go to the first ``rank`` ranked cores, so slot
+        assignment, full-queue stalls and pointer advances are bit-identical
+        to the reference loop (``_arbiter_ref``).
+        """
+        if self.p.scheduler == "reference":
+            return self._arbiter_ref(st, trace)
+        p = self.p
+        m = st.mem
+        tlen = trace.bank.shape[1]
+        rs = p.region_size
+        nc = self.n_cores
+        car = jnp.arange(nc)
+
+        pos = st.core_ptr
+        in_range = pos < tlen
+        pc = jnp.minimum(pos, tlen - 1)
+        v = trace.valid[car, pc] & in_range
+        b = jnp.maximum(trace.bank[car, pc], 0)
+        i = jnp.maximum(trace.row[car, pc], 0)
+        isw = trace.is_write[car, pc]
+        payload = trace.data[car, pc]
+
+        older = jnp.tril(jnp.ones((nc, nc), bool), k=-1)
+        same_bank = b[:, None] == b[None, :]
+        want_r = v & ~isw
+        want_w = v & isw
+        rank_r = jnp.sum(same_bank & older & want_r[None, :], axis=1)
+        rank_w = jnp.sum(same_bank & older & want_w[None, :], axis=1)
+        free_r = jnp.sum(~m.rq_valid, axis=1)
+        free_w = jnp.sum(~m.wq_valid, axis=1)
+        full = jnp.where(isw, rank_w >= free_w[b], rank_r >= free_r[b])
+        push = v & ~full
+        pr_ = push & ~isw
+        pw_ = push & isw
+
+        def rank_to_slot(valid):
+            """(n_data, D) queue validity → map[bank, rank] = rank-th free slot."""
+            d = valid.shape[1]
+            fr = ~valid
+            free_rank = jnp.cumsum(fr, axis=1) - 1
+            return jnp.full((p.n_data, d), d, jnp.int32).at[
+                jnp.arange(p.n_data)[:, None],
+                jnp.where(fr, free_rank, d)
+            ].set(jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32),
+                                   (p.n_data, d)), mode="drop")
+
+        dq = p.queue_depth
+        slot_r = rank_to_slot(m.rq_valid)[b, jnp.minimum(rank_r, dq - 1)]
+        slot_w = rank_to_slot(m.wq_valid)[b, jnp.minimum(rank_w, dq - 1)]
+        oob = jnp.int32(p.n_data)
+        br = jnp.where(pr_, b, oob)
+        bw = jnp.where(pw_, b, oob)
+        cyc = jnp.broadcast_to(m.cycle, (nc,))
+        rq_row = m.rq_row.at[br, slot_r].set(i, mode="drop")
+        rq_age = m.rq_age.at[br, slot_r].set(cyc, mode="drop")
+        rq_valid = m.rq_valid.at[br, slot_r].set(True, mode="drop")
+        wq_row = m.wq_row.at[bw, slot_w].set(i, mode="drop")
+        wq_age = m.wq_age.at[bw, slot_w].set(cyc, mode="drop")
+        wq_valid = m.wq_valid.at[bw, slot_w].set(True, mode="drop")
+        wq_data = m.wq_data.at[bw, slot_w].set(payload, mode="drop")
+        access_count = m.access_count.at[
+            jnp.where(push, i // rs, p.n_regions)].add(1, mode="drop")
+        stalls = m.stall_cycles + jnp.sum(v & full).astype(jnp.int32)
+        ptr = pos + (in_range & (push | ~v)).astype(jnp.int32)
+
+        mem = m._replace(
+            rq_row=rq_row, rq_age=rq_age, rq_valid=rq_valid, wq_row=wq_row,
+            wq_age=wq_age, wq_valid=wq_valid, wq_data=wq_data,
+            access_count=access_count, stall_cycles=stalls,
+        )
+        return st._replace(mem=mem, core_ptr=ptr)
+
+    def _arbiter_ref(self, st: SimState, trace: Trace):
         p = self.p
         tlen = trace.bank.shape[1]
         rs = p.region_size
@@ -189,6 +268,79 @@ class CodedMemorySystem:
         )
         return jnp.where(plan.served, val, 0)
 
+    # ------------------------------------------------------- write datapath
+    def _commit_writes(self, m: MemState, plan: ctl.WritePlan, cb, ci_, ca,
+                       cv, cd):
+        """Commit served write payloads in age order (last write wins).
+
+        Vectorized: rather than walking candidates in a fori_loop, the
+        age-order position of each candidate is scatter-maxed into its target
+        cell; only the positionally-latest (youngest) served write per cell
+        lands — the same value the sequential walk leaves behind.
+        """
+        p, t = self.p, self.t
+        rs = p.region_size
+        b = jnp.maximum(cb, 0)
+        i = jnp.maximum(ci_, 0)
+        if p.scheduler == "reference":
+            order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
+
+            def commit(k, carry):
+                banks_data, parity_data, golden = carry
+                c = order[k]
+                bc = b[c]
+                ic = i[c]
+                served = plan.served[c]
+                mode = plan.mode[c]
+                slot = m.region_slot[ic // rs]
+                pr = jnp.maximum(slot, 0) * rs + ic % rs
+                is_dir = served & (mode == ctl.WMODE_DIRECT)
+                is_park = served & (mode >= ctl.WMODE_PARK0)
+                kk = jnp.clip(mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
+                j = jnp.maximum(t.opt_parity[bc, kk], 0)
+                banks_data = banks_data.at[bc, ic].set(
+                    jnp.where(is_dir, cd[c], banks_data[bc, ic])
+                )
+                parity_data = parity_data.at[j, pr].set(
+                    jnp.where(is_park, cd[c], parity_data[j, pr])
+                )
+                golden = golden.at[bc, ic].set(
+                    jnp.where(served, cd[c], golden[bc, ic]))
+                return banks_data, parity_data, golden
+
+            return jax.lax.fori_loop(
+                0, cb.shape[0], commit, (m.banks_data, m.parity_data, m.golden)
+            )
+
+        n = cb.shape[0]
+        order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
+        pos = jnp.zeros((n,), jnp.int32).at[order].set(
+            jnp.arange(n, dtype=jnp.int32))
+        slot = m.region_slot[i // rs]
+        pr = jnp.maximum(slot, 0) * rs + i % rs
+        kk = jnp.clip(plan.mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
+        j = jnp.maximum(t.opt_parity[b, kk], 0)
+        is_dir = plan.served & (plan.mode == ctl.WMODE_DIRECT)
+        is_park = plan.served & (plan.mode >= ctl.WMODE_PARK0)
+        oob_b = jnp.int32(p.n_data)
+        oob_j = jnp.int32(m.parity_data.shape[0])
+
+        def winners(mask, rows, cols, shape, oob):
+            best = jnp.full(shape, -1, jnp.int32).at[
+                jnp.where(mask, rows, oob), cols].max(pos, mode="drop")
+            return mask & (best[rows, cols] == pos)
+
+        win_d = winners(is_dir, b, i, m.banks_data.shape, oob_b)
+        banks_data = m.banks_data.at[
+            jnp.where(win_d, b, oob_b), i].set(cd, mode="drop")
+        win_p = winners(is_park, j, pr, m.parity_data.shape, oob_j)
+        parity_data = m.parity_data.at[
+            jnp.where(win_p, j, oob_j), pr].set(cd, mode="drop")
+        win_g = winners(plan.served, b, i, m.golden.shape, oob_b)
+        golden = m.golden.at[
+            jnp.where(win_g, b, oob_b), i].set(cd, mode="drop")
+        return banks_data, parity_data, golden
+
     # ------------------------------------------------------------- one cycle
     @functools.partial(jax.jit, static_argnums=0)
     def cycle_fn(self, st: SimState, trace: Trace,
@@ -215,11 +367,11 @@ class CodedMemorySystem:
         wm = jnp.where(m.write_mode, wq_occ > tn.wq_lo, wq_occ >= tn.wq_hi)
         serve_writes = (wm | (~any_r & any_w)) & any_w
 
-        def do_reads(m):
+        def do_reads(m, active=True):
             cb = bank_ids
             ci_ = m.rq_row.reshape(-1)
             ca = m.rq_age.reshape(-1)
-            cv = m.rq_valid.reshape(-1)
+            cv = m.rq_valid.reshape(-1) & active
             plan = ctl.build_read_pattern(
                 p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
                 m.region_slot,
@@ -235,45 +387,18 @@ class CodedMemorySystem:
             out = CycleOut(plan.served, cb, ci_, vals, plan.n_served)
             return m, plan.port_busy, out
 
-        def do_writes(m):
+        def do_writes(m, active=True):
             cb = bank_ids
             ci_ = m.wq_row.reshape(-1)
             ca = m.wq_age.reshape(-1)
-            cv = m.wq_valid.reshape(-1)
+            cv = m.wq_valid.reshape(-1) & active
             cd = m.wq_data.reshape(-1)
             plan = ctl.build_write_pattern(
                 p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
                 m.region_slot, m.parked_count, m.rc_bank, m.rc_row, m.rc_valid,
             )
-            # commit payloads in age order (memory order: last write wins)
-            order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
-            rs = p.region_size
-
-            def commit(k, carry):
-                banks_data, parity_data, golden = carry
-                c = order[k]
-                b = jnp.maximum(cb[c], 0)
-                i = jnp.maximum(ci_[c], 0)
-                served = plan.served[c]
-                mode = plan.mode[c]
-                slot = m.region_slot[i // rs]
-                pr = jnp.maximum(slot, 0) * rs + i % rs
-                is_dir = served & (mode == ctl.WMODE_DIRECT)
-                is_park = served & (mode >= ctl.WMODE_PARK0)
-                kk = jnp.clip(mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
-                j = jnp.maximum(t.opt_parity[b, kk], 0)
-                banks_data = banks_data.at[b, i].set(
-                    jnp.where(is_dir, cd[c], banks_data[b, i])
-                )
-                parity_data = parity_data.at[j, pr].set(
-                    jnp.where(is_park, cd[c], parity_data[j, pr])
-                )
-                golden = golden.at[b, i].set(jnp.where(served, cd[c], golden[b, i]))
-                return banks_data, parity_data, golden
-
-            banks_data, parity_data, golden = jax.lax.fori_loop(
-                0, n_cand, commit, (m.banks_data, m.parity_data, m.golden)
-            )
+            banks_data, parity_data, golden = self._commit_writes(
+                m, plan, cb, ci_, ca, cv, cd)
             lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
             m = m._replace(
                 wq_valid=m.wq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
@@ -283,6 +408,7 @@ class CodedMemorySystem:
                 rc_bank=plan.rc_bank, rc_row=plan.rc_row, rc_valid=plan.rc_valid,
                 served_writes=m.served_writes + plan.n_served,
                 parked_writes=m.parked_writes + plan.n_parked,
+                rc_dropped=m.rc_dropped + plan.n_rc_dropped,
                 write_latency_sum=m.write_latency_sum + lat,
                 banks_data=banks_data, parity_data=parity_data, golden=golden,
             )
@@ -292,7 +418,22 @@ class CodedMemorySystem:
             )
             return m, plan.port_busy, out
 
-        m, port_busy, out = jax.lax.cond(serve_writes, do_writes, do_reads, m)
+        if p.scheduler == "reference":
+            m, port_busy, out = jax.lax.cond(serve_writes, do_writes,
+                                             do_reads, m)
+        else:
+            # Under vmap, ``cond`` evaluates both branches for every point
+            # anyway — at the full cost of each builder's walk over loaded
+            # queues. Instead run both branches with the off-duty builder's
+            # candidates masked invalid (its compacted walk exits
+            # immediately) and select per point. The selected branch saw
+            # exactly the candidates ``cond`` would hand it, so results are
+            # bit-identical; the discarded branch is discarded either way.
+            m_r, pb_r, out_r = do_reads(m, active=~serve_writes)
+            m_w, pb_w, out_w = do_writes(m, active=serve_writes)
+            pick = lambda w, r: jax.tree.map(                  # noqa: E731
+                lambda x, y: jnp.where(serve_writes, x, y), w, r)
+            m, port_busy, out = pick(m_w, m_r), pick(pb_w, pb_r), pick(out_w, out_r)
         m = m._replace(write_mode=wm)
 
         # recoding unit uses leftover ports
@@ -361,4 +502,5 @@ class CodedMemorySystem:
             stall_cycles=int(m.stall_cycles),
             avg_read_latency=float(m.read_latency_sum) / max(sr, 1),
             avg_write_latency=float(m.write_latency_sum) / max(sw, 1),
+            rc_dropped=int(m.rc_dropped),
         )

@@ -33,16 +33,24 @@ from repro.core.state import TunableParams, make_params, make_tunables
 from repro.core.system import CodedMemorySystem, SimResult, SimState, Trace
 from repro.launch.mesh import make_sweep_mesh
 from repro.sweep import workloads
-from repro.sweep.grid import (GridBatch, SweepPoint, partition,
-                              static_signature)
+from repro.sweep.grid import (GridBatch, SweepPoint, batch_slot_alloc,
+                              partition, static_signature)
 
-# One system (= one set of jit caches) per static signature, so re-running a
-# suite — or growing it along batchable axes — never recompiles.
+# One system (= one set of jit caches) per (static signature, slot
+# allocation), so re-running a suite — or growing it along batchable axes —
+# never recompiles.
 _SYSTEMS: Dict[Tuple, CodedMemorySystem] = {}
 
 
-def system_for(pt: SweepPoint) -> CodedMemorySystem:
-    sig = static_signature(pt)
+def system_for(pt: SweepPoint,
+               n_slots_alloc: Optional[int] = None) -> CodedMemorySystem:
+    # static_signature deliberately drops α below full coverage, so the
+    # cache must key on the actual slot allocation — two α values must not
+    # share an exactly-allocated system (an explicit alloc equal to the
+    # derived count builds identical params, so one key covers both)
+    sig = (static_signature(pt),
+           n_slots_alloc if n_slots_alloc is not None
+           else pt.derived_slots()[2])
     sys = _SYSTEMS.get(sig)
     if sys is None:
         tables = get_tables(pt.scheme, n_data=pt.n_data)
@@ -50,7 +58,9 @@ def system_for(pt: SweepPoint) -> CodedMemorySystem:
                              queue_depth=pt.queue_depth, coalesce=pt.coalesce,
                              recode_cap=pt.recode_cap, max_syms=pt.max_syms,
                              encode_rows_per_cycle=pt.encode_rows_per_cycle,
-                             recode_budget=pt.recode_budget)
+                             recode_budget=pt.recode_budget,
+                             scheduler=pt.scheduler,
+                             n_slots_alloc=n_slots_alloc)
         sys = CodedMemorySystem(tables, params, n_cores=pt.n_cores)
         _SYSTEMS[sig] = sys
     return sys
@@ -60,7 +70,9 @@ def stack_tunables(points: Sequence[SweepPoint],
                    queue_depth: int) -> TunableParams:
     tns = [make_tunables(queue_depth=queue_depth,
                          select_period=pt.select_period,
-                         wq_hi=pt.wq_hi, wq_lo=pt.wq_lo) for pt in points]
+                         wq_hi=pt.wq_hi, wq_lo=pt.wq_lo,
+                         n_slots_active=pt.derived_slots()[2])
+           for pt in points]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *tns)
 
 
@@ -132,6 +144,7 @@ def summarize_batch(st_b: SimState) -> List[SimResult]:
             stall_cycles=int(m.stall_cycles[b]),
             avg_read_latency=float(m.read_latency_sum[b]) / max(sr, 1),
             avg_write_latency=float(m.write_latency_sum[b]) / max(sw, 1),
+            rc_dropped=int(m.rc_dropped[b]),
         ))
     return out
 
@@ -140,7 +153,7 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
               shard: bool = True) -> List[SimResult]:
     """Evaluate one shape-compatible batch as a single device program."""
     pts = batch.points
-    sys = system_for(pts[0])
+    sys = system_for(pts[0], n_slots_alloc=batch_slot_alloc(pts))
     if traces is None:
         traces = [workloads.build_trace(pt) for pt in pts]
     for pt, tr in zip(pts, traces):

@@ -12,6 +12,15 @@ two kinds of coordinates:
     ``wq_hi``. Points differing *only* here can share one compiled program
     with the point index as a ``vmap`` batch axis.
 
+α sits in between: it only enters the simulator through the parity-slot
+count ``n_slots = ⌊α/r⌋``, which *is* a shape — but a maskable one. Points
+that share every structural coordinate (scheme, rows, ``r``-derived region
+geometry) and are all below full coverage get their parity state allocated
+at the **largest** ``n_slots`` in the group, and each point's own budget
+rides along as the traced ``TunableParams.n_slots_active``. An α×r grid
+therefore partitions per-``r`` (and full-coverage α=1 separately), not per
+(α, r) pair.
+
 ``partition`` groups points by their static signature so the engine runs a
 whole sweep as ``len(partition(points))`` device programs instead of
 ``len(points)``.
@@ -22,6 +31,7 @@ import dataclasses
 import itertools
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core.state import derive_geometry
 from repro.core.system import drain_bound
 
 
@@ -56,8 +66,18 @@ class SweepPoint:
     select_period: int = 256
     wq_hi: int = 8
     wq_lo: int = 2
+    # ---- static: scheduler implementation (vectorized | reference)
+    scheduler: str = "vectorized"
     # free-form tag carried through to result rows
     label: str = ""
+
+    def derived_slots(self) -> Tuple[int, int, int]:
+        """(region_size, n_regions, n_slots) this point's α/r imply."""
+        return derive_geometry(self.n_rows, self.alpha, self.r)
+
+    def full_coverage(self) -> bool:
+        _, n_regions, n_slots = self.derived_slots()
+        return n_slots >= n_regions
 
     def replace(self, **kw) -> "SweepPoint":
         return dataclasses.replace(self, **kw)
@@ -69,11 +89,27 @@ class SweepPoint:
 
 
 def static_signature(pt: SweepPoint) -> Tuple:
-    """Hashable key of everything that forces a distinct compiled program."""
-    return (pt.scheme, pt.n_data, pt.n_rows, pt.alpha, pt.r, pt.queue_depth,
-            pt.coalesce, pt.recode_cap, pt.max_syms, pt.encode_rows_per_cycle,
-            pt.recode_budget, pt.n_cores, pt.n_banks, pt.length,
-            pt.resolved_cycles())
+    """Hashable key of everything that forces a distinct compiled program.
+
+    α is deliberately *not* part of the key below full coverage: its only
+    shape effect, ``n_slots``, is allocated at the group max and masked per
+    point (``TunableParams.n_slots_active``). Full-coverage points (static
+    identity region map, dynamic unit disabled) keep their own key.
+    """
+    region_size, n_regions, n_slots = pt.derived_slots()
+    full = n_slots >= n_regions
+    return (pt.scheme, pt.n_data, pt.n_rows, region_size, n_regions, full,
+            pt.queue_depth, pt.coalesce, pt.recode_cap, pt.max_syms,
+            pt.encode_rows_per_cycle, pt.recode_budget, pt.scheduler,
+            pt.n_cores, pt.n_banks, pt.length, pt.resolved_cycles())
+
+
+def batch_slot_alloc(points: Sequence[SweepPoint]) -> Optional[int]:
+    """Parity-slot allocation for one shape-compatible batch: ``None`` for
+    full-coverage groups (exact identity allocation), else the group max."""
+    if points[0].full_coverage():
+        return None
+    return max(pt.derived_slots()[2] for pt in points)
 
 
 @dataclasses.dataclass

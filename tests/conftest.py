@@ -10,7 +10,21 @@ import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+# Default geometries for coded-memory-system tests. The cycle engine is
+# compile-dominated on CPU, so tests should share these small shapes (and
+# thereby jit caches) rather than inventing their own: n_rows/lengths large
+# enough to exercise multi-region dynamic coding, small enough that the fast
+# tier stays fast. Heavier sweeps belong behind ``-m slow``.
+SMALL_N_ROWS = 64
+SMALL_TRACE_LEN = 32
+
 
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def small_geom():
+    """(n_rows, trace_length) for quick end-to-end memory-system tests."""
+    return SMALL_N_ROWS, SMALL_TRACE_LEN

@@ -55,10 +55,11 @@ def test_reads_return_committed_values(scheme):
     assert int(st.done_cycle) >= 0           # workload drained
 
 
-def test_coded_beats_uncoded_on_banded_trace():
-    spec = TraceSpec(n_cores=8, length=48, n_banks=8, n_rows=128, seed=0)
+def test_coded_beats_uncoded_on_banded_trace(small_geom):
+    n_rows, length = small_geom
+    spec = TraceSpec(n_cores=8, length=length, n_banks=8, n_rows=n_rows, seed=0)
     trace = banded_trace(spec)
-    res = compare_schemes(trace, 128, alpha=1.0, r=0.25, n_cycles=160,
+    res = compare_schemes(trace, n_rows, alpha=1.0, r=0.25, n_cycles=160,
                           schemes=("uncoded", "scheme_i"))
     assert res["uncoded"].completed and res["scheme_i"].completed
     assert res["scheme_i"].cycles < res["uncoded"].cycles
@@ -84,14 +85,14 @@ def test_replication_baseline_runs():
 
 def test_dynamic_coding_switches():
     """Shallow parities (α<1): hot regions get encoded; switches happen."""
-    spec = TraceSpec(n_cores=8, length=64, n_rows=256, seed=4, write_frac=0.1)
+    spec = TraceSpec(n_cores=8, length=48, n_rows=128, seed=4, write_frac=0.1)
     trace = banded_trace(spec)
-    res = simulate("scheme_i", trace, 256, alpha=0.25, r=0.125,
-                   select_period=32, n_cycles=320)
+    res = simulate("scheme_i", trace, 128, alpha=0.25, r=0.125,
+                   select_period=32, n_cycles=256)
     assert res.completed
     assert res.switches >= 1                 # dynamic encoder engaged
-    res_full = simulate("scheme_i", trace, 256, alpha=1.0, r=0.125,
-                        select_period=32, n_cycles=320)
+    res_full = simulate("scheme_i", trace, 128, alpha=1.0, r=0.125,
+                        select_period=32, n_cycles=256)
     assert res_full.switches == 0            # α=1: full coverage, no switching
 
 
