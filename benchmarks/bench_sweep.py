@@ -1,13 +1,16 @@
 """Looped-vs-batched sweep benchmark (the ``repro.sweep`` deliverable).
 
-Evaluates one 16-point (trace-shape × seed × tunable) grid two ways:
+Evaluates one 16-point α×r design grid (2 α × 2 r × 2 traces × 2 seeds)
+two ways:
 
   * **looped** — the pre-sweep-engine path: one ``repro.sim.ramulator
     .simulate`` call per point, each paying a fresh jit trace + compile +
     ``lax.scan`` launch (a fresh ``CodedMemorySystem`` per call, exactly as
     the figure benchmarks used to run);
-  * **batched** — ``repro.sweep.engine``: every point shares one static
-    shape, so the whole grid is ONE compile + ONE vmapped scan.
+  * **batched** — ``repro.sweep.engine``: α and r are masked axes, so the
+    whole α×r grid shares one static shape — ONE compile + ONE vmapped
+    scan (region/parity state allocated at the group-max geometry, each
+    point's own geometry traced).
 
 Reports wall-clock, simulated-cycles/second, the speedup (target ≥5×), and
 verifies the per-point results are numerically identical.
@@ -19,20 +22,26 @@ import time
 
 from benchmarks.common import Timer, emit, table
 from repro.sim.ramulator import simulate
-from repro.sweep import SweepPoint, grid, run_points
+from repro.sweep import SweepPoint, grid, partition, run_points
 from repro.sweep.workloads import build_trace
 
 
 def make_grid(length: int = 48, n_rows: int = 128) -> list:
-    """16 shape-compatible points: 4 trace generators × 2 seeds × 2 periods."""
-    base = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=n_rows,
-                      n_cores=8, n_banks=8, length=length, write_frac=0.3)
-    return grid(base, trace=("banded", "split", "uniform", "zipf"),
-                seed=(0, 1), select_period=(32, 64))
+    """16 shape-compatible points: an α×r grid (all sub-full-coverage, so
+    the r and α axes both mask into ONE compiled program per scheme)."""
+    base = SweepPoint(scheme="scheme_i", n_rows=n_rows,
+                      n_cores=8, n_banks=8, length=length, write_frac=0.3,
+                      select_period=32)
+    return grid(base, alpha=(0.125, 0.25), r=(0.0625, 0.125),
+                trace=("banded", "split"), seed=(0, 1))
 
 
 def run(length: int = 48, n_rows: int = 128):
     pts = make_grid(length=length, n_rows=n_rows)
+    n_batches = len(partition(pts))
+    # the α×r acceptance bar: at most one program per (scheme, full-coverage)
+    # group — this grid is one scheme, all sub-coverage, so exactly one
+    assert n_batches == 1, f"α×r grid split into {n_batches} compiled programs"
     n_cycles = pts[0].resolved_cycles()
     traces = [build_trace(pt) for pt in pts]
 
@@ -71,6 +80,7 @@ def run(length: int = 48, n_rows: int = 128):
           f"{'PASS' if ok else 'FAIL'}")
     emit("bench_sweep", rows, {
         "n_points": len(pts), "n_cycles": n_cycles, "identical": not mismatches,
+        "n_compiled_programs": n_batches,
         "speedup_cold": t_loop.s / t_cold.s, "speedup_warm": t_loop.s / t_warm.s,
     })
     return ok

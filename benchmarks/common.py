@@ -6,16 +6,37 @@ import os
 import time
 from typing import Any, Dict, List
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ART_DIR = os.path.join(REPO_ROOT, "experiments", "bench")
 
 
-def emit(name: str, rows: List[Dict[str, Any]], meta: Dict[str, Any] = None):
+def emit(name: str, rows: List[Dict[str, Any]], meta: Dict[str, Any] = None,
+         root: bool = False):
+    """Write ``experiments/bench/<name>.json``; with ``root=True`` also a
+    repo-root copy (the per-commit perf trajectory collects root-level
+    ``BENCH_*.json`` files — without the copy it records nothing)."""
     os.makedirs(ART_DIR, exist_ok=True)
+    blob = {"name": name, "meta": meta or {}, "rows": rows}
     path = os.path.join(ART_DIR, f"{name}.json")
     with open(path, "w") as f:
-        json.dump({"name": name, "meta": meta or {}, "rows": rows}, f,
-                  indent=1, default=float)
+        json.dump(blob, f, indent=1, default=float)
+    if root:
+        with open(os.path.join(REPO_ROOT, f"{name}.json"), "w") as f:
+            json.dump(blob, f, indent=1, default=float)
     return path
+
+
+def mirror_bench_to_root():
+    """Copy every ``experiments/bench/BENCH_*.json`` to the repo root (the
+    trajectory contract: perf artifacts live at the root, named BENCH_*)."""
+    import glob
+    import shutil
+    copied = []
+    for src in sorted(glob.glob(os.path.join(ART_DIR, "BENCH_*.json"))):
+        dst = os.path.join(REPO_ROOT, os.path.basename(src))
+        shutil.copyfile(src, dst)
+        copied.append(dst)
+    return copied
 
 
 def table(rows: List[Dict[str, Any]], cols: List[str]) -> str:

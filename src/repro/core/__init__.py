@@ -49,10 +49,14 @@ from repro.core.state import (  # noqa: F401
     MemParams,
     MemState,
     TunableParams,
+    active_geometry,
     derive_geometry,
     init_state,
     make_params,
     make_tunables,
+    wide_add,
+    wide_total,
+    wide_zero,
 )
 from repro.core.system import (  # noqa: F401
     CodedMemorySystem,

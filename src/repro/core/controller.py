@@ -65,6 +65,13 @@ claims, so the reference's symbol-list cap cannot bind; the default
 fails — or ``make_params(scheduler="reference")`` asks for it — the builders
 transparently fall back to the reference implementation. Randomized and
 end-to-end equivalence is enforced by tests/test_scheduler_equiv.py.
+
+Region geometry is traced, not static: both builders take an optional
+``rs_active`` (the point's own region size inside a padded sweep
+allocation, see ``state.active_geometry``). Region lookups use it;
+parity-row addressing keeps the *allocated* ``p.region_size`` stride so
+padded slots never alias. ``None`` (the default) means the allocation is
+the geometry.
 """
 from __future__ import annotations
 
@@ -163,17 +170,19 @@ def build_read_pattern(
     fresh_loc: jnp.ndarray,
     parity_valid: jnp.ndarray,
     region_slot: jnp.ndarray,
+    rs_active=None,
 ) -> ReadPlan:
     if _use_reference(p):
         from repro.core import controller_ref
         return controller_ref.build_read_pattern_ref(
             p, t, cand_bank, cand_row, cand_age, cand_valid, port_busy,
-            fresh_loc, parity_valid, region_slot)
+            fresh_loc, parity_valid, region_slot, rs_active)
 
     import jax
 
     n = cand_bank.shape[0]
     rs = p.region_size
+    rs_a = rs if rs_active is None else rs_active
     order, n_trips = _walk_bounds(cand_age, cand_valid)
     nop = jnp.int32(p.n_ports)
 
@@ -182,9 +191,9 @@ def build_read_pattern(
     i = jnp.maximum(cand_row, 0)
     fl = fresh_loc[b, i]
     fresh_in_bank = fl == 0
-    slot = region_slot[i // rs]
+    slot = region_slot[i // rs_a]
     coded = slot >= 0
-    pr = jnp.maximum(slot, 0) * rs + i % rs
+    pr = jnp.maximum(slot, 0) * rs + i % rs_a
     hold_port = t.par_port[jnp.maximum(fl - 1, 0)]
     # a negative hold_port (scheme with no parities) wraps the reference's
     # REDIRECT gather/claim onto the dummy sink slot — point it there
@@ -296,28 +305,30 @@ def build_write_pattern(
     rc_bank: jnp.ndarray,
     rc_row: jnp.ndarray,
     rc_valid: jnp.ndarray,
+    rs_active=None,
 ) -> WritePlan:
     if _use_reference(p):
         from repro.core import controller_ref
         return controller_ref.build_write_pattern_ref(
             p, t, cand_bank, cand_row, cand_age, cand_valid, port_busy,
             fresh_loc, parity_valid, region_slot, parked_count, rc_bank,
-            rc_row, rc_valid)
+            rc_row, rc_valid, rs_active)
 
     import jax
 
     n = cand_bank.shape[0]
     rs = p.region_size
+    rs_a = rs if rs_active is None else rs_active
     order, n_trips = _walk_bounds(cand_age, cand_valid)
     nop = jnp.int32(p.n_ports)
 
     # ---- per-candidate tables, gathered once ---------------------------
     b = jnp.maximum(cand_bank, 0)
     i = jnp.maximum(cand_row, 0)
-    region = i // rs
+    region = i // rs_a
     slot = region_slot[region]
     coded = slot >= 0
-    pr = jnp.maximum(slot, 0) * rs + i % rs
+    pr = jnp.maximum(slot, 0) * rs + i % rs_a
     optj = t.opt_parity[b]                    # (N, K)
     optjj = jnp.maximum(optj, 0)
     opt_pport = t.par_port[optjj]

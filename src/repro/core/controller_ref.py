@@ -42,9 +42,11 @@ def build_read_pattern_ref(
     fresh_loc: jnp.ndarray,
     parity_valid: jnp.ndarray,
     region_slot: jnp.ndarray,
+    rs_active=None,
 ) -> ReadPlan:
     n = cand_bank.shape[0]
     rs = p.region_size
+    rs_a = rs if rs_active is None else rs_active
     order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
 
     served0 = jnp.zeros((n,), bool)
@@ -61,9 +63,9 @@ def build_read_pattern_ref(
 
         fl = fresh_loc[b, i]
         fresh_in_bank = fl == 0
-        slot = region_slot[i // rs]
+        slot = region_slot[i // rs_a]
         coded = slot >= 0
-        pr = jnp.maximum(slot, 0) * rs + i % rs
+        pr = jnp.maximum(slot, 0) * rs + i % rs_a
         arange_s = jnp.arange(p.max_syms)
 
         def has_sym(x):
@@ -179,9 +181,11 @@ def build_write_pattern_ref(
     rc_bank: jnp.ndarray,
     rc_row: jnp.ndarray,
     rc_valid: jnp.ndarray,
+    rs_active=None,
 ) -> WritePlan:
     n = cand_bank.shape[0]
     rs = p.region_size
+    rs_a = rs if rs_active is None else rs_active
     order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
     served0 = jnp.zeros((n,), bool)
     mode0 = jnp.full((n,), WMODE_UNSERVED, jnp.int32)
@@ -193,10 +197,10 @@ def build_write_pattern_ref(
         b = jnp.maximum(cand_bank[c], 0)
         i = jnp.maximum(cand_row[c], 0)
         valid = cand_valid[c]
-        region = i // rs
+        region = i // rs_a
         slot = region_slot[region]
         coded = slot >= 0
-        pr = jnp.maximum(slot, 0) * rs + i % rs
+        pr = jnp.maximum(slot, 0) * rs + i % rs_a
         fl = fresh_loc[b, i]
         rc_space = jnp.any(~rc_valid)
 

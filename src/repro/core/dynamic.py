@@ -15,7 +15,9 @@ region's (windowed) access count against the coldest *coded* region:
     parked writes (``parked_count > 0``), which must drain first — and the
     hot region is encoded into the freed slot.
 
-Encoding takes ``encode_cycles`` cycles; the slot is unusable in flight
+Encoding takes ``max(1, region_size_active // encode_rows_per_cycle)``
+cycles (the point's own region size, not the allocation); the slot is
+unusable in flight
 (the paper's "reserved staging region"). Completion writes the parity data
 (XOR of member data banks over the whole region), marks ``parity_valid`` and
 counts one *switch* (the Fig-18 bar metric). Counts decay by half each
@@ -30,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.codes import MAX_SIBS
 from repro.core.controller import JTables
-from repro.core.state import MemParams, TunableParams
+from repro.core.state import MemParams, TunableParams, active_geometry
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -49,16 +51,22 @@ class DynOut(NamedTuple):
 
 def _encode_region_data(
     p: MemParams, t: JTables, banks_data: jnp.ndarray, parity_data: jnp.ndarray,
-    region: jnp.ndarray, slot: jnp.ndarray,
+    region: jnp.ndarray, slot: jnp.ndarray, rs_a: jnp.ndarray,
 ) -> jnp.ndarray:
-    """Write XOR parities of ``region``'s rows into ``slot``'s parity rows."""
+    """Write XOR parities of ``region``'s rows into ``slot``'s parity rows.
+
+    ``rs_a`` is the point's traced region size; slot stride stays the
+    allocated ``p.region_size``, and padded lanes (offset ≥ rs_a) write 0
+    into parity rows that no read/recode ever addresses."""
     rs = p.region_size
-    rows = jnp.clip(region * rs + jnp.arange(rs), 0, p.n_rows - 1)  # (rs,)
+    off = jnp.arange(rs)
+    rows = jnp.clip(region * rs_a + off, 0, p.n_rows - 1)  # (rs,)
     vals = jnp.zeros((p.n_parities, rs), jnp.int32)
     for mm in range(MAX_SIBS + 1):
         m = t.par_members[:, mm]  # (n_par,)
         gathered = banks_data[jnp.maximum(m, 0)][:, rows]  # (n_par, rs)
         vals = vals ^ jnp.where((m >= 0)[:, None], gathered, 0)
+    vals = jnp.where((off < rs_a)[None, :], vals, 0)
     start = jnp.maximum(slot, 0) * rs
     return jax.lax.dynamic_update_slice(parity_data, vals, (0, start))
 
@@ -81,10 +89,11 @@ def dynamic_step(
     switches: jnp.ndarray,
     quiesce=None,
 ) -> DynOut:
-    if p.n_slots >= p.n_regions:  # static full coverage: unit disabled
+    if p.n_active >= p.n_regions:  # static full coverage: unit disabled
         return DynOut(region_slot, slot_region, access_count, parity_valid,
                       parity_data, enc_region, enc_remaining, enc_slot, switches)
     rs = p.region_size
+    rs_a, nr_a = active_geometry(p, tn)
 
     # ---- encode in flight ---------------------------------------------------
     in_flight = enc_region >= 0
@@ -93,11 +102,13 @@ def dynamic_step(
     # completion: install mapping, write parity data, validate rows
     parity_data = jnp.where(
         complete,
-        _encode_region_data(p, t, banks_data, parity_data, enc_region, enc_slot),
+        _encode_region_data(p, t, banks_data, parity_data, enc_region,
+                            enc_slot, rs_a),
         parity_data,
     )
-    slot_rows = jnp.maximum(enc_slot, 0) * rs + jnp.arange(rs)
-    pv_rows = jnp.zeros_like(parity_valid).at[:, slot_rows].set(True)
+    off = jnp.arange(rs)
+    slot_rows = jnp.maximum(enc_slot, 0) * rs + off
+    pv_rows = jnp.zeros_like(parity_valid).at[:, slot_rows].set((off < rs_a))
     parity_valid = jnp.where(complete, parity_valid | pv_rows, parity_valid)
     region_slot = region_slot.at[jnp.maximum(enc_region, 0)].set(
         jnp.where(complete, enc_slot, region_slot[jnp.maximum(enc_region, 0)])
@@ -117,8 +128,10 @@ def dynamic_step(
     if quiesce is not None:
         select = select & ~quiesce
     coded = region_slot >= 0
-    # hottest uncoded region
-    cand_counts = jnp.where(coded, -1, access_count)
+    # hottest uncoded *active* region (padded regions past the point's own
+    # n_regions never exist: their counts stay 0 and they are masked here)
+    region_active = jnp.arange(p.n_regions) < nr_a
+    cand_counts = jnp.where(coded | ~region_active, -1, access_count)
     cand = jnp.argmax(cand_counts).astype(jnp.int32)
     cand_count = cand_counts[cand]
     # coldest coded, evictable (no parked rows) region
@@ -127,8 +140,9 @@ def dynamic_step(
     victim_count = evict_counts[victim]
     # slots at or past the point's traced budget are never offered as free:
     # a sweep can allocate parity state once at the grid's max ⌊α/r⌋ and let
-    # each point use only its own budget (repro.sweep batches α this way)
-    budget = jnp.minimum(tn.n_slots_active, p.n_slots)
+    # each point use only its own budget (repro.sweep batches α this way).
+    # p.n_active caps it statically — 0 for an α < r (uncoded) allocation.
+    budget = jnp.minimum(tn.n_slots_active, p.n_active)
     free_slot_mask = (slot_region < 0) & (jnp.arange(p.n_slots) < budget)
     has_free = jnp.any(free_slot_mask)
     free_slot = jnp.argmax(free_slot_mask).astype(jnp.int32)
@@ -136,7 +150,8 @@ def dynamic_step(
     start_free = select & has_free & (cand_count > 0)
     start_evict = select & ~has_free & (cand_count > victim_count) & (victim_count < INT32_MAX)
 
-    # eviction: clear victim's slot + validity
+    # eviction: clear victim's slot + validity (whole allocated stride —
+    # padded rows are invalid anyway)
     vslot = jnp.maximum(region_slot[victim], 0)
     vrows = vslot * rs + jnp.arange(rs)
     pv_clear = jnp.ones_like(parity_valid).at[:, vrows].set(False)
@@ -152,7 +167,9 @@ def dynamic_step(
     tgt_slot = jnp.where(start_evict, vslot, free_slot)
     enc_region = jnp.where(start, cand, enc_region)
     enc_slot = jnp.where(start, tgt_slot, enc_slot)
-    enc_remaining = jnp.where(start, p.encode_cycles, enc_remaining)
+    # encode latency follows the point's own region size, not the allocation
+    enc_cycles = jnp.maximum(1, rs_a // p.encode_rows_per_cycle).astype(jnp.int32)
+    enc_remaining = jnp.where(start, enc_cycles, enc_remaining)
 
     # windowed counts decay each period
     access_count = jnp.where(period, access_count // 2, access_count)

@@ -52,6 +52,7 @@ def recode_step(
     region_slot: jnp.ndarray,
     banks_data: jnp.ndarray,
     parity_data: jnp.ndarray,
+    rs_active=None,
 ) -> RecodeOut:
     """Retire up to ``recode_budget`` ring entries whose ports are all idle.
 
@@ -69,15 +70,16 @@ def recode_step(
     if p.scheduler == "reference":
         return recode_step_ref(p, t, port_busy, fresh_loc, parity_valid,
                                parked_count, rc_bank, rc_row, rc_valid,
-                               region_slot, banks_data, parity_data)
+                               region_slot, banks_data, parity_data, rs_active)
     rs = p.region_size
+    rs_a = rs if rs_active is None else rs_active
     cap = rc_valid.shape[0]
     b = jnp.maximum(rc_bank, 0)                 # (E,)
     i = jnp.maximum(rc_row, 0)
-    region = i // rs
+    region = i // rs_a
     slot = region_slot[region]
     coded = slot >= 0
-    pr = jnp.maximum(slot, 0) * rs + i % rs
+    pr = jnp.maximum(slot, 0) * rs + i % rs_a
     optj = t.opt_parity[b]                      # (E, K)
     optjj = jnp.maximum(optj, 0)
     opt_pport = t.par_port[optjj]
@@ -188,8 +190,10 @@ def recode_step_ref(
     region_slot: jnp.ndarray,
     banks_data: jnp.ndarray,
     parity_data: jnp.ndarray,
+    rs_active=None,
 ) -> RecodeOut:
     rs = p.region_size
+    rs_a = rs if rs_active is None else rs_active
     nop = jnp.int32(p.n_ports)
 
     def body(e, carry):
@@ -198,10 +202,10 @@ def recode_step_ref(
         b = jnp.maximum(rc_bank[e], 0)
         i = jnp.maximum(rc_row[e], 0)
         active = rc_valid[e] & (budget > 0)
-        region = i // rs
+        region = i // rs_a
         slot = region_slot[region]
         coded = slot >= 0
-        pr = jnp.maximum(slot, 0) * rs + i % rs
+        pr = jnp.maximum(slot, 0) * rs + i % rs_a
         fl = fresh_loc[b, i]
         parked = fl > 0
         holder = jnp.maximum(fl - 1, 0)

@@ -40,25 +40,42 @@ class MemParams(NamedTuple):
     thresholds and the dynamic-coding selection period — lives in
     ``TunableParams`` instead, so sweeps can batch over it without
     recompiling (one compiled program serves a whole tunable grid).
+
+    ``region_size`` / ``n_regions`` / ``n_slots`` are *allocation* shapes:
+    a sweep group may pad them up to the group maximum and run each point
+    at its own traced geometry (``TunableParams.region_size_active`` /
+    ``n_regions_active`` / ``n_slots_active``, see ``active_geometry``).
+    ``n_active`` is the allocation's true parity-slot budget — it can be 0
+    (α < r: the point is uncoded) even though storage keeps a ≥1 floor.
     """
 
     n_data: int
     n_parities: int
     n_ports: int          # data + physical parity banks
     n_rows: int           # L, rows per data bank
-    region_size: int      # rs
-    n_regions: int        # L // rs
-    n_slots: int          # parity slots = floor(alpha / r), capped at n_regions
-    n_active: int         # slots usable for coded regions (reserve 1 staging)
+    region_size: int      # rs (allocated stride of one parity slot)
+    n_regions: int        # ceil(L / rs) (allocated)
+    n_slots: int          # parity slots = floor(alpha / r), capped at
+                          # n_regions; ≥1 storage floor (allocated)
+    n_active: int         # slots usable for coded regions (0 when α < r)
     queue_depth: int
     recode_cap: int
     max_syms: int
-    encode_cycles: int    # cycles to encode one region into the staging slot
     recode_budget: int    # max recode entries retired per cycle
     coalesce: bool        # allow FROM_SYM / chained-decode reuse (off for the
                           # uncoded Ramulator-like baseline)
     scheduler: str = "vectorized"  # "vectorized" (compacted-walk builders) or
                                    # "reference" (the sequential greedy loops)
+    encode_rows_per_cycle: int = 64  # encoder bandwidth; the traced
+                                     # per-point encode latency is
+                                     # max(1, region_size_active // this)
+    traced_geometry: bool = False    # True: region indexing uses the traced
+                                     # TunableParams.*_active geometry (a
+                                     # padded multi-geometry sweep group);
+                                     # False: the allocation IS the geometry
+                                     # and indexing stays static (no traced
+                                     # divisions — the exact pre-masking
+                                     # program)
 
 
 class TunableParams(NamedTuple):
@@ -67,14 +84,21 @@ class TunableParams(NamedTuple):
     These affect only data values inside the cycle engine, never array
     shapes, so a batch of configurations differing in nothing but these
     can share one compiled program. ``repro.sweep`` exploits exactly that.
+
+    The three ``*_active`` fields carry a point's own α/r geometry inside a
+    padded group allocation (``make_params``'s ``*_alloc`` arguments):
+    indexing uses the traced values, extra slots/regions/rows are masked
+    off. Defaults of INT32_MAX clamp to the allocation (exact geometry).
     """
 
     select_period: jnp.ndarray  # () int32 — T, dynamic re-selection period
     wq_hi: jnp.ndarray          # () int32 — write-drain hysteresis thresholds
     wq_lo: jnp.ndarray          # () int32
     n_slots_active: jnp.ndarray  # () int32 — parity-slot budget this point may
-                                 # use (≤ MemParams.n_slots; lets an α axis
+                                 # use (≤ MemParams.n_active; lets an α axis
                                  # batch over one max-α allocation)
+    region_size_active: jnp.ndarray  # () int32 — this point's own rs
+    n_regions_active: jnp.ndarray    # () int32 — this point's own ⌈L/rs⌉
 
 
 def make_tunables(
@@ -83,13 +107,63 @@ def make_tunables(
     wq_hi: int = 8,
     wq_lo: int = 2,
     n_slots_active: int = jnp.iinfo(jnp.int32).max,
+    region_size_active: int = jnp.iinfo(jnp.int32).max,
+    n_regions_active: int = jnp.iinfo(jnp.int32).max,
 ) -> TunableParams:
+    hi = min(int(wq_hi), queue_depth - 1)
     return TunableParams(
         select_period=jnp.int32(max(int(select_period), 1)),
-        wq_hi=jnp.int32(min(int(wq_hi), queue_depth - 1)),
-        wq_lo=jnp.int32(wq_lo),
+        wq_hi=jnp.int32(hi),
+        # crossed hysteresis thresholds (lo > hi) would flap write_mode every
+        # cycle: entering write mode at occupancy >= hi and staying only
+        # while occupancy > lo > hi means no state is ever stable
+        wq_lo=jnp.int32(min(int(wq_lo), hi)),
         n_slots_active=jnp.int32(n_slots_active),
+        region_size_active=jnp.int32(region_size_active),
+        n_regions_active=jnp.int32(n_regions_active),
     )
+
+
+def active_geometry(p: MemParams, tn: TunableParams):
+    """(region_size_active, n_regions_active) for this point.
+
+    With ``p.traced_geometry`` these are traced int32 scalars — the tunable
+    defaults (INT32_MAX) clamp to the allocation, a padded group allocation
+    sees each point's own geometry. Without it they are the static python
+    ints themselves (a single-geometry system compiles with no traced
+    divisions at all; any ``*_active`` tunables are ignored by
+    construction because they equal the allocation). Parity row addressing
+    always keeps the *allocated* slot stride: row ``i`` of a slot lives at
+    ``slot * p.region_size + i % region_size_active``."""
+    if not p.traced_geometry:
+        return p.region_size, p.n_regions
+    rs_a = jnp.minimum(tn.region_size_active, p.region_size)
+    nr_a = jnp.minimum(tn.n_regions_active, p.n_regions)
+    return rs_a, nr_a
+
+
+# --------------------------------------------------------------- wide counters
+# 64-bit statistics accumulators as (lo, hi) uint32 limb pairs. jnp.int64
+# silently degrades to int32 unless the global ``jax_enable_x64`` flag is on
+# (which would flip default dtypes across the whole program), so the wide
+# counters emulate 64-bit exactly with explicit 32-bit dtypes instead —
+# independent of the flag.
+
+def wide_zero() -> jnp.ndarray:
+    """A zeroed 64-bit accumulator: shape (2,) uint32 = (lo, hi) limbs."""
+    return jnp.zeros((2,), jnp.uint32)
+
+
+def wide_add(acc: jnp.ndarray, inc) -> jnp.ndarray:
+    """``acc + inc`` for a non-negative scalar ``inc`` < 2**32."""
+    lo = acc[0] + jnp.asarray(inc).astype(jnp.uint32)
+    return jnp.stack([lo, acc[1] + (lo < acc[0]).astype(jnp.uint32)])
+
+
+def wide_total(acc) -> int:
+    """Host-side python int value of a wide accumulator."""
+    a = np.asarray(acc)
+    return int(a[..., 0]) + (int(a[..., 1]) << 32)
 
 
 def derive_geometry(n_rows: int, alpha: float, r: float):
@@ -97,11 +171,15 @@ def derive_geometry(n_rows: int, alpha: float, r: float):
 
     Shared by ``make_params`` and ``repro.sweep.grid.static_signature`` so the
     sweep layer can reason about which points share compiled shapes.
+
+    ``n_slots`` is 0 when α < r: the parity budget cannot hold even one
+    region, so the point is explicitly uncoded (no free slot is granted —
+    that would overstate coverage at tiny α).
     """
     region_size = max(1, int(round(n_rows * r)))
     n_regions = -(-n_rows // region_size)
     n_slots = min(int(np.floor(alpha / r + 1e-9)), n_regions)
-    return region_size, n_regions, max(n_slots, 1)
+    return region_size, n_regions, max(n_slots, 0)
 
 
 def make_params(
@@ -117,25 +195,40 @@ def make_params(
     coalesce: bool = True,
     scheduler: str = "vectorized",
     n_slots_alloc: Optional[int] = None,
+    region_size_alloc: Optional[int] = None,
+    n_regions_alloc: Optional[int] = None,
+    traced_geometry: bool = False,
 ) -> MemParams:
     region_size, n_regions, n_slots = derive_geometry(n_rows, alpha, r)
-    if n_slots_alloc is not None:
-        # Over-allocate parity state (a sweep batches several α budgets over
-        # one compiled shape); the per-point budget rides in
-        # ``TunableParams.n_slots_active`` and masks the extra slots off.
-        if n_slots_alloc < n_slots:
-            raise ValueError(
-                f"n_slots_alloc={n_slots_alloc} < derived n_slots={n_slots}")
-        if (n_slots_alloc >= n_regions) != (n_slots >= n_regions):
-            raise ValueError(
-                "n_slots_alloc must not change full-coverage status "
-                f"(alloc {n_slots_alloc}, derived {n_slots}, regions {n_regions})")
-        n_slots = n_slots_alloc
+    full = n_slots >= n_regions
+    # ---- group allocation: a sweep batches several α/r geometries over one
+    # compiled shape by padding region/parity state to the group maxima; the
+    # per-point geometry rides in ``TunableParams.{region_size,n_regions,
+    # n_slots}_active`` and masks the padding off.
+    if region_size_alloc is not None:
+        if region_size_alloc < region_size:
+            raise ValueError(f"region_size_alloc={region_size_alloc} < "
+                             f"derived region_size={region_size}")
+        region_size = region_size_alloc
+    if n_regions_alloc is not None:
+        if n_regions_alloc < n_regions:
+            raise ValueError(f"n_regions_alloc={n_regions_alloc} < "
+                             f"derived n_regions={n_regions}")
+        n_regions = n_regions_alloc
     # §IV-E says "up to α/r − 1 regions" with one reserved for staging, but the
     # paper's own experiment discussion (§V-C: "⌊α/r⌋ = 2 … we can select 2
     # regions" at α=0.1, r=0.05) uses ⌊α/r⌋ active regions; we follow §V-C and
     # model staging as the in-flight slot being unusable during its encode.
     n_active = n_slots
+    if n_slots_alloc is not None:
+        if n_slots_alloc < n_slots:
+            raise ValueError(
+                f"n_slots_alloc={n_slots_alloc} < derived n_slots={n_slots}")
+        if (n_slots_alloc >= n_regions) != full:
+            raise ValueError(
+                "n_slots_alloc must not change full-coverage status "
+                f"(alloc {n_slots_alloc}, derived {n_slots}, regions {n_regions})")
+        n_slots = n_active = n_slots_alloc
     return MemParams(
         n_data=tables.n_data,
         n_parities=max(tables.n_parities, 1),
@@ -143,15 +236,16 @@ def make_params(
         n_rows=n_rows,
         region_size=region_size,
         n_regions=n_regions,
-        n_slots=n_slots,
+        n_slots=max(n_slots, 1),   # storage floor; the true budget is n_active
         n_active=n_active,
         queue_depth=queue_depth,
         recode_cap=recode_cap,
         max_syms=max_syms,
-        encode_cycles=max(1, region_size // encode_rows_per_cycle),
         recode_budget=recode_budget,
         coalesce=coalesce if tables.n_parities > 0 else False,
         scheduler=scheduler,
+        encode_rows_per_cycle=encode_rows_per_cycle,
+        traced_geometry=traced_geometry,
     )
 
 
@@ -189,24 +283,71 @@ class MemState(NamedTuple):
     banks_data: jnp.ndarray     # (n_data, L) int32
     parity_data: jnp.ndarray    # (n_par, n_slots * rs) int32
     golden: jnp.ndarray         # (n_data, L) int32 memory-order reference
-    # stats
+    # stats (event counters are int32 — bounded by trace size; the
+    # per-cycle-growing accumulators are wide (lo, hi) uint32 pairs, see
+    # ``wide_zero``: they overflow int32 on long traces)
     served_reads: jnp.ndarray   # () int32
     served_writes: jnp.ndarray  # () int32
     degraded_reads: jnp.ndarray  # () int32 (reads served via parity/symbols)
     parked_writes: jnp.ndarray  # () int32
-    read_latency_sum: jnp.ndarray  # () int64-ish int32
-    write_latency_sum: jnp.ndarray
-    stall_cycles: jnp.ndarray   # () int32 (core-stall events)
+    read_latency_sum: jnp.ndarray  # (2,) uint32 wide accumulator
+    write_latency_sum: jnp.ndarray  # (2,) uint32 wide accumulator
+    stall_cycles: jnp.ndarray   # (2,) uint32 wide (core-stall events)
     rc_dropped: jnp.ndarray     # () int32 (recode requests lost to a full ring)
 
 
-def init_state(p: MemParams) -> MemState:
+def _concrete_int(x) -> Optional[int]:
+    """Host value of ``x``, or None when it is a tracer (vmap/jit)."""
+    try:
+        return int(x)
+    except Exception:
+        return None
+
+
+def init_state(p: MemParams, tn: Optional[TunableParams] = None) -> MemState:
+    """Initial controller state.
+
+    With ``tn`` (the batched-sweep path), the point's *active* geometry
+    shapes the initial region map and parity validity inside the allocated
+    arrays: padded regions/slots stay unmapped (-1) and padded parity rows
+    stay invalid, so a padded program is bit-identical per point to an
+    exactly allocated one. Without ``tn``, the allocation is the geometry.
+    """
+    if tn is not None and not p.traced_geometry:
+        # a non-traced system ignores the geometry actives entirely — reject
+        # explicit values that disagree with the allocation instead of
+        # silently simulating a hybrid configuration (tracers are exempt:
+        # the sweep engine only builds non-traced systems for uniform
+        # batches whose actives equal the allocation)
+        sentinel = jnp.iinfo(jnp.int32).max
+        for v, alloc, name in ((tn.region_size_active, p.region_size,
+                                "region_size_active"),
+                               (tn.n_regions_active, p.n_regions,
+                                "n_regions_active")):
+            cv = _concrete_int(v)
+            if cv is not None and cv not in (alloc, sentinel):
+                raise ValueError(
+                    f"TunableParams.{name}={cv} differs from the allocation "
+                    f"({alloc}) but the system was built without "
+                    "make_params(traced_geometry=True) — the traced value "
+                    "would be silently ignored")
     n_slot_rows = p.n_slots * p.region_size
-    if p.n_slots >= p.n_regions:
-        # static full coverage: identity region->slot map, all parities valid
-        region_slot = jnp.arange(p.n_regions, dtype=jnp.int32)
-        slot_region = jnp.arange(p.n_slots, dtype=jnp.int32)
-        parity_valid = jnp.ones((p.n_parities, n_slot_rows), bool)
+    if p.n_active >= p.n_regions:
+        # static full coverage: identity region->slot map, all (active)
+        # parities valid — the dynamic unit never remaps
+        if tn is None or not p.traced_geometry:
+            region_slot = jnp.arange(p.n_regions, dtype=jnp.int32)
+            slot_region = jnp.arange(p.n_slots, dtype=jnp.int32)
+            parity_valid = jnp.ones((p.n_parities, n_slot_rows), bool)
+        else:
+            rs_a, nr_a = active_geometry(p, tn)
+            rid = jnp.arange(p.n_regions, dtype=jnp.int32)
+            region_slot = jnp.where(rid < nr_a, rid, -1)
+            sid = jnp.arange(p.n_slots, dtype=jnp.int32)
+            slot_region = jnp.where(sid < nr_a, sid, -1)
+            row = jnp.arange(n_slot_rows, dtype=jnp.int32)
+            active = (row // p.region_size < nr_a) & (row % p.region_size < rs_a)
+            parity_valid = jnp.broadcast_to(active, (p.n_parities, n_slot_rows))
     else:
         region_slot = jnp.full((p.n_regions,), -1, jnp.int32)
         slot_region = jnp.full((p.n_slots,), -1, jnp.int32)
@@ -242,8 +383,8 @@ def init_state(p: MemParams) -> MemState:
         served_writes=z,
         degraded_reads=z,
         parked_writes=z,
-        read_latency_sum=z,
-        write_latency_sum=z,
-        stall_cycles=z,
+        read_latency_sum=wide_zero(),
+        write_latency_sum=wide_zero(),
+        stall_cycles=wide_zero(),
         rc_dropped=z,
     )

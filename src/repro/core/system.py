@@ -30,8 +30,9 @@ from repro.core import controller as ctl
 from repro.core.codes import MAX_OPTS, MAX_SIBS, CodeTables
 from repro.core.dynamic import dynamic_step
 from repro.core.recoding import recode_step
-from repro.core.state import (MemParams, MemState, TunableParams, init_state,
-                              make_tunables)
+from repro.core.state import (MemParams, MemState, TunableParams,
+                              active_geometry, init_state, make_tunables,
+                              wide_add, wide_total)
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -84,6 +85,29 @@ class SimResult(NamedTuple):
     rc_dropped: int = 0   # recode requests lost to a full ring (write path)
 
 
+def result_from_host(m: MemState, done_cycle) -> SimResult:
+    """One point's SimResult from host-side (numpy) MemState leaves — the
+    single assembly point shared by ``CodedMemorySystem.summarize`` and the
+    sweep engine's ``summarize_batch`` (new stats get wired exactly once)."""
+    dc = int(done_cycle)
+    sr = int(m.served_reads)
+    sw = int(m.served_writes)
+    return SimResult(
+        cycles=dc if dc >= 0 else int(m.cycle),
+        completed=dc >= 0,
+        served_reads=sr,
+        served_writes=sw,
+        degraded_reads=int(m.degraded_reads),
+        parked_writes=int(m.parked_writes),
+        switches=int(m.switches),
+        recode_backlog=int(np.sum(m.rc_valid)),
+        stall_cycles=wide_total(m.stall_cycles),
+        avg_read_latency=wide_total(m.read_latency_sum) / max(sr, 1),
+        avg_write_latency=wide_total(m.write_latency_sum) / max(sw, 1),
+        rc_dropped=int(m.rc_dropped),
+    )
+
+
 class CodedMemorySystem:
     """Facade owning the static tables/params; methods are jit-compiled.
 
@@ -103,15 +127,17 @@ class CodedMemorySystem:
                          else make_tunables(queue_depth=params.queue_depth))
 
     # ------------------------------------------------------------------ init
-    def init(self) -> SimState:
+    def init(self, tn: Optional[TunableParams] = None) -> SimState:
+        """Initial state; ``tn`` masks a padded group allocation down to the
+        point's active geometry (see ``init_state``)."""
         return SimState(
-            mem=init_state(self.p),
+            mem=init_state(self.p, tn),
             core_ptr=jnp.zeros((self.n_cores,), jnp.int32),
             done_cycle=jnp.int32(-1),
         )
 
     # --------------------------------------------------------------- arbiter
-    def _arbiter(self, st: SimState, trace: Trace):
+    def _arbiter(self, st: SimState, trace: Trace, rs_a):
         """Push each core's pending request into its destination queue.
 
         Vectorized: cores are ranked within their destination (bank, r/w)
@@ -122,11 +148,10 @@ class CodedMemorySystem:
         to the reference loop (``_arbiter_ref``).
         """
         if self.p.scheduler == "reference":
-            return self._arbiter_ref(st, trace)
+            return self._arbiter_ref(st, trace, rs_a)
         p = self.p
         m = st.mem
         tlen = trace.bank.shape[1]
-        rs = p.region_size
         nc = self.n_cores
         car = jnp.arange(nc)
 
@@ -178,8 +203,8 @@ class CodedMemorySystem:
         wq_valid = m.wq_valid.at[bw, slot_w].set(True, mode="drop")
         wq_data = m.wq_data.at[bw, slot_w].set(payload, mode="drop")
         access_count = m.access_count.at[
-            jnp.where(push, i // rs, p.n_regions)].add(1, mode="drop")
-        stalls = m.stall_cycles + jnp.sum(v & full).astype(jnp.int32)
+            jnp.where(push, i // rs_a, p.n_regions)].add(1, mode="drop")
+        stalls = wide_add(m.stall_cycles, jnp.sum(v & full))
         ptr = pos + (in_range & (push | ~v)).astype(jnp.int32)
 
         mem = m._replace(
@@ -189,10 +214,9 @@ class CodedMemorySystem:
         )
         return st._replace(mem=mem, core_ptr=ptr)
 
-    def _arbiter_ref(self, st: SimState, trace: Trace):
+    def _arbiter_ref(self, st: SimState, trace: Trace, rs_a):
         p = self.p
         tlen = trace.bank.shape[1]
-        rs = p.region_size
 
         def core_body(ci, carry):
             (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid, wq_data,
@@ -222,8 +246,8 @@ class CodedMemorySystem:
             wq_age = wq_age.at[b, w_slot].set(jnp.where(pw_, cyc, wq_age[b, w_slot]))
             wq_valid = wq_valid.at[b, w_slot].set(jnp.where(pw_, True, wq_valid[b, w_slot]))
             wq_data = wq_data.at[b, w_slot].set(jnp.where(pw_, payload, wq_data[b, w_slot]))
-            access_count = access_count.at[i // rs].add(push.astype(jnp.int32))
-            stalls = stalls + (v & full).astype(jnp.int32)
+            access_count = access_count.at[i // rs_a].add(push.astype(jnp.int32))
+            stalls = wide_add(stalls, v & full)
             # advance pointer on push or idle entry
             ptr = ptr.at[ci].set(pos + (in_range & (push | ~v)).astype(jnp.int32))
             return (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid,
@@ -243,14 +267,14 @@ class CodedMemorySystem:
         return st._replace(mem=mem, core_ptr=ptr)
 
     # ----------------------------------------------------------- read values
-    def _read_values(self, m: MemState, plan: ctl.ReadPlan, cb, ci):
+    def _read_values(self, m: MemState, plan: ctl.ReadPlan, cb, ci, rs_a):
         """Vectorized XOR-decode datapath for the served reads."""
         p, t = self.p, self.t
         rs = p.region_size
         b = jnp.maximum(cb, 0)
         i = jnp.maximum(ci, 0)
-        slot = m.region_slot[i // rs]
-        pr = jnp.maximum(slot, 0) * rs + i % rs
+        slot = m.region_slot[i // rs_a]
+        pr = jnp.maximum(slot, 0) * rs + i % rs_a
         direct_val = m.banks_data[b, i]
         fl = m.fresh_loc[b, i]
         holder = jnp.maximum(fl - 1, 0)
@@ -270,7 +294,7 @@ class CodedMemorySystem:
 
     # ------------------------------------------------------- write datapath
     def _commit_writes(self, m: MemState, plan: ctl.WritePlan, cb, ci_, ca,
-                       cv, cd):
+                       cv, cd, rs_a):
         """Commit served write payloads in age order (last write wins).
 
         Vectorized: rather than walking candidates in a fori_loop, the
@@ -292,8 +316,8 @@ class CodedMemorySystem:
                 ic = i[c]
                 served = plan.served[c]
                 mode = plan.mode[c]
-                slot = m.region_slot[ic // rs]
-                pr = jnp.maximum(slot, 0) * rs + ic % rs
+                slot = m.region_slot[ic // rs_a]
+                pr = jnp.maximum(slot, 0) * rs + ic % rs_a
                 is_dir = served & (mode == ctl.WMODE_DIRECT)
                 is_park = served & (mode >= ctl.WMODE_PARK0)
                 kk = jnp.clip(mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
@@ -316,8 +340,8 @@ class CodedMemorySystem:
         order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
         pos = jnp.zeros((n,), jnp.int32).at[order].set(
             jnp.arange(n, dtype=jnp.int32))
-        slot = m.region_slot[i // rs]
-        pr = jnp.maximum(slot, 0) * rs + i % rs
+        slot = m.region_slot[i // rs_a]
+        pr = jnp.maximum(slot, 0) * rs + i % rs_a
         kk = jnp.clip(plan.mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
         j = jnp.maximum(t.opt_parity[b, kk], 0)
         is_dir = plan.served & (plan.mode == ctl.WMODE_DIRECT)
@@ -348,13 +372,16 @@ class CodedMemorySystem:
         p, t = self.p, self.t
         if tn is None:
             tn = self.tunables
+        # the point's own region geometry (== the allocation unless this
+        # program serves a padded sweep group, see state.active_geometry)
+        rs_a, _ = active_geometry(p, tn)
         # once the workload has drained there is no traffic to react to: the
         # dynamic unit stops starting encodes, so the system reaches a
         # quiescent fixed point (done + recode empty + encoder idle) that
         # lets the sweep engine cut trailing dead cycles without changing
         # any observable statistic.
         was_done = st.done_cycle >= 0
-        st = self._arbiter(st, trace)
+        st = self._arbiter(st, trace, rs_a)
         m = st.mem
         n_cand = p.n_data * p.queue_depth
         port_busy0 = jnp.zeros((p.n_ports + 1,), bool)
@@ -374,15 +401,15 @@ class CodedMemorySystem:
             cv = m.rq_valid.reshape(-1) & active
             plan = ctl.build_read_pattern(
                 p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
-                m.region_slot,
+                m.region_slot, rs_a,
             )
-            vals = self._read_values(m, plan, cb, ci_)
+            vals = self._read_values(m, plan, cb, ci_, rs_a)
             lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
             m = m._replace(
                 rq_valid=m.rq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
                 served_reads=m.served_reads + plan.n_served,
                 degraded_reads=m.degraded_reads + plan.n_degraded,
-                read_latency_sum=m.read_latency_sum + lat,
+                read_latency_sum=wide_add(m.read_latency_sum, lat),
             )
             out = CycleOut(plan.served, cb, ci_, vals, plan.n_served)
             return m, plan.port_busy, out
@@ -396,9 +423,10 @@ class CodedMemorySystem:
             plan = ctl.build_write_pattern(
                 p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
                 m.region_slot, m.parked_count, m.rc_bank, m.rc_row, m.rc_valid,
+                rs_a,
             )
             banks_data, parity_data, golden = self._commit_writes(
-                m, plan, cb, ci_, ca, cv, cd)
+                m, plan, cb, ci_, ca, cv, cd, rs_a)
             lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
             m = m._replace(
                 wq_valid=m.wq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
@@ -409,7 +437,7 @@ class CodedMemorySystem:
                 served_writes=m.served_writes + plan.n_served,
                 parked_writes=m.parked_writes + plan.n_parked,
                 rc_dropped=m.rc_dropped + plan.n_rc_dropped,
-                write_latency_sum=m.write_latency_sum + lat,
+                write_latency_sum=wide_add(m.write_latency_sum, lat),
                 banks_data=banks_data, parity_data=parity_data, golden=golden,
             )
             out = CycleOut(
@@ -440,7 +468,7 @@ class CodedMemorySystem:
         rc = recode_step(
             p, t, port_busy, m.fresh_loc, m.parity_valid, m.parked_count,
             m.rc_bank, m.rc_row, m.rc_valid, m.region_slot, m.banks_data,
-            m.parity_data,
+            m.parity_data, rs_a,
         )
         m = m._replace(
             fresh_loc=rc.fresh_loc, parity_valid=rc.parity_valid,
@@ -482,25 +510,10 @@ class CodedMemorySystem:
 
     def run(self, trace: Trace, n_cycles: int,
             tn: Optional[TunableParams] = None) -> SimResult:
-        st, _ = self._run(self.init(), trace, n_cycles, tn)
+        tn = tn if tn is not None else self.tunables
+        st, _ = self._run(self.init(tn), trace, n_cycles, tn)
         return self.summarize(st)
 
     def summarize(self, st: SimState) -> SimResult:
-        m = st.mem
-        dc = int(st.done_cycle)
-        sr = int(m.served_reads)
-        sw = int(m.served_writes)
-        return SimResult(
-            cycles=dc if dc >= 0 else int(m.cycle),
-            completed=dc >= 0,
-            served_reads=sr,
-            served_writes=sw,
-            degraded_reads=int(m.degraded_reads),
-            parked_writes=int(m.parked_writes),
-            switches=int(m.switches),
-            recode_backlog=int(jnp.sum(m.rc_valid)),
-            stall_cycles=int(m.stall_cycles),
-            avg_read_latency=float(m.read_latency_sum) / max(sr, 1),
-            avg_write_latency=float(m.write_latency_sum) / max(sw, 1),
-            rc_dropped=int(m.rc_dropped),
-        )
+        host = jax.device_get(st)
+        return result_from_host(host.mem, host.done_cycle)

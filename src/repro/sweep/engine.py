@@ -15,9 +15,12 @@ pure integer arithmetic; ``vmap`` of ``cond`` evaluates both branches and
 selects, which cannot change the selected values). tests/test_sweep.py and
 benchmarks/bench_sweep.py both verify this.
 
-With more than one device, batches whose size divides the device count are
-sharded across a 1-D "sweep" mesh (``repro.launch.mesh.make_sweep_mesh``);
-``jit`` then partitions the scan across devices automatically.
+With more than one device, the batch's point axis is padded with masked
+dummy points (replicas of the last real point, stripped again in
+``summarize_batch``) up to the next device-count multiple and sharded
+across a 1-D "sweep" mesh (``repro.launch.mesh.make_sweep_mesh``); ``jit``
+then partitions the scan across devices automatically — on every real
+grid, not just ones whose size happens to divide the device count.
 """
 from __future__ import annotations
 
@@ -30,29 +33,33 @@ import numpy as np
 
 from repro.core.codes import get_tables
 from repro.core.state import TunableParams, make_params, make_tunables
-from repro.core.system import CodedMemorySystem, SimResult, SimState, Trace
+from repro.core.system import (CodedMemorySystem, SimResult, SimState, Trace,
+                               result_from_host)
 from repro.launch.mesh import make_sweep_mesh
 from repro.sweep import workloads
-from repro.sweep.grid import (GridBatch, SweepPoint, batch_slot_alloc,
+from repro.sweep.grid import (GridBatch, SweepPoint, batch_geometry_alloc,
                               partition, static_signature)
 
-# One system (= one set of jit caches) per (static signature, slot
+# One system (= one set of jit caches) per (static signature, geometry
 # allocation), so re-running a suite — or growing it along batchable axes —
 # never recompiles.
 _SYSTEMS: Dict[Tuple, CodedMemorySystem] = {}
 
 
 def system_for(pt: SweepPoint,
-               n_slots_alloc: Optional[int] = None) -> CodedMemorySystem:
-    # static_signature deliberately drops α below full coverage, so the
-    # cache must key on the actual slot allocation — two α values must not
-    # share an exactly-allocated system (an explicit alloc equal to the
-    # derived count builds identical params, so one key covers both)
-    sig = (static_signature(pt),
-           n_slots_alloc if n_slots_alloc is not None
-           else pt.derived_slots()[2])
+               geometry_alloc: Optional[Tuple[int, int, int]] = None,
+               traced_geometry: bool = False) -> CodedMemorySystem:
+    # static_signature deliberately drops α and r, so the cache must key on
+    # the actual (region_size, n_regions, n_slots) allocation — two
+    # geometries must not share an exactly-allocated system (an explicit
+    # alloc equal to the derived geometry builds identical params, so one
+    # key covers both). ``traced_geometry`` keys too: a single-geometry
+    # batch compiles the cheaper static-indexing program.
+    alloc = geometry_alloc if geometry_alloc is not None else pt.derived_slots()
+    sig = (static_signature(pt), alloc, traced_geometry)
     sys = _SYSTEMS.get(sig)
     if sys is None:
+        rs_alloc, nr_alloc, ns_alloc = alloc
         tables = get_tables(pt.scheme, n_data=pt.n_data)
         params = make_params(tables, n_rows=pt.n_rows, alpha=pt.alpha, r=pt.r,
                              queue_depth=pt.queue_depth, coalesce=pt.coalesce,
@@ -60,7 +67,10 @@ def system_for(pt: SweepPoint,
                              encode_rows_per_cycle=pt.encode_rows_per_cycle,
                              recode_budget=pt.recode_budget,
                              scheduler=pt.scheduler,
-                             n_slots_alloc=n_slots_alloc)
+                             n_slots_alloc=ns_alloc,
+                             region_size_alloc=rs_alloc,
+                             n_regions_alloc=nr_alloc,
+                             traced_geometry=traced_geometry)
         sys = CodedMemorySystem(tables, params, n_cores=pt.n_cores)
         _SYSTEMS[sig] = sys
     return sys
@@ -68,21 +78,43 @@ def system_for(pt: SweepPoint,
 
 def stack_tunables(points: Sequence[SweepPoint],
                    queue_depth: int) -> TunableParams:
-    tns = [make_tunables(queue_depth=queue_depth,
-                         select_period=pt.select_period,
-                         wq_hi=pt.wq_hi, wq_lo=pt.wq_lo,
-                         n_slots_active=pt.derived_slots()[2])
-           for pt in points]
+    tns = []
+    for pt in points:
+        rs, nr, ns = pt.derived_slots()
+        tns.append(make_tunables(queue_depth=queue_depth,
+                                 select_period=pt.select_period,
+                                 wq_hi=pt.wq_hi, wq_lo=pt.wq_lo,
+                                 n_slots_active=ns,
+                                 region_size_active=rs,
+                                 n_regions_active=nr))
     return jax.tree.map(lambda *xs: jnp.stack(xs), *tns)
 
 
-def _batched_init(sys: CodedMemorySystem, n: int) -> SimState:
-    st0 = sys.init()
-    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), st0)
+def _batched_init(sys: CodedMemorySystem, tn_b: TunableParams) -> SimState:
+    """Per-point initial states: each point's active geometry masks the
+    shared allocation (identity region maps sized to *its* n_regions, etc.)."""
+    return jax.vmap(sys.init)(tn_b)
+
+
+def _pad_points(n_points: int) -> int:
+    """Rows of padding needed to land on a device-count multiple (0 if the
+    size already divides, or on a single device)."""
+    n_dev = len(jax.devices())
+    if n_dev <= 1:
+        return 0
+    return (-n_points) % n_dev
+
+
+def _replicate_tail(tree, pad: int):
+    """Append ``pad`` copies of the last point along the batch axis. The
+    replicas quiesce exactly when their original does, so they never extend
+    the early-exit while_loop; ``summarize_batch`` strips their rows."""
+    return jax.tree.map(
+        lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]), tree)
 
 
 def _maybe_shard(trees, n_points: int):
-    """Lay the point axis across devices when it divides the device count."""
+    """Lay the (already padded) point axis across devices."""
     n_dev = len(jax.devices())
     if n_dev <= 1 or n_points % n_dev != 0:
         return trees
@@ -123,37 +155,30 @@ def _scan_batch(sys: CodedMemorySystem, st_b: SimState, trace_b: Trace,
     return st
 
 
-def summarize_batch(st_b: SimState) -> List[SimResult]:
-    """Batched SimState → per-point SimResults in one device→host transfer."""
+def summarize_batch(st_b: SimState,
+                    n_points: Optional[int] = None) -> List[SimResult]:
+    """Batched SimState → per-point SimResults in one device→host transfer.
+
+    ``n_points`` strips the masked dummy rows a padded-for-sharding batch
+    carries past the real points."""
     host = jax.device_get(st_b)
-    m = host.mem
-    out = []
-    for b in range(np.asarray(host.done_cycle).shape[0]):
-        dc = int(host.done_cycle[b])
-        sr = int(m.served_reads[b])
-        sw = int(m.served_writes[b])
-        out.append(SimResult(
-            cycles=dc if dc >= 0 else int(m.cycle[b]),
-            completed=dc >= 0,
-            served_reads=sr,
-            served_writes=sw,
-            degraded_reads=int(m.degraded_reads[b]),
-            parked_writes=int(m.parked_writes[b]),
-            switches=int(m.switches[b]),
-            recode_backlog=int(np.sum(m.rc_valid[b])),
-            stall_cycles=int(m.stall_cycles[b]),
-            avg_read_latency=float(m.read_latency_sum[b]) / max(sr, 1),
-            avg_write_latency=float(m.write_latency_sum[b]) / max(sw, 1),
-            rc_dropped=int(m.rc_dropped[b]),
-        ))
-    return out
+    n = np.asarray(host.done_cycle).shape[0] if n_points is None else n_points
+    return [result_from_host(jax.tree.map(lambda x: x[b], host.mem),
+                             host.done_cycle[b])
+            for b in range(n)]
 
 
 def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
               shard: bool = True) -> List[SimResult]:
     """Evaluate one shape-compatible batch as a single device program."""
     pts = batch.points
-    sys = system_for(pts[0], n_slots_alloc=batch_slot_alloc(pts))
+    # geometry indexing is traced only when this batch actually mixes
+    # (region_size, n_regions) geometries; a uniform batch (trace/seed/
+    # tunable/α sweeps at one r) compiles the static-indexing program —
+    # masking costs nothing unless it is used
+    traced = len({pt.derived_slots()[:2] for pt in pts}) > 1
+    sys = system_for(pts[0], geometry_alloc=batch_geometry_alloc(pts),
+                     traced_geometry=traced)
     if traces is None:
         traces = [workloads.build_trace(pt) for pt in pts]
     for pt, tr in zip(pts, traces):
@@ -163,11 +188,16 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
                 f"geometry ({pt.n_cores}, {pt.length})")
     trace_b = workloads.stack_traces(traces)
     tn_b = stack_tunables(pts, sys.p.queue_depth)
-    st_b = _batched_init(sys, len(pts))
+    pad = _pad_points(len(pts)) if shard else 0
+    if pad:
+        trace_b = _replicate_tail(trace_b, pad)
+        tn_b = _replicate_tail(tn_b, pad)
+    st_b = _batched_init(sys, tn_b)
     if shard:
-        st_b, trace_b, tn_b = _maybe_shard((st_b, trace_b, tn_b), len(pts))
+        st_b, trace_b, tn_b = _maybe_shard((st_b, trace_b, tn_b),
+                                           len(pts) + pad)
     st = _scan_batch(sys, st_b, trace_b, tn_b, pts[0].resolved_cycles())
-    return summarize_batch(st)
+    return summarize_batch(st, n_points=len(pts))
 
 
 def run_points(points: Sequence[SweepPoint],

@@ -12,13 +12,15 @@ two kinds of coordinates:
     ``wq_hi``. Points differing *only* here can share one compiled program
     with the point index as a ``vmap`` batch axis.
 
-α sits in between: it only enters the simulator through the parity-slot
-count ``n_slots = ⌊α/r⌋``, which *is* a shape — but a maskable one. Points
-that share every structural coordinate (scheme, rows, ``r``-derived region
-geometry) and are all below full coverage get their parity state allocated
-at the **largest** ``n_slots`` in the group, and each point's own budget
-rides along as the traced ``TunableParams.n_slots_active``. An α×r grid
-therefore partitions per-``r`` (and full-coverage α=1 separately), not per
+α and r sit in between: they only enter the simulator through the parity
+slot count ``n_slots = ⌊α/r⌋`` and the region geometry
+``region_size``/``n_regions`` — shapes, but *maskable* ones. Points that
+share every other structural coordinate (and full-coverage status) get
+region/parity state allocated at the **group maxima** of all three, and
+each point's own geometry rides along as the traced
+``TunableParams.{n_slots,region_size,n_regions}_active`` — indexing uses
+the traced values and the padding is masked off. An α×r grid therefore
+partitions per *(scheme, full-coverage)* group, not per r and not per
 (α, r) pair.
 
 ``partition`` groups points by their static signature so the engine runs a
@@ -91,25 +93,29 @@ class SweepPoint:
 def static_signature(pt: SweepPoint) -> Tuple:
     """Hashable key of everything that forces a distinct compiled program.
 
-    α is deliberately *not* part of the key below full coverage: its only
-    shape effect, ``n_slots``, is allocated at the group max and masked per
-    point (``TunableParams.n_slots_active``). Full-coverage points (static
-    identity region map, dynamic unit disabled) keep their own key.
+    α and r are deliberately *not* part of the key: their shape effects
+    (``n_slots`` and ``region_size``/``n_regions``) are allocated at the
+    group maxima and masked per point via the traced
+    ``TunableParams.{n_slots,region_size,n_regions}_active``. Only the
+    full-coverage *status* stays in the key — full-coverage points run with
+    the dynamic-coding unit statically disabled (identity region map), a
+    genuinely different program.
     """
-    region_size, n_regions, n_slots = pt.derived_slots()
+    _, n_regions, n_slots = pt.derived_slots()
     full = n_slots >= n_regions
-    return (pt.scheme, pt.n_data, pt.n_rows, region_size, n_regions, full,
+    return (pt.scheme, pt.n_data, pt.n_rows, full,
             pt.queue_depth, pt.coalesce, pt.recode_cap, pt.max_syms,
             pt.encode_rows_per_cycle, pt.recode_budget, pt.scheduler,
             pt.n_cores, pt.n_banks, pt.length, pt.resolved_cycles())
 
 
-def batch_slot_alloc(points: Sequence[SweepPoint]) -> Optional[int]:
-    """Parity-slot allocation for one shape-compatible batch: ``None`` for
-    full-coverage groups (exact identity allocation), else the group max."""
-    if points[0].full_coverage():
-        return None
-    return max(pt.derived_slots()[2] for pt in points)
+def batch_geometry_alloc(points: Sequence[SweepPoint]) -> Tuple[int, int, int]:
+    """(region_size, n_regions, n_slots) allocation for one shape-compatible
+    batch: the per-coordinate maxima over the group (for a single-geometry
+    group this is exactly the derived geometry — zero padding)."""
+    geoms = [pt.derived_slots() for pt in points]
+    return (max(g[0] for g in geoms), max(g[1] for g in geoms),
+            max(g[2] for g in geoms))
 
 
 @dataclasses.dataclass

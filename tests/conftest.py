@@ -6,6 +6,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
@@ -19,6 +21,19 @@ SMALL_N_ROWS = 64
 SMALL_TRACE_LEN = 32
 
 
+def rand_trace(rng, n_cores, length, n_banks, n_rows, write_frac=0.45):
+    """Seeded random request streams — the shared test-trace builder
+    (import as ``from conftest import rand_trace``)."""
+    from repro.core.system import Trace
+    return Trace(
+        bank=jnp.asarray(rng.integers(0, n_banks, (n_cores, length)), jnp.int32),
+        row=jnp.asarray(rng.integers(0, n_rows, (n_cores, length)), jnp.int32),
+        is_write=jnp.asarray(rng.random((n_cores, length)) < write_frac),
+        data=jnp.asarray(rng.integers(1, 1 << 20, (n_cores, length)), jnp.int32),
+        valid=jnp.asarray(rng.random((n_cores, length)) < 0.9),
+    )
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)
@@ -28,3 +43,16 @@ def rng_key():
 def small_geom():
     """(n_rows, trace_length) for quick end-to-end memory-system tests."""
     return SMALL_N_ROWS, SMALL_TRACE_LEN
+
+
+@pytest.fixture
+def sweep_compile_count():
+    """Callable returning how many device programs the sweep engine has
+    compiled so far (the jit cache size of its batched scan). Take a delta
+    around ``run_points`` to assert the compile count of a grid."""
+    from repro.sweep import engine
+
+    if not hasattr(engine._scan_batch, "_cache_size"):
+        # private jax API; don't fail unrelated tests on a jax upgrade
+        pytest.skip("jit._cache_size() not available in this jax version")
+    return lambda: engine._scan_batch._cache_size()

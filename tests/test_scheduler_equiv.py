@@ -15,13 +15,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import rand_trace
 
 from repro.core import controller as ctl
 from repro.core import controller_ref as ctl_ref
 from repro.core.codes import get_tables
 from repro.core.recoding import recode_step, recode_step_ref
-from repro.core.state import make_params
-from repro.core.system import CodedMemorySystem, Trace
+from repro.core.state import derive_geometry, make_params, make_tunables
+from repro.core.system import CodedMemorySystem
 
 SCHEMES = ["scheme_i", "scheme_ii", "scheme_iii", "replication_2", "uncoded"]
 
@@ -156,16 +157,6 @@ def _run_state(scheme, scheduler, trace, n_cycles, **kw):
     return sys, st
 
 
-def _rand_trace(rng, n_cores, length, n_banks, n_rows, write_frac=0.45):
-    return Trace(
-        bank=jnp.asarray(rng.integers(0, n_banks, (n_cores, length)), jnp.int32),
-        row=jnp.asarray(rng.integers(0, n_rows, (n_cores, length)), jnp.int32),
-        is_write=jnp.asarray(rng.random((n_cores, length)) < write_frac),
-        data=jnp.asarray(rng.integers(1, 1 << 20, (n_cores, length)), jnp.int32),
-        valid=jnp.asarray(rng.random((n_cores, length)) < 0.9),
-    )
-
-
 @pytest.mark.parametrize("scheme,alpha,r", [
     ("scheme_i", 1.0, 0.25),
     ("scheme_i", 0.25, 0.125),     # dynamic coding engaged
@@ -176,7 +167,7 @@ def test_end_to_end_state_equivalence(scheme, alpha, r):
     """Full simulations (arbiter + builders + commit + recode + dynamic) agree
     on every field of the final state, not just summary stats."""
     rng = np.random.default_rng(7)
-    trace = _rand_trace(rng, 4, 20, min(8, get_tables(scheme).n_data), 32)
+    trace = rand_trace(rng, 4, 20, min(8, get_tables(scheme).n_data), 32)
     _, st_v = _run_state(scheme, "vectorized", trace, 96, alpha=alpha, r=r)
     _, st_r = _run_state(scheme, "reference", trace, 96, alpha=alpha, r=r)
     leaves_v, treedef_v = jax.tree.flatten(st_v)
@@ -186,6 +177,45 @@ def test_end_to_end_state_equivalence(scheme, alpha, r):
         np.testing.assert_array_equal(
             np.asarray(lv), np.asarray(lr),
             err_msg=f"{scheme} α={alpha} r={r}: leaf {name}")
+
+
+@pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
+@pytest.mark.parametrize("alpha,r", [
+    (0.25, 0.125),     # sub-coverage: dynamic coding engaged
+    (1.0, 0.125),      # full coverage: static identity map
+    (0.05, 0.25),      # α < r: explicit 0-slot uncoded point
+])
+def test_padded_geometry_matches_exact_allocation(scheduler, alpha, r):
+    """The r-mask contract at the system level: a program whose region and
+    parity state is over-allocated (padded region_size / n_regions /
+    n_slots) but runs at the point's traced active geometry must produce
+    the same SimResult as the exactly-allocated program — for both
+    schedulers."""
+    n_rows = 32
+    rng = np.random.default_rng(11)
+    t = get_tables("scheme_i")
+    trace = rand_trace(rng, 4, 16, t.n_data, n_rows)
+    rs, nr, ns = derive_geometry(n_rows, alpha, r)
+    full = ns >= nr
+
+    exact_p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8,
+                          scheduler=scheduler)
+    exact = CodedMemorySystem(t, exact_p, n_cores=4).run(trace, 96)
+
+    # pad every geometry axis past the derived values (a full-coverage
+    # allocation must keep n_slots == n_regions to stay full-coverage)
+    pad_nr = nr + 3
+    pad_ns = pad_nr if full else ns + 2
+    padded_p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8,
+                           scheduler=scheduler, region_size_alloc=rs + 5,
+                           n_regions_alloc=pad_nr, n_slots_alloc=pad_ns,
+                           traced_geometry=True)
+    tn = make_tunables(queue_depth=padded_p.queue_depth,
+                       n_slots_active=ns, region_size_active=rs,
+                       n_regions_active=nr)
+    padded = CodedMemorySystem(t, padded_p, n_cores=4,
+                               tunables=tn).run(trace, 96)
+    assert padded == exact
 
 
 # ---------------------------------------------------------------- hypothesis

@@ -1,0 +1,135 @@
+"""State-layer regressions: tunable clamping, wide (64-bit) statistics
+accumulators, and the α < r zero-slot geometry — the bugs the α×r sweeps
+exposed."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import rand_trace
+
+from repro.core.codes import get_tables
+from repro.core.state import (derive_geometry, make_params, make_tunables,
+                              wide_add, wide_total, wide_zero)
+from repro.core.system import CodedMemorySystem
+
+
+# ------------------------------------------------------- hysteresis clamping
+def test_make_tunables_clamps_crossed_thresholds():
+    """wq_lo must never exceed wq_hi: crossed thresholds would flap
+    write_mode every cycle (enter at occupancy >= hi, stay only while
+    occupancy > lo > hi — no stable state)."""
+    tn = make_tunables(queue_depth=10, wq_hi=2, wq_lo=8)
+    assert int(tn.wq_lo) <= int(tn.wq_hi)
+    # wq_hi itself is still clamped into the queue
+    tn = make_tunables(queue_depth=4, wq_hi=99, wq_lo=99)
+    assert int(tn.wq_hi) == 3 and int(tn.wq_lo) <= 3
+
+
+def test_crossed_thresholds_simulate_like_clamped():
+    """A crossed-threshold sweep point runs exactly like its clamped
+    equivalent (the clamp is the semantics, not a new behaviour)."""
+    from repro.sim.ramulator import simulate
+    rng = np.random.default_rng(3)
+    trace = rand_trace(rng, 4, 16, 8, 32, write_frac=0.7)
+    crossed = simulate("scheme_i", trace, 32, alpha=0.25, r=0.125,
+                       n_cycles=128, wq_hi=2, wq_lo=8)
+    clamped = simulate("scheme_i", trace, 32, alpha=0.25, r=0.125,
+                       n_cycles=128, wq_hi=2, wq_lo=2)
+    assert crossed == clamped
+    assert crossed.completed
+
+
+# ------------------------------------------------------------- wide counters
+def test_wide_add_crosses_32bit_boundary():
+    acc = wide_zero()
+    assert acc.dtype == jnp.uint32          # explicit, x64-flag independent
+    step = (1 << 31) - 1
+    for _ in range(4):                      # 4 * (2^31 - 1) > 2^32
+        acc = wide_add(acc, jnp.int32(step))
+    assert wide_total(acc) == 4 * step
+    assert wide_total(acc) > (1 << 32)
+
+
+def test_latency_sums_do_not_overflow_int32():
+    """Latency/stat accumulators pre-loaded near the int32 boundary keep
+    counting exactly past 2^31 (the old int32 fields wrapped negative)."""
+    t = get_tables("uncoded")          # no parity paths: same-bank requests
+    p = make_params(t, n_rows=32, alpha=1.0, r=0.25)   # serialize, latency ≥ 1
+    sys = CodedMemorySystem(t, p, n_cores=4)
+    rng = np.random.default_rng(9)
+    trace = rand_trace(rng, 4, 12, 2, 32, write_frac=0.5)  # 2 banks: contention
+    base = (1 << 31) - 1                    # one increment from the boundary
+    near = jnp.asarray([np.uint32(base), np.uint32(0)])
+    st = sys.init()
+    st = st._replace(mem=st.mem._replace(read_latency_sum=near,
+                                         write_latency_sum=near,
+                                         stall_cycles=near))
+    for _ in range(96):
+        st, _ = sys.cycle_fn(st, trace)
+        if int(st.done_cycle) >= 0:
+            break
+    res = sys.summarize(st)
+    sr, sw = int(st.mem.served_reads), int(st.mem.served_writes)
+    assert sr > 0 and sw > 0
+    # queued writes always wait ≥1 cycle for the drain hysteresis, so both
+    # latency totals crossed 2^31 — exactly where the old int32 wrapped
+    assert wide_total(st.mem.read_latency_sum) > (1 << 31)
+    assert wide_total(st.mem.write_latency_sum) > (1 << 31)
+    assert wide_total(st.mem.stall_cycles) >= base  # monotone, no wrap
+    assert res.avg_read_latency > 0 and res.avg_write_latency > 0
+
+
+# ------------------------------------------------------------ α < r geometry
+def test_derive_geometry_alpha_below_r_is_zero_slots():
+    rs, nr, ns = derive_geometry(320, alpha=0.02, r=0.05)
+    assert (rs, nr) == (16, 20)
+    assert ns == 0                           # no free parity slot granted
+    # boundary: α == r still earns exactly one slot
+    assert derive_geometry(320, alpha=0.05, r=0.05)[2] == 1
+
+
+def test_alpha_below_r_runs_uncoded():
+    """⌊α/r⌋ = 0: the system must behave exactly like an uncoded memory —
+    no degraded reads, no parked writes, no region switches — instead of
+    silently granting a free parity slot."""
+    from repro.sim.ramulator import simulate
+    t = get_tables("scheme_i")
+    p = make_params(t, n_rows=32, alpha=0.05, r=0.25)
+    assert p.n_active == 0 and p.n_slots == 1   # storage floor only
+    rng = np.random.default_rng(5)
+    trace = rand_trace(rng, 4, 16, 8, 32, write_frac=0.5)
+    res = simulate("scheme_i", trace, 32, alpha=0.05, r=0.25, n_cycles=128,
+                   select_period=8)
+    assert res.completed
+    assert res.degraded_reads == 0
+    assert res.parked_writes == 0
+    assert res.switches == 0
+
+
+def test_non_traced_system_rejects_stray_geometry_actives():
+    """Explicit region-geometry actives on a system built without
+    ``traced_geometry=True`` would be silently ignored — init must reject
+    them instead of simulating a hybrid configuration."""
+    from repro.core.state import init_state
+    t = get_tables("scheme_i")
+    p = make_params(t, n_rows=32, alpha=0.25, r=0.125)  # static geometry
+    tn = make_tunables(queue_depth=10, region_size_active=2,
+                       n_regions_active=16)
+    with pytest.raises(ValueError, match="traced_geometry"):
+        init_state(p, tn)
+    # matching (or default-sentinel) actives are fine
+    init_state(p, make_tunables(queue_depth=10))
+    rs, nr, _ = derive_geometry(32, 0.25, 0.125)
+    init_state(p, make_tunables(queue_depth=10, region_size_active=rs,
+                                n_regions_active=nr))
+
+
+def test_make_params_rejects_undersized_allocs():
+    t = get_tables("scheme_i")
+    with pytest.raises(ValueError):
+        make_params(t, n_rows=32, alpha=0.5, r=0.125, n_slots_alloc=1)
+    with pytest.raises(ValueError):
+        make_params(t, n_rows=32, alpha=0.5, r=0.125, region_size_alloc=2)
+    with pytest.raises(ValueError):
+        make_params(t, n_rows=32, alpha=0.5, r=0.125, n_regions_alloc=4)
+    with pytest.raises(ValueError):             # alloc flips coverage status
+        make_params(t, n_rows=32, alpha=0.5, r=0.125, n_slots_alloc=64)

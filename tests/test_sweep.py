@@ -52,16 +52,13 @@ def test_batched_matches_looped_tunable_axis():
 
 @pytest.mark.slow
 def test_batched_matches_looped_mixed_shapes():
-    """A sweep mixing static shapes (α, r) partitions into several batches
-    and still reassembles results in point order, identical to looped.
-    (Slow tier: 4 compiled programs + 4 looped compiles; the fast tier keeps
-    the α-sharing variant below, which exercises reassembly across a masked
-    batch with one compile.)
-
-    α=1.0 is full coverage (static identity map) and keeps its own compiled
-    shape; α=0.25 is dynamic. 2 rs × {full, masked} = 4 batches."""
+    """A sweep mixing full- and sub-coverage (α, r) points partitions into
+    one batch per (scheme, full-coverage) group — the r axis is masked, not
+    a shape — and still reassembles results in point order, identical to
+    looped. α=1.0 keeps its own compiled program (static identity region
+    map, dynamic unit disabled); both r values share it."""
     pts = grid(BASE, alpha=(0.25, 1.0), r=(0.125, 0.25))
-    assert len(partition(pts)) == 4
+    assert len(partition(pts)) == 2
     batched = run_points(pts)
     for pt, got in zip(pts, batched):
         assert got == _looped(pt), pt
@@ -81,6 +78,67 @@ def test_alpha_axis_shares_one_compiled_shape():
     for pt, got in zip(pts, batched):
         if pt.seed == 0:
             assert got == _looped(pt), pt
+
+
+@pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
+def test_r_axis_shares_one_compiled_shape(scheduler, sweep_compile_count):
+    """The r-mask equivalence contract: an α×r grid (all sub-coverage) is
+    ONE partition — region/parity state allocated at the group-max geometry,
+    each point's own (region_size, n_regions, n_slots) traced — and every
+    point is bit-identical to today's per-r exactly-allocated compiled
+    program (the looped path), for both schedulers."""
+    from repro.sweep.engine import clear_caches
+    clear_caches()
+    pts = grid(BASE.replace(scheduler=scheduler),
+               alpha=(0.25, 0.5), r=(0.125, 0.25))
+    assert len({pt.derived_slots() for pt in pts}) == 4   # 4 distinct geoms
+    assert len(partition(pts)) == 1
+    before = sweep_compile_count()
+    batched = run_points(pts)
+    assert sweep_compile_count() - before == 1   # ONE program for the grid
+    for pt, got in zip(pts, batched):
+        assert got == _looped(pt), pt
+
+
+def test_full_coverage_r_axis_shares_one_compiled_shape(sweep_compile_count):
+    """Full-coverage (α ≥ r·n_regions) points batch across r too: the
+    identity region map is built per point from the traced geometry."""
+    from repro.sweep.engine import clear_caches
+    clear_caches()
+    pts = grid(BASE, alpha=(1.0,), r=(0.125, 0.25), seed=(0, 1))
+    assert len(partition(pts)) == 1
+    before = sweep_compile_count()
+    batched = run_points(pts)
+    assert sweep_compile_count() - before == 1
+    for pt, got in zip(pts, batched):
+        assert got == _looped(pt), pt
+
+
+def test_fig20_alpha_ramp_below_r():
+    """The fig20-style α ramp extended below r: ⌊α/r⌋ = 0 must be an
+    explicit uncoded point (no free parity slot granted), batch with the
+    rest of the ramp, and match its own looped program."""
+    from repro.sim.ramulator import sweep_alpha
+
+    alphas = (0.05, 0.25, 0.5)          # 0.05 < r=0.125 -> 0 slots
+    pts = grid(BASE, alpha=alphas)
+    assert pts[0].derived_slots()[2] == 0
+    assert len(partition(pts)) == 1
+    batched = run_points(pts)
+    tiny = batched[0]
+    # zero coded regions: behaves exactly like an uncoded memory
+    assert tiny.completed
+    assert tiny.degraded_reads == 0
+    assert tiny.parked_writes == 0
+    assert tiny.switches == 0
+    for pt, got in zip(pts, batched):
+        assert got == _looped(pt), pt
+    # the ramulator-level α-ramp wrapper agrees point for point
+    trace = build_trace(BASE)
+    ramp = sweep_alpha(BASE.scheme, trace, BASE.n_rows, alphas=alphas,
+                       r=BASE.r, n_cycles=BASE.resolved_cycles(),
+                       select_period=BASE.select_period)
+    assert ramp[0.05] == tiny
 
 
 def test_scheduler_axis_is_static():
@@ -158,6 +216,43 @@ def test_ambiguous_baseline_raises():
     # extending match with the distinguishing coordinate always works
     rows = rs.rows(match=("trace", "seed", "length", "select_period"))
     assert rows[0]["speedup"] == 1.0
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(600)   # two full compiles on a forced 4-device host —
+                            # the CI tier's default --timeout=300 is too tight
+def test_padded_sharding_multidevice_subprocess():
+    """A batch whose size does NOT divide the device count is padded with
+    masked dummy points, sharded across a forced 4-device host, and returns
+    the same per-point results as the unsharded run (dummies stripped)."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+assert len(jax.devices()) == 4
+from repro.sweep import SweepPoint, grid, run_points
+from repro.sweep.engine import clear_caches
+
+BASE = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=32,
+                  n_cores=3, n_banks=8, length=10, select_period=16)
+pts = grid(BASE, alpha=(0.25, 0.5), r=(0.125, 0.25), seed=(0, 1))[:6]
+assert len(pts) % 4 != 0          # forces the pad-to-device-multiple path
+sharded = run_points(pts, shard=True)
+clear_caches()                    # fresh program, no sharding
+unsharded = run_points(pts, shard=False)
+assert len(sharded) == len(pts)
+for i, (a, b) in enumerate(zip(sharded, unsharded)):
+    assert a == b, (i, a, b)
+print("SHARDED_OK")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SHARDED_OK" in out.stdout, out.stdout + out.stderr
 
 
 def test_compare_schemes_wrapper_matches_simulate():

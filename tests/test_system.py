@@ -6,9 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import rand_trace
+
 from repro.core.codes import get_tables
 from repro.core.state import make_params
-from repro.core.system import CodedMemorySystem, Trace
+from repro.core.system import CodedMemorySystem
 from repro.sim.ramulator import compare_schemes, simulate
 from repro.sim.trace import TraceSpec, banded_trace, uniform_trace
 
@@ -20,14 +22,8 @@ def _mk_system(scheme="scheme_i", n_rows=64, alpha=1.0, r=0.25, n_cores=4):
 
 
 def _rand_trace(n_cores, T, n_rows, seed=0, write_frac=0.4):
-    rng = np.random.default_rng(seed)
-    return Trace(
-        bank=jnp.asarray(rng.integers(0, 8, (n_cores, T)), jnp.int32),
-        row=jnp.asarray(rng.integers(0, n_rows, (n_cores, T)), jnp.int32),
-        is_write=jnp.asarray(rng.random((n_cores, T)) < write_frac),
-        data=jnp.asarray(rng.integers(1, 1 << 20, (n_cores, T)), jnp.int32),
-        valid=jnp.asarray(rng.random((n_cores, T)) < 0.9),
-    )
+    return rand_trace(np.random.default_rng(seed), n_cores, T, 8, n_rows,
+                      write_frac=write_frac)
 
 
 @pytest.mark.parametrize("scheme", ["scheme_i", "scheme_ii", "scheme_iii"])
