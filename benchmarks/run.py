@@ -16,8 +16,9 @@ def main():
     t0 = time.time()
 
     from benchmarks import (bench_cycles, bench_embedding, bench_kvbank,
-                            bench_sweep, fig18_dedup, fig19_split,
-                            fig20_ramp, roofline_report, tab_schemes)
+                            bench_stream, bench_sweep, fig18_dedup,
+                            fig19_split, fig20_ramp, roofline_report,
+                            tab_schemes)
 
     tab_schemes.run()
     fig18_dedup.run(length=48 if args.fast else 96)
@@ -25,6 +26,7 @@ def main():
     fig20_ramp.run(length=48 if args.fast else 96)
     bench_sweep.run(length=32 if args.fast else 48)
     bench_cycles.run(smoke=args.fast)
+    bench_stream.run(smoke=args.fast)
     bench_kvbank.run()
     bench_embedding.run()
     roofline_report.run("pod16x16")

@@ -6,6 +6,11 @@ semantics; ``repro.core.controller`` re-implements them as compacted,
 work-proportional builders that must produce bit-identical plans (see
 tests/test_scheduler_equiv.py and docs/performance.md for the equivalence
 contract). Select them end-to-end with ``make_params(scheduler="reference")``.
+
+DEPRECATED: the reference scheduler exists only as the soak oracle for the
+vectorized builders; ``make_params(scheduler="reference")`` emits a
+``DeprecationWarning``, and this module will be removed once the ROADMAP's
+soak period ends (equivalence suites opt in explicitly via filterwarnings).
 """
 from __future__ import annotations
 

@@ -71,6 +71,51 @@ def _encode_region_data(
     return jax.lax.dynamic_update_slice(parity_data, vals, (0, start))
 
 
+def priors_layout(p: MemParams, tn, priors):
+    """(region_slot, slot_region, parity_valid) pre-mapping profiled hot
+    regions into parity slots — the warm start ``init_state`` applies when a
+    trace profile's region-priors are available.
+
+    ``priors`` is a ranked int32 array of *distinct* region ids, hottest
+    first, -1 padded (``repro.traces.profiler.TraceProfile.region_priors``
+    emits exactly this). The leading entries fill parity slots 0.. up to the
+    point's slot budget; ids outside the active region range and -1 padding
+    are skipped without shifting later entries into their slots. Parity rows
+    of the mapped slots are marked valid: at init every data bank is zero,
+    so the all-zero parity rows already equal the XOR of their members —
+    the same consistency argument the full-coverage identity map relies on.
+
+    From here the unit proceeds exactly as from a cold start: the seeded
+    regions are ordinary coded regions (evictable by LFU once colder than
+    the hottest uncoded region), so a stale prior costs at most one
+    re-selection period — the cold start pays that period anyway.
+    """
+    rs = p.region_size
+    if tn is None:
+        rs_a, nr_a = p.region_size, p.n_regions
+        budget = jnp.int32(p.n_active)
+    else:
+        rs_a, nr_a = active_geometry(p, tn)
+        budget = jnp.minimum(tn.n_slots_active, p.n_active)
+    pr = jnp.asarray(priors, jnp.int32).reshape(-1)
+    k = pr.shape[0]
+    if k == 0:
+        return (jnp.full((p.n_regions,), -1, jnp.int32),
+                jnp.full((p.n_slots,), -1, jnp.int32),
+                jnp.zeros((p.n_parities, p.n_slots * rs), bool))
+    sid = jnp.arange(p.n_slots)
+    cand = jnp.where(sid < k, pr[jnp.minimum(sid, k - 1)], -1)
+    ok = (sid < budget) & (cand >= 0) & (cand < nr_a)
+    slot_region = jnp.where(ok, cand, -1).astype(jnp.int32)
+    region_slot = jnp.full((p.n_regions,), -1, jnp.int32).at[
+        jnp.where(ok, cand, p.n_regions)].set(
+        sid.astype(jnp.int32), mode="drop")
+    row = jnp.arange(p.n_slots * rs)
+    active = ok[row // rs] & (row % rs < rs_a)
+    parity_valid = jnp.broadcast_to(active, (p.n_parities, p.n_slots * rs))
+    return region_slot, slot_region, parity_valid
+
+
 def dynamic_step(
     p: MemParams,
     t: JTables,

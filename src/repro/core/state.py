@@ -23,6 +23,7 @@ Dynamic coding (§IV-E): rows are grouped into ``n_regions`` regions of
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -65,7 +66,13 @@ class MemParams(NamedTuple):
     coalesce: bool        # allow FROM_SYM / chained-decode reuse (off for the
                           # uncoded Ramulator-like baseline)
     scheduler: str = "vectorized"  # "vectorized" (compacted-walk builders) or
-                                   # "reference" (the sequential greedy loops)
+                                   # "reference" (the sequential greedy loops).
+                                   # "reference" is DEPRECATED: it is retained
+                                   # only as the bit-identical soak oracle for
+                                   # the vectorized scheduler and will be
+                                   # removed once the ROADMAP's soak period
+                                   # ends; selecting it raises a
+                                   # DeprecationWarning from ``make_params``.
     encode_rows_per_cycle: int = 64  # encoder bandwidth; the traced
                                      # per-point encode latency is
                                      # max(1, region_size_active // this)
@@ -199,6 +206,15 @@ def make_params(
     n_regions_alloc: Optional[int] = None,
     traced_geometry: bool = False,
 ) -> MemParams:
+    if scheduler == "reference":
+        # the sequential loops are kept only as the equivalence-soak oracle
+        # (docs/performance.md); suites that assert vectorized == reference
+        # opt in to the warning explicitly (filterwarnings marks)
+        warnings.warn(
+            "scheduler='reference' is deprecated: the sequential scheduler "
+            "survives only as the bit-identical soak oracle for "
+            "scheduler='vectorized' and will be removed after the soak "
+            "period (ROADMAP).", DeprecationWarning, stacklevel=2)
     region_size, n_regions, n_slots = derive_geometry(n_rows, alpha, r)
     full = n_slots >= n_regions
     # ---- group allocation: a sweep batches several α/r geometries over one
@@ -304,7 +320,8 @@ def _concrete_int(x) -> Optional[int]:
         return None
 
 
-def init_state(p: MemParams, tn: Optional[TunableParams] = None) -> MemState:
+def init_state(p: MemParams, tn: Optional[TunableParams] = None,
+               region_priors=None) -> MemState:
     """Initial controller state.
 
     With ``tn`` (the batched-sweep path), the point's *active* geometry
@@ -312,6 +329,13 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None) -> MemState:
     arrays: padded regions/slots stay unmapped (-1) and padded parity rows
     stay invalid, so a padded program is bit-identical per point to an
     exactly allocated one. Without ``tn``, the allocation is the geometry.
+
+    ``region_priors`` (sub-coverage systems only) warm-starts the dynamic
+    coding unit: a ranked int32 array of hot region ids (-1 padded) — e.g.
+    ``repro.traces.profiler.TraceProfile.region_priors`` — whose leading
+    entries are pre-mapped into parity slots with their parities already
+    valid (all banks are zero at init, so the all-zero parity rows are the
+    true XOR of their members). See ``repro.core.dynamic.priors_layout``.
     """
     if tn is not None and not p.traced_geometry:
         # a non-traced system ignores the geometry actives entirely — reject
@@ -348,6 +372,10 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None) -> MemState:
             row = jnp.arange(n_slot_rows, dtype=jnp.int32)
             active = (row // p.region_size < nr_a) & (row % p.region_size < rs_a)
             parity_valid = jnp.broadcast_to(active, (p.n_parities, n_slot_rows))
+    elif region_priors is not None:
+        from repro.core.dynamic import priors_layout
+        region_slot, slot_region, parity_valid = priors_layout(
+            p, tn, region_priors)
     else:
         region_slot = jnp.full((p.n_regions,), -1, jnp.int32)
         slot_region = jnp.full((p.n_slots,), -1, jnp.int32)

@@ -15,7 +15,10 @@ One ``cycle_fn`` call = one memory clock cycle (paper Fig 2 / §IV):
   5. **Dynamic coding unit** — hot-region selection / encode / evict.
 
 ``run()`` wraps ``cycle_fn`` in a ``lax.scan`` for trace-driven simulation
-(the Ramulator-replacement used by the benchmarks).
+(the Ramulator-replacement used by the benchmarks). ``run_chunk()`` advances
+an explicit ``SimState`` carry over a fixed-shape staged chunk of a longer
+stream — the device half of ``repro.traces.stream.stream_replay``, which
+replays arbitrarily long traces under a constant device-memory footprint.
 """
 from __future__ import annotations
 
@@ -47,17 +50,52 @@ class Trace(NamedTuple):
     valid: jnp.ndarray     # (n_cores, T) bool
 
 
-def drain_bound(n_cores: int, length: int) -> int:
-    """Worst-case cycle budget for a trace of ``length`` requests per core:
-    every request could serialize on a single port. The shared formula for
-    the looped (``sim.ramulator``) and batched (``repro.sweep``) paths."""
-    return int(n_cores * length * 1.5) + 64
+def drain_bound(n_cores: int, length: int, backlog: int = 0) -> int:
+    """Worst-case cycle budget to drain ``length`` requests per core.
+
+    Derivation: the system serves at least one access per cycle whenever any
+    queue is non-empty (the write-drain hysteresis always picks a non-empty
+    side), so ``n_cores * length`` requests fully serialized on a single
+    port need at most ``n_cores * length`` service cycles. The 1.5 factor
+    covers cycles where a request is in flight but its queue push stalled on
+    a full destination queue (a stalled core retries every cycle, and every
+    such cycle is also a service cycle for the queue blocking it — 0.5 per
+    request over-counts this deliberately), and the +64 constant covers the
+    cold start (empty queues) and the post-drain settling of the recoding /
+    dynamic-coding units.
+
+    ``backlog`` adds carried-over work that is *already queued* when the
+    budget starts — the chunked-replay case (``CodedMemorySystem.run_chunk``),
+    where up to ``2 * n_data * queue_depth`` requests from the previous chunk
+    may still occupy the read+write queues. It is counted like any other
+    request (one service cycle each).
+
+    This is the single shared bound for the looped (``sim.ramulator``),
+    batched (``repro.sweep``) and streamed (``repro.traces``) paths — do not
+    re-derive it inline.
+    """
+    return int((n_cores * length + backlog) * 1.5) + 64
 
 
 class SimState(NamedTuple):
     mem: MemState
     core_ptr: jnp.ndarray   # (n_cores,) int32
     done_cycle: jnp.ndarray  # () int32, -1 until the workload drains
+
+
+def quiescent(st: "SimState") -> jnp.ndarray:
+    """Per-point observable fixed point: workload drained (``done_cycle``
+    latched), encoder idle, recode ring empty. After this, every further
+    cycle is an observable no-op (the dynamic unit starts nothing new after
+    drain — ``dynamic_step``'s ``quiesce``), which is what makes every
+    early exit bit-identical to running a bound out. The ONE definition
+    shared by the sweep engine's batched early exit, ``run_chunk``'s
+    chunk-exit, and the streaming drivers — new drain conditions must land
+    here, not in per-caller copies. Works on single and batched states
+    (trailing-axis reduction over the ring)."""
+    m = st.mem
+    return ((st.done_cycle >= 0) & (m.enc_region < 0)
+            & ~jnp.any(m.rc_valid, axis=-1))
 
 
 class CycleOut(NamedTuple):
@@ -83,6 +121,14 @@ class SimResult(NamedTuple):
     avg_read_latency: float
     avg_write_latency: float
     rc_dropped: int = 0   # recode requests lost to a full ring (write path)
+    # per-window critical-word latency stats, filled by the streaming replay
+    # driver (``repro.traces.stream``): one (n_served, avg_latency) pair per
+    # replay window. Empty for single-shot runs, so equality comparisons
+    # between engine paths are unaffected; strip with
+    # ``repro.traces.stream.strip_windows`` before comparing streamed vs
+    # single-shot results.
+    window_read_latency: tuple = ()
+    window_write_latency: tuple = ()
 
 
 def result_from_host(m: MemState, done_cycle) -> SimResult:
@@ -127,17 +173,21 @@ class CodedMemorySystem:
                          else make_tunables(queue_depth=params.queue_depth))
 
     # ------------------------------------------------------------------ init
-    def init(self, tn: Optional[TunableParams] = None) -> SimState:
+    def init(self, tn: Optional[TunableParams] = None,
+             region_priors=None) -> SimState:
         """Initial state; ``tn`` masks a padded group allocation down to the
-        point's active geometry (see ``init_state``)."""
+        point's active geometry (see ``init_state``). ``region_priors`` is a
+        ranked array of hot region ids (e.g. from
+        ``repro.traces.profiler``) pre-mapped into parity slots so the
+        dynamic coding unit starts warm instead of cold."""
         return SimState(
-            mem=init_state(self.p, tn),
+            mem=init_state(self.p, tn, region_priors=region_priors),
             core_ptr=jnp.zeros((self.n_cores,), jnp.int32),
             done_cycle=jnp.int32(-1),
         )
 
     # --------------------------------------------------------------- arbiter
-    def _arbiter(self, st: SimState, trace: Trace, rs_a):
+    def _arbiter(self, st: SimState, trace: Trace, rs_a, stream_end=None):
         """Push each core's pending request into its destination queue.
 
         Vectorized: cores are ranked within their destination (bank, r/w)
@@ -146,9 +196,16 @@ class CodedMemorySystem:
         slots of a queue go to the first ``rank`` ranked cores, so slot
         assignment, full-queue stalls and pointer advances are bit-identical
         to the reference loop (``_arbiter_ref``).
+
+        ``stream_end`` (chunked replay): per-core count of staged requests —
+        a core whose pointer reaches its stream end has consumed its whole
+        request stream; INT32_MAX marks "more data beyond this chunk" (the
+        chunk driver exits before such a core can over-run the staging
+        buffer). ``None`` (single-shot) means the trace length is the end
+        for every core — the exact pre-chunking program.
         """
         if self.p.scheduler == "reference":
-            return self._arbiter_ref(st, trace, rs_a)
+            return self._arbiter_ref(st, trace, rs_a, stream_end)
         p = self.p
         m = st.mem
         tlen = trace.bank.shape[1]
@@ -156,7 +213,7 @@ class CodedMemorySystem:
         car = jnp.arange(nc)
 
         pos = st.core_ptr
-        in_range = pos < tlen
+        in_range = pos < (tlen if stream_end is None else stream_end)
         pc = jnp.minimum(pos, tlen - 1)
         v = trace.valid[car, pc] & in_range
         b = jnp.maximum(trace.bank[car, pc], 0)
@@ -214,7 +271,7 @@ class CodedMemorySystem:
         )
         return st._replace(mem=mem, core_ptr=ptr)
 
-    def _arbiter_ref(self, st: SimState, trace: Trace, rs_a):
+    def _arbiter_ref(self, st: SimState, trace: Trace, rs_a, stream_end=None):
         p = self.p
         tlen = trace.bank.shape[1]
 
@@ -222,7 +279,7 @@ class CodedMemorySystem:
             (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid, wq_data,
              access_count, stalls, cyc) = carry
             pos = ptr[ci]
-            in_range = pos < tlen
+            in_range = pos < (tlen if stream_end is None else stream_end[ci])
             pc = jnp.minimum(pos, tlen - 1)
             v = trace.valid[ci, pc] & in_range
             b = jnp.maximum(trace.bank[ci, pc], 0)
@@ -368,7 +425,8 @@ class CodedMemorySystem:
     # ------------------------------------------------------------- one cycle
     @functools.partial(jax.jit, static_argnums=0)
     def cycle_fn(self, st: SimState, trace: Trace,
-                 tn: Optional[TunableParams] = None):
+                 tn: Optional[TunableParams] = None,
+                 stream_end: Optional[jnp.ndarray] = None):
         p, t = self.p, self.t
         if tn is None:
             tn = self.tunables
@@ -381,7 +439,7 @@ class CodedMemorySystem:
         # lets the sweep engine cut trailing dead cycles without changing
         # any observable statistic.
         was_done = st.done_cycle >= 0
-        st = self._arbiter(st, trace, rs_a)
+        st = self._arbiter(st, trace, rs_a, stream_end)
         m = st.mem
         n_cand = p.n_data * p.queue_depth
         port_busy0 = jnp.zeros((p.n_ports + 1,), bool)
@@ -489,9 +547,13 @@ class CodedMemorySystem:
             enc_remaining=dy.enc_remaining, enc_slot=dy.enc_slot,
             switches=dy.switches,
         )
-        # completion bookkeeping
+        # completion bookkeeping: a core is consumed once its pointer passes
+        # its stream end (the full trace length in single-shot mode; the
+        # staged request count for a chunk whose stream is exhausted;
+        # never, for a chunk with more data behind it — INT32_MAX)
         tlen = trace.bank.shape[1]
-        consumed = jnp.all(st.core_ptr >= tlen)
+        consumed = jnp.all(
+            st.core_ptr >= (tlen if stream_end is None else stream_end))
         drained = ~jnp.any(m.rq_valid) & ~jnp.any(m.wq_valid)
         done = consumed & drained
         done_cycle = jnp.where((st.done_cycle < 0) & done, m.cycle, st.done_cycle)
@@ -509,10 +571,56 @@ class CodedMemorySystem:
         return jax.lax.scan(body, st, None, length=n_cycles)
 
     def run(self, trace: Trace, n_cycles: int,
-            tn: Optional[TunableParams] = None) -> SimResult:
+            tn: Optional[TunableParams] = None,
+            st: Optional[SimState] = None) -> SimResult:
+        """Single-shot replay; ``st`` carries in an explicit initial state
+        (the chunked-replay driver threads states the same way)."""
         tn = tn if tn is not None else self.tunables
-        st, _ = self._run(self.init(tn), trace, n_cycles, tn)
+        st, _ = self._run(st if st is not None else self.init(tn),
+                          trace, n_cycles, tn)
         return self.summarize(st)
+
+    # ----------------------------------------------------------- chunked run
+    # NOTE: the SimState carry is deliberately NOT donated (unlike the sweep
+    # engine's _scan_batch): a fresh init_state aliases one zero scalar
+    # across several leaves (and priors/traced inits hold broadcast views),
+    # and donating an aliased buffer twice is a runtime error on the first
+    # chunk. The state is a small constant per chunk; the footprint bound
+    # comes from the fixed staging-buffer shape.
+    @functools.partial(jax.jit, static_argnums=(0, 4))
+    def run_chunk(self, st: SimState, trace: Trace, stream_end: jnp.ndarray,
+                  n_cycles: int, tn: Optional[TunableParams] = None) -> SimState:
+        """One streaming-replay step: advance ``st`` over a staged chunk.
+
+        ``trace`` is a fixed-shape staging buffer holding the next (up to)
+        ``tlen`` requests of each core's stream, starting at each core's own
+        global position; ``stream_end[c]`` is the number of staged requests
+        for core ``c`` if its stream ends inside this buffer, else INT32_MAX.
+        Runs cycles until (a) some core with more data behind the buffer has
+        consumed all its staged requests (*starved* — the driver restages and
+        calls again; the exit happens between cycles, so every executed cycle
+        sees exactly the requests the single-shot program would), (b) the
+        system is fully quiescent (workload done, recode ring empty, encoder
+        idle — the same observable fixed point the sweep engine's early exit
+        uses), or (c) the per-chunk ``drain_bound`` budget runs out.
+
+        One compiled program serves the whole stream: the chunk shape, the
+        budget and the tunables treedef are the only compile keys.
+        """
+        tlen = trace.bank.shape[1]
+
+        def cond(carry):
+            st, i = carry
+            starved = jnp.any((st.core_ptr >= tlen) & (stream_end > tlen))
+            return (i < n_cycles) & ~starved & ~quiescent(st)
+
+        def body(carry):
+            st, i = carry
+            st, _ = self.cycle_fn(st, trace, tn, stream_end)
+            return st, i + 1
+
+        st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+        return st
 
     def summarize(self, st: SimState) -> SimResult:
         host = jax.device_get(st)

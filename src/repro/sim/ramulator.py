@@ -17,7 +17,10 @@ from repro.core.system import CodedMemorySystem, SimResult, Trace, drain_bound
 
 
 def default_n_cycles(trace: Trace) -> int:
-    """Generous drain bound: every request could serialize on one port."""
+    """Cycle budget for a materialized trace — a thin shape adapter over
+    ``repro.core.system.drain_bound``, the single home of the bound's
+    formula and derivation (chunked replay derives its per-chunk budget
+    from the same helper via ``repro.traces.stream.chunk_bound``)."""
     return drain_bound(int(trace.bank.shape[0]), int(trace.bank.shape[1]))
 
 

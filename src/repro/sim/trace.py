@@ -40,12 +40,21 @@ class TraceSpec:
     seed: int = 0
 
 
+def addr_to_bank_row(addr: np.ndarray, n_banks: int, n_rows: int):
+    """DRAM low-bit interleaving: consecutive linear addresses round-robin
+    the banks, ``bank = addr % n_banks``, ``row = (addr // n_banks) %
+    n_rows``. The single mapping shared by the synthetic generators here and
+    external-trace ingestion (``repro.traces.formats``)."""
+    bank = (addr % n_banks).astype(np.int32)
+    row = ((addr // n_banks) % n_rows).astype(np.int32)
+    return bank, row
+
+
 def _pack(spec: TraceSpec, addr: np.ndarray, rng: np.random.Generator) -> Trace:
     """addr (n_cores, T) linear addresses (−1 = idle) → Trace pytree."""
     valid = (addr >= 0) & (rng.random(addr.shape) < spec.issue_prob)
     addr = np.maximum(addr, 0)
-    bank = (addr % spec.n_banks).astype(np.int32)
-    row = ((addr // spec.n_banks) % spec.n_rows).astype(np.int32)
+    bank, row = addr_to_bank_row(addr, spec.n_banks, spec.n_rows)
     is_write = rng.random(addr.shape) < spec.write_frac
     data = rng.integers(1, 1 << 30, addr.shape).astype(np.int32)
     return Trace(

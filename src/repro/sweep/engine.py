@@ -34,7 +34,7 @@ import numpy as np
 from repro.core.codes import get_tables
 from repro.core.state import TunableParams, make_params, make_tunables
 from repro.core.system import (CodedMemorySystem, SimResult, SimState, Trace,
-                               result_from_host)
+                               quiescent, result_from_host)
 from repro.launch.mesh import make_sweep_mesh
 from repro.sweep import workloads
 from repro.sweep.grid import (GridBatch, SweepPoint, batch_geometry_alloc,
@@ -90,10 +90,15 @@ def stack_tunables(points: Sequence[SweepPoint],
     return jax.tree.map(lambda *xs: jnp.stack(xs), *tns)
 
 
-def _batched_init(sys: CodedMemorySystem, tn_b: TunableParams) -> SimState:
+def _batched_init(sys: CodedMemorySystem, tn_b: TunableParams,
+                  priors_b=None) -> SimState:
     """Per-point initial states: each point's active geometry masks the
-    shared allocation (identity region maps sized to *its* n_regions, etc.)."""
-    return jax.vmap(sys.init)(tn_b)
+    shared allocation (identity region maps sized to *its* n_regions, etc.).
+    ``priors_b`` (B, K) optionally warm-starts each point's dynamic coding
+    unit with profiled hot regions (``repro.traces.profiler``)."""
+    if priors_b is None:
+        return jax.vmap(sys.init)(tn_b)
+    return jax.vmap(sys.init)(tn_b, priors_b)
 
 
 def _pad_points(n_points: int) -> int:
@@ -124,13 +129,9 @@ def _maybe_shard(trees, n_points: int):
 
 
 def _all_quiescent(st_b: SimState) -> jnp.ndarray:
-    """True when no point can change any observable statistic anymore:
-    workload drained + recode ring empty + encoder idle (the dynamic unit
-    starts nothing new after drain — see ``dynamic_step``'s ``quiesce``)."""
-    m = st_b.mem
-    q = ((st_b.done_cycle >= 0) & (m.enc_region < 0)
-         & ~jnp.any(m.rc_valid, axis=-1))
-    return jnp.all(q)
+    """True when no point can change any observable statistic anymore (the
+    shared ``repro.core.system.quiescent`` fixed point, over the batch)."""
+    return jnp.all(quiescent(st_b))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
@@ -168,8 +169,22 @@ def summarize_batch(st_b: SimState,
             for b in range(n)]
 
 
+def _stack_priors(priors: Sequence, n_points: int):
+    """Ragged per-point region-prior arrays → one -1-padded (B, K) array."""
+    arrs = [np.asarray(pr if pr is not None else [], np.int32).reshape(-1)
+            for pr in priors]
+    k = max((a.size for a in arrs), default=0)
+    if k == 0:
+        return None
+    out = np.full((n_points, k), -1, np.int32)
+    for b, a in enumerate(arrs):
+        out[b, :a.size] = a
+    return jnp.asarray(out)
+
+
 def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
-              shard: bool = True) -> List[SimResult]:
+              shard: bool = True,
+              region_priors: Optional[Sequence] = None) -> List[SimResult]:
     """Evaluate one shape-compatible batch as a single device program."""
     pts = batch.points
     # geometry indexing is traced only when this batch actually mixes
@@ -180,7 +195,8 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
     sys = system_for(pts[0], geometry_alloc=batch_geometry_alloc(pts),
                      traced_geometry=traced)
     if traces is None:
-        traces = [workloads.build_trace(pt) for pt in pts]
+        traces = [workloads.build_trace(pt, index=i)
+                  for i, pt in zip(batch.indices, pts)]
     for pt, tr in zip(pts, traces):
         if tuple(tr.bank.shape) != (pt.n_cores, pt.length):
             raise ValueError(
@@ -188,11 +204,15 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
                 f"geometry ({pt.n_cores}, {pt.length})")
     trace_b = workloads.stack_traces(traces)
     tn_b = stack_tunables(pts, sys.p.queue_depth)
+    priors_b = (_stack_priors(region_priors, len(pts))
+                if region_priors is not None else None)
     pad = _pad_points(len(pts)) if shard else 0
     if pad:
         trace_b = _replicate_tail(trace_b, pad)
         tn_b = _replicate_tail(tn_b, pad)
-    st_b = _batched_init(sys, tn_b)
+        if priors_b is not None:
+            priors_b = _replicate_tail(priors_b, pad)
+    st_b = _batched_init(sys, tn_b, priors_b)
     if shard:
         st_b, trace_b, tn_b = _maybe_shard((st_b, trace_b, tn_b),
                                            len(pts) + pad)
@@ -202,25 +222,38 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
 
 def run_points(points: Sequence[SweepPoint],
                traces: Optional[Sequence[Trace]] = None,
-               shard: bool = True) -> List[SimResult]:
-    """Evaluate an arbitrary sweep; results align with ``points`` order."""
+               shard: bool = True,
+               region_priors: Optional[Sequence] = None) -> List[SimResult]:
+    """Evaluate an arbitrary sweep; results align with ``points`` order.
+
+    ``region_priors`` aligns 1:1 with ``points``: each entry is None (cold
+    start) or a ranked hot-region array warm-starting that point's dynamic
+    coding unit (``repro.traces.profiler.TraceProfile.region_priors``).
+    """
     if traces is not None and len(traces) != len(points):
         raise ValueError("traces must align 1:1 with points")
+    if region_priors is not None and len(region_priors) != len(points):
+        raise ValueError("region_priors must align 1:1 with points")
     results: List[Optional[SimResult]] = [None] * len(points)
     for batch in partition(points):
         btraces = ([traces[i] for i in batch.indices]
                    if traces is not None else None)
-        for i, res in zip(batch.indices, run_batch(batch, btraces, shard)):
+        bpriors = ([region_priors[i] for i in batch.indices]
+                   if region_priors is not None else None)
+        for i, res in zip(batch.indices,
+                          run_batch(batch, btraces, shard, bpriors)):
             results[i] = res
     return results  # type: ignore[return-value]
 
 
 def run_sweep(points: Sequence[SweepPoint],
               traces: Optional[Sequence[Trace]] = None,
-              shard: bool = True):
+              shard: bool = True,
+              region_priors: Optional[Sequence] = None):
     """Evaluate a sweep and wrap it in a ``SweepResultSet`` (results store)."""
     from repro.sweep.results import SweepRecord, SweepResultSet
-    res = run_points(points, traces=traces, shard=shard)
+    res = run_points(points, traces=traces, shard=shard,
+                     region_priors=region_priors)
     return SweepResultSet([SweepRecord(pt, r) for pt, r in zip(points, res)])
 
 

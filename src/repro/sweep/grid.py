@@ -59,7 +59,10 @@ class SweepPoint:
     length: int = 96
     n_cycles: Optional[int] = None   # None = drain bound from length/n_cores
     # ---- batchable: trace contents
-    trace: str = "banded"            # name in repro.sim.trace.TRACES
+    trace: str = "banded"            # name in repro.sim.trace.TRACES, or
+                                     # "file:<path>" for an ingested on-disk
+                                     # trace (repro.traces.formats; see
+                                     # workloads.file_point)
     trace_kwargs: Tuple[Tuple[str, Any], ...] = ()
     seed: int = 0
     write_frac: float = 0.3
@@ -72,6 +75,10 @@ class SweepPoint:
     scheduler: str = "vectorized"
     # free-form tag carried through to result rows
     label: str = ""
+    # provenance metadata (not a simulation coordinate): the registry suite
+    # that produced this point, stamped by ``workloads.suite`` so error
+    # messages and result rows can name their origin
+    suite: str = ""
 
     def derived_slots(self) -> Tuple[int, int, int]:
         """(region_size, n_regions, n_slots) this point's α/r imply."""

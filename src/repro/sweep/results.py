@@ -20,7 +20,7 @@ from repro.sweep.grid import SweepPoint
 POINT_COLS: Tuple[str, ...] = (
     "label", "scheme", "alpha", "r", "n_rows", "trace", "seed", "write_frac",
     "issue_prob", "n_cores", "n_banks", "length", "queue_depth",
-    "select_period", "wq_hi", "wq_lo",
+    "select_period", "wq_hi", "wq_lo", "suite",
 )
 RESULT_COLS: Tuple[str, ...] = SimResult._fields
 BASELINE_COLS: Tuple[str, ...] = ("baseline_cycles", "speedup",

@@ -1,35 +1,97 @@
 """Workload registry: named scenario suites + trace materialization/stacking.
 
 A suite is a function returning a list of ``SweepPoint``s; ``build_trace``
-materializes one point's trace via the ``repro.sim.trace`` generators, and
-``stack_traces`` turns shape-compatible traces into one batch-ready ``Trace``
-pytree with a leading point axis (what the engine ``vmap``s over).
+materializes one point's trace via the ``repro.sim.trace`` generators or —
+for ``trace="file:<path>"`` points — via ``repro.traces.formats`` ingestion
+(``file_point`` sizes a point to an on-disk trace), and ``stack_traces``
+turns shape-compatible traces into one batch-ready ``Trace`` pytree with a
+leading point axis (what the engine ``vmap``s over).
 
 Trace generation is seeded NumPy, so every suite is deterministic per seed
 (tests/test_sweep.py locks this in).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence
+import os
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.sim.trace import TRACES, TraceSpec
 from repro.core.system import Trace
 from repro.sweep.grid import SweepPoint, grid
 
 
-def build_trace(pt: SweepPoint) -> Trace:
-    """Materialize one sweep point's request streams."""
+def _point_name(pt: SweepPoint, index: Optional[int]) -> str:
+    """Human-readable identity of a failing point: its suite (when stamped
+    by ``suite()``) and sweep index, plus the distinguishing coordinates —
+    a bare trace-key error is unattributable in a many-point sweep."""
+    where = pt.suite or "<ad-hoc sweep>"
+    idx = f"[{index}]" if index is not None else ""
+    tag = f" label={pt.label!r}" if pt.label else ""
+    return (f"SweepPoint {where}{idx}{tag} (scheme={pt.scheme}, "
+            f"trace={pt.trace!r}, seed={pt.seed})")
+
+
+def build_trace(pt: SweepPoint, *, index: Optional[int] = None) -> Trace:
+    """Materialize one sweep point's request streams.
+
+    ``pt.trace`` is either a generator name from ``repro.sim.trace.TRACES``
+    or ``"file:<path>"`` for an on-disk trace ingested via
+    ``repro.traces.formats.load_trace`` (``trace_kwargs`` forwards the
+    mapping options — ``format``, ``line_bytes``; bank/row geometry comes
+    from the point). ``index`` is the point's position in its sweep, used
+    to attribute errors.
+    """
+    if pt.trace.startswith("file:"):
+        from repro.traces.formats import load_trace
+        path = pt.trace[len("file:"):]
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"{_point_name(pt, index)}: trace file {path!r} not found")
+        try:
+            tr = load_trace(path, n_cores=pt.n_cores, n_banks=pt.n_banks,
+                            n_rows=pt.n_rows, length=pt.length,
+                            **dict(pt.trace_kwargs))
+        except ValueError as e:      # e.g. the file outgrows pt.length
+            raise ValueError(f"{_point_name(pt, index)}: {e}") from None
+        got = tuple(int(d) for d in tr.bank.shape)
+        if got != (pt.n_cores, pt.length):
+            raise ValueError(
+                f"{_point_name(pt, index)}: file trace shape {got} does not "
+                f"match the point geometry ({pt.n_cores}, {pt.length}) — "
+                f"size the point with workloads.file_point()")
+        # an .npz carries pre-mapped bank/row streams: a file saved from a
+        # different memory geometry would index out of range inside jit,
+        # where clamping silently produces wrong results instead of failing
+        max_b = int(np.max(np.asarray(tr.bank), initial=0))
+        max_r = int(np.max(np.asarray(tr.row), initial=0))
+        if max_b >= pt.n_banks or max_r >= pt.n_rows:
+            raise ValueError(
+                f"{_point_name(pt, index)}: file trace addresses bank "
+                f"{max_b}/row {max_r} but the point geometry is n_banks="
+                f"{pt.n_banks}, n_rows={pt.n_rows} — the file was mapped "
+                f"for a different memory geometry")
+        return tr
     gen = TRACES.get(pt.trace)
     if gen is None:
-        raise KeyError(f"unknown trace generator {pt.trace!r}; "
-                       f"have {sorted(TRACES)}")
+        raise KeyError(f"{_point_name(pt, index)}: unknown trace generator "
+                       f"{pt.trace!r}; have {sorted(TRACES)} or 'file:<path>'")
     spec = TraceSpec(n_cores=pt.n_cores, length=pt.length, n_banks=pt.n_banks,
                      n_rows=pt.n_rows, issue_prob=pt.issue_prob,
                      write_frac=pt.write_frac, seed=pt.seed)
     return gen(spec, **dict(pt.trace_kwargs))
+
+
+def file_point(path: str, base: SweepPoint = SweepPoint(), **kw) -> SweepPoint:
+    """A SweepPoint sized to an on-disk ``.npz`` trace: ``n_cores``/``length``
+    are probed from the file so the batched engine's shape check passes."""
+    from repro.traces.formats import probe
+    n_cores, length = probe(path)
+    return base.replace(trace=f"file:{path}", n_cores=n_cores, length=length,
+                        **kw)
 
 
 def stack_traces(traces: Sequence[Trace]) -> Trace:
@@ -125,4 +187,5 @@ SUITES: Dict[str, Callable[..., List[SweepPoint]]] = {
 def suite(name: str, base: SweepPoint = SweepPoint(), **kw) -> List[SweepPoint]:
     if name not in SUITES:
         raise KeyError(f"unknown suite {name!r}; have {sorted(SUITES)}")
-    return SUITES[name](base, **kw)
+    # stamp provenance so downstream errors/result rows can name the suite
+    return [pt.replace(suite=name) for pt in SUITES[name](base, **kw)]

@@ -1,0 +1,51 @@
+"""Streaming DRAM-trace substrate: chunked replay, ingestion, profiling.
+
+The paper evaluates its coded memory controller on gem5/PARSEC DRAM traces
+(§V); this package turns the cycle engine + sweep engine into something
+that can chew through million-request real-world traces:
+
+  stream   — ``stream_replay``: arbitrarily long traces as fixed-shape
+             chunks with an explicit ``SimState`` carry, bit-identical to
+             single-shot ``run()``; ``stream_replay_points`` composes the
+             chunk axis with the sweep engine's point axis
+  source   — bounded rolling-window ``TraceSource`` with background chunk
+             prefetch (the ``repro.data.pipeline`` idiom)
+  formats  — Ramulator / gem5 text parsers + the canonical ``.npz`` form,
+             address mapping shared with ``repro.sim.trace``
+  profiler — streaming locality statistics (Fig 15 band detection,
+             read/write mix, burstiness) and the region-priors that
+             warm-start the dynamic coding unit
+
+Quickstart (see docs/traces.md):
+
+    from repro.traces import stream_replay, load_trace, profile_trace
+    trace = load_trace("app.trace", n_banks=8, n_rows=512)
+    res = stream_replay(system, trace, chunk_len=4096)
+    prof = profile_trace(trace, n_banks=8, n_rows=512)
+    priors = prof.region_priors(system.p.region_size, system.p.n_regions)
+"""
+from repro.traces.formats import (  # noqa: F401
+    load_npz,
+    load_trace,
+    probe,
+    requests_to_trace,
+    save_npz,
+    stream_file,
+)
+from repro.traces.profiler import (  # noqa: F401
+    Band,
+    TraceProfile,
+    TraceProfiler,
+    profile_trace,
+)
+from repro.traces.source import (  # noqa: F401
+    TraceSource,
+    as_source,
+    chunk_iter,
+)
+from repro.traces.stream import (  # noqa: F401
+    chunk_bound,
+    stream_replay,
+    stream_replay_points,
+    strip_windows,
+)

@@ -1,0 +1,258 @@
+"""External DRAM-trace ingestion: Ramulator / gem5 text formats + .npz.
+
+Three on-disk forms feed the replay engines (all land in the same ``Trace``
+pytree the cycle engine consumes):
+
+* **Ramulator-style** (``.trace``): one request per line, ``<addr> <R|W>``
+  (the order may be flipped; ``R/W/RD/WR/READ/WRITE`` accepted, addresses
+  hex ``0x…`` or decimal). Comment lines (``#``) and blanks are skipped.
+* **gem5-style** (``.gem5``/CSV): ``tick,cmd,addr[,size]`` rows as printed
+  by gem5's packet-trace decode script, ``cmd`` ∈ {r, w} (case-insensitive;
+  whitespace-separated variants accepted). Requests keep file order.
+* **``.npz`` canonical**: the five ``Trace`` arrays (``bank``, ``row``,
+  ``is_write``, ``data``, ``valid``; each ``(n_cores, T)``) saved verbatim —
+  lossless round-trip, no re-mapping on load.
+
+Byte addresses reduce to row addresses via ``addr // line_bytes`` then the
+low-bit bank interleaving shared with the synthetic generators
+(``repro.sim.trace.addr_to_bank_row``). A single-stream file is dealt
+round-robin across cores in file order — request ``i`` goes to core
+``i % n_cores`` at time slot ``i // n_cores`` — which preserves the
+stream's banded locality per core.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.system import Trace
+from repro.sim.trace import addr_to_bank_row
+
+_READS = {"r", "rd", "read"}
+_WRITES = {"w", "wr", "write"}
+
+
+def _parse_int(tok: str) -> Optional[int]:
+    try:
+        return int(tok, 16) if tok.lower().startswith("0x") else int(tok)
+    except ValueError:
+        return None
+
+
+def _parse_op(tok: str) -> Optional[bool]:
+    t = tok.lower()
+    if t in _WRITES:
+        return True
+    if t in _READS:
+        return False
+    return None
+
+
+def iter_ramulator(path: str) -> Iterator[Tuple[int, bool]]:
+    """Lazily yield (addr, is_write) from a Ramulator-style text trace."""
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            toks = line.split("#", 1)[0].split()
+            if not toks:
+                continue
+            addr = op = None
+            for tok in toks:
+                if op is None and (v := _parse_op(tok)) is not None:
+                    op = v
+                elif addr is None and (v := _parse_int(tok)) is not None:
+                    addr = v
+            if addr is None or op is None:
+                raise ValueError(
+                    f"{path}:{ln}: expected '<addr> <R|W>', got {line!r}")
+            yield addr, op
+
+
+def iter_gem5(path: str) -> Iterator[Tuple[int, bool]]:
+    """Lazily yield (addr, is_write) from a gem5-style ``tick,cmd,addr``
+    trace (comma- or whitespace-separated; requests keep file order)."""
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            body = line.split("#", 1)[0].strip()
+            if not body:
+                continue
+            toks = [t for t in body.replace(",", " ").split() if t]
+            if len(toks) < 3:
+                raise ValueError(
+                    f"{path}:{ln}: expected 'tick,cmd,addr[,size]', got {line!r}")
+            tick, op, addr = (_parse_int(toks[0]), _parse_op(toks[1]),
+                              _parse_int(toks[2]))
+            if tick is None or op is None or addr is None:
+                raise ValueError(
+                    f"{path}:{ln}: expected 'tick,cmd,addr[,size]', got {line!r}")
+            yield addr, op
+
+
+PARSERS = {"ramulator": iter_ramulator, "gem5": iter_gem5}
+
+
+def _sniff_format(path: str) -> str:
+    """Pick a text parser by extension, falling back to line shape."""
+    ext = os.path.splitext(path)[1].lower()
+    if ext in (".gem5", ".csv"):
+        return "gem5"
+    if ext == ".trace":
+        return "ramulator"
+    with open(path) as f:
+        for line in f:
+            body = line.split("#", 1)[0].strip()
+            if body:
+                return "gem5" if ("," in body or len(body.split()) >= 3) \
+                    else "ramulator"
+    return "ramulator"
+
+
+def _payloads(addr: np.ndarray, seq: np.ndarray) -> np.ndarray:
+    """Deterministic nonzero write payloads: external traces carry no data
+    values, so synthesize them as a pure hash of (address, sequence) — the
+    round-trip and replay results stay reproducible without a stored blob."""
+    h = (addr.astype(np.uint64) * np.uint64(2654435761)
+         + seq.astype(np.uint64) * np.uint64(97)) & np.uint64(0x3FFFFFFF)
+    return (h | np.uint64(1)).astype(np.int32)
+
+
+def requests_to_trace(addrs, is_write, *, n_cores: int = 8, n_banks: int = 8,
+                      n_rows: int = 512, line_bytes: int = 1,
+                      length: Optional[int] = None) -> Trace:
+    """Deal a single request stream into the engine's per-core ``Trace``.
+
+    ``line_bytes`` shifts byte addresses down to cache-line/row granularity
+    before the low-bit bank interleaving (1 = addresses are already linear
+    request addresses, the synthetic generators' convention). ``length``
+    pads the per-core stream to a fixed T (default: just enough slots for
+    every request, tail padded invalid); a length too small to hold every
+    request raises — silently dropping the stream's tail would report
+    results for a trace that was never replayed.
+    """
+    addrs = np.asarray(list(addrs) if not isinstance(addrs, np.ndarray)
+                       else addrs, np.int64)
+    is_write = np.asarray(list(is_write) if not isinstance(is_write, np.ndarray)
+                          else is_write, bool)
+    if addrs.shape != is_write.shape:
+        raise ValueError("addrs and is_write must align")
+    if line_bytes > 1:
+        addrs = addrs // line_bytes
+    n = addrs.size
+    T = length if length is not None else -(-max(n, 1) // n_cores)
+    if n > n_cores * T:
+        raise ValueError(
+            f"length={T} holds at most {n_cores * T} requests over "
+            f"{n_cores} cores but the stream has {n} — size the point to "
+            f"the file (length ≥ {-(-n // n_cores)}) or replay it chunked "
+            f"via stream_file/stream_replay")
+    bank = np.zeros((n_cores, T), np.int32)
+    row = np.zeros((n_cores, T), np.int32)
+    isw = np.zeros((n_cores, T), bool)
+    data = np.zeros((n_cores, T), np.int32)
+    valid = np.zeros((n_cores, T), bool)
+    seq = np.arange(n, dtype=np.int64)
+    core, t = seq % n_cores, seq // n_cores
+    b, r = addr_to_bank_row(addrs, n_banks, n_rows)
+    bank[core, t] = b
+    row[core, t] = r
+    isw[core, t] = is_write
+    data[core, t] = _payloads(addrs, seq)
+    valid[core, t] = True
+    return Trace(bank=jnp.asarray(bank), row=jnp.asarray(row),
+                 is_write=jnp.asarray(isw), data=jnp.asarray(data),
+                 valid=jnp.asarray(valid))
+
+
+def save_npz(path: str, trace: Trace) -> str:
+    """Canonical on-disk form: the five Trace arrays, lossless."""
+    np.savez_compressed(path, **{k: np.asarray(v)
+                                 for k, v in zip(Trace._fields, trace)})
+    return path
+
+
+def load_npz(path: str) -> Trace:
+    with np.load(path) as z:
+        missing = [k for k in Trace._fields if k not in z]
+        if missing:
+            raise ValueError(f"{path}: not a canonical trace .npz "
+                             f"(missing {missing})")
+        return Trace(*(jnp.asarray(z[k]) for k in Trace._fields))
+
+
+def probe(path: str) -> Tuple[int, int]:
+    """(n_cores, length) of an ``.npz`` trace without building the pytree —
+    lets callers size their ``SweepPoint`` geometry to a file."""
+    with np.load(path) as z:
+        return tuple(int(d) for d in z["bank"].shape)
+
+
+def load_trace(path: str, *, format: Optional[str] = None, n_cores: int = 8,
+               n_banks: int = 8, n_rows: int = 512, line_bytes: int = 1,
+               length: Optional[int] = None) -> Trace:
+    """Load any supported on-disk trace into a ``Trace`` pytree.
+
+    ``.npz`` loads verbatim (the mapping kwargs don't apply — the file
+    already stores bank/row streams). Text formats parse lazily and deal
+    round-robin across ``n_cores`` with the shared address mapping;
+    ``format`` pins the parser ("ramulator" | "gem5"), default sniffed from
+    the extension / first content line.
+    """
+    if path.endswith(".npz"):
+        return load_npz(path)
+    fmt = format or _sniff_format(path)
+    if fmt not in PARSERS:
+        raise ValueError(f"unknown trace format {fmt!r}; have {sorted(PARSERS)}")
+    reqs = list(PARSERS[fmt](path))
+    addrs = np.fromiter((a for a, _ in reqs), np.int64, len(reqs))
+    is_w = np.fromiter((w for _, w in reqs), bool, len(reqs))
+    return requests_to_trace(addrs, is_w, n_cores=n_cores, n_banks=n_banks,
+                             n_rows=n_rows, line_bytes=line_bytes,
+                             length=length)
+
+
+def stream_file(path: str, chunk_len: int, *, format: Optional[str] = None,
+                n_cores: int = 8, n_banks: int = 8, n_rows: int = 512,
+                line_bytes: int = 1) -> Iterator[Trace]:
+    """Lazily read a text trace as ``(n_cores, chunk_len)`` Trace chunks —
+    the file never materializes whole; feed this to ``stream_replay`` (it
+    prefetches parsing on a background thread). ``.npz`` falls back to
+    slicing the loaded arrays."""
+    if path.endswith(".npz"):
+        from repro.traces.source import chunk_iter
+        yield from chunk_iter(load_npz(path), chunk_len)
+        return
+    fmt = format or _sniff_format(path)
+    it = PARSERS[fmt](path)
+    per_chunk = n_cores * chunk_len
+    base = 0
+    while True:
+        buf = []
+        for req in it:
+            buf.append(req)
+            if len(buf) == per_chunk:
+                break
+        if not buf:
+            return
+        addrs = np.fromiter((a for a, _ in buf), np.int64, len(buf))
+        is_w = np.fromiter((w for _, w in buf), bool, len(buf))
+        # the tail chunk stays SHORT (ceil(n/n_cores) columns) rather than
+        # padded to chunk_len: padding would append invalid idle columns
+        # that exist only in the chunked representation — the replay would
+        # walk them one cycle each and report a later completion cycle than
+        # the same file loaded whole
+        tr = requests_to_trace(addrs, is_w, n_cores=n_cores, n_banks=n_banks,
+                               n_rows=n_rows, line_bytes=line_bytes,
+                               length=-(-len(buf) // n_cores))
+        if base:
+            seq = np.arange(base, base + len(buf), dtype=np.int64)
+            core, t = (seq - base) % n_cores, (seq - base) // n_cores
+            a = addrs // line_bytes if line_bytes > 1 else addrs
+            data = np.asarray(tr.data).copy()
+            data[core, t] = _payloads(a, seq)
+            tr = tr._replace(data=jnp.asarray(data))
+        base += len(buf)
+        yield tr
+        if len(buf) < per_chunk:
+            return

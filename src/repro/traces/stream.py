@@ -1,0 +1,239 @@
+"""Streaming trace replay: arbitrarily long traces, fixed device footprint.
+
+``stream_replay`` threads an explicit ``SimState`` carry through successive
+``CodedMemorySystem.run_chunk`` calls. Each step stages a fixed-shape
+``(n_cores, chunk_len)`` buffer of the next requests *per core* (cores drain
+at different rates; the staging window is ragged across cores) and runs
+cycles until some core needs data beyond the buffer, the system quiesces,
+or the per-chunk ``drain_bound`` budget runs out. Because the starvation
+exit happens *between* cycles, every executed cycle sees exactly the
+requests the single-shot program would — the replay is **bit-identical** to
+``run()`` on the concatenated trace, for any chunk split (including chunk
+length 1 and uneven tails; tests/test_traces.py proves it property-based).
+
+One compiled program serves the whole stream: the chunk shape is the only
+shape in the program, so device memory is constant in trace length.
+
+``stream_replay_points`` composes the chunk axis with the sweep engine's
+point axis: a shape-compatible batch of points replays chunked as ONE
+vmapped device program, with per-point per-core staging windows.
+
+Per-window latency stats ride along for free: each ``run_chunk`` return is
+a window boundary, and the served-count/latency-sum deltas between
+boundaries give the windowed critical-word read/write latency series that
+``SimResult.window_read_latency`` / ``window_write_latency`` carry (the
+scalar sums in ``MemState`` stay the only device-side accumulators).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import TunableParams, wide_total
+from repro.core.system import (CodedMemorySystem, SimResult, SimState,
+                               drain_bound, quiescent, result_from_host)
+from repro.traces.source import TraceSource, as_source
+
+DEFAULT_CHUNK_LEN = 256
+
+
+def strip_windows(res: SimResult) -> SimResult:
+    """Drop the per-window series (for comparing streamed vs single-shot)."""
+    return res._replace(window_read_latency=(), window_write_latency=())
+
+
+def chunk_bound(system: CodedMemorySystem, chunk_len: int) -> int:
+    """Per-chunk cycle budget: the shared ``drain_bound`` with the carried
+    queue backlog — up to every read+write queue slot may still be occupied
+    by the previous chunk's requests when a chunk starts."""
+    backlog = 2 * system.p.n_data * system.p.queue_depth
+    return drain_bound(system.n_cores, chunk_len, backlog=backlog)
+
+
+def _window_stats(host_prev, host_now) -> Tuple[tuple, tuple]:
+    """((n_reads, avg_read_lat), (n_writes, avg_write_lat)) for one window."""
+    dr = int(host_now[0]) - int(host_prev[0])
+    dw = int(host_now[1]) - int(host_prev[1])
+    drl = wide_total(host_now[2]) - wide_total(host_prev[2])
+    dwl = wide_total(host_now[3]) - wide_total(host_prev[3])
+    return (dr, drl / max(dr, 1)), (dw, dwl / max(dw, 1))
+
+
+def _snapshot(st: SimState):
+    m = st.mem
+    return (m.served_reads, m.served_writes, m.read_latency_sum,
+            m.write_latency_sum)
+
+
+def stream_replay(system: CodedMemorySystem, source,
+                  chunk_len: int = DEFAULT_CHUNK_LEN,
+                  tn: Optional[TunableParams] = None,
+                  st: Optional[SimState] = None,
+                  region_priors=None,
+                  max_cycles: Optional[int] = None) -> SimResult:
+    """Replay a (possibly longer-than-memory) trace through the cycle engine.
+
+    ``source`` is anything ``repro.traces.source.as_source`` accepts: an
+    in-memory ``Trace``, an iterable of ``Trace`` chunks, or a
+    ``TraceSource``. Returns a ``SimResult`` bit-identical (modulo the
+    window series) to single-shot ``run()`` on the concatenated trace.
+
+    ``max_cycles`` optionally caps the total simulated cycles (the per-chunk
+    budget already bounds each step); on a non-completing workload the
+    replay stops once a whole chunk budget elapses with no request progress
+    and reports ``completed=False``, like an exhausted single-shot bound.
+    """
+    src = as_source(source)
+    tn = tn if tn is not None else system.tunables
+    if st is None:
+        st = system.init(tn, region_priors=region_priors)
+    if src.n_cores is not None and src.n_cores != system.n_cores:
+        raise ValueError(f"source has {src.n_cores} cores, "
+                         f"system has {system.n_cores}")
+    pos = np.zeros(system.n_cores, np.int64)
+    bound = chunk_bound(system, chunk_len)
+    win_r: List[tuple] = []
+    win_w: List[tuple] = []
+    prev = jax.device_get(_snapshot(st))
+    prev_cycle = int(st.mem.cycle)
+    while True:
+        chunk, stream_end = src.stage(pos, chunk_len)
+        st = st._replace(core_ptr=jnp.zeros_like(st.core_ptr))
+        st = system.run_chunk(st, chunk, stream_end, bound, tn)
+        ptr, quiet, cyc, *snap = jax.device_get(
+            (st.core_ptr, quiescent(st), st.mem.cycle) + _snapshot(st))
+        wr, ww = _window_stats(prev, snap)
+        win_r.append(wr)
+        win_w.append(ww)
+        prev = snap
+        moved = np.asarray(ptr, np.int64)
+        pos += moved
+        if src.exhausted(pos) and bool(quiet):
+            break
+        if not moved.any() and int(cyc) - prev_cycle >= bound:
+            break                       # budget spent with zero progress:
+                                        # the workload cannot complete
+        if max_cycles is not None and int(cyc) >= max_cycles:
+            break
+        prev_cycle = int(cyc)
+    res = system.summarize(st)
+    return res._replace(window_read_latency=tuple(win_r),
+                        window_write_latency=tuple(win_w))
+
+
+# ------------------------------------------------------------ batched replay
+# (no donate_argnums on the carry — see the note on
+# CodedMemorySystem.run_chunk: fresh init states alias buffers across
+# leaves, which donation rejects at runtime)
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def _run_chunk_batch(system: CodedMemorySystem, st_b: SimState, trace_b,
+                     stream_end_b, n_cycles: int,
+                     tn_b: Optional[TunableParams] = None) -> SimState:
+    """vmapped ``run_chunk``: the chunk axis composed with the point axis.
+
+    The whole batch runs lock-step, so the loop exits as soon as ANY point
+    starves (its staging buffer restages host-side and every point
+    continues). Points that are already quiescent execute observable no-op
+    cycles while others proceed — the same argument that makes the sweep
+    engine's padding and early exit bit-identical per point.
+    """
+    vstep = jax.vmap(system.cycle_fn)
+    tlen = trace_b.bank.shape[-1]
+
+    def cond(carry):
+        st, i = carry
+        starved = jnp.any((st.core_ptr >= tlen) & (stream_end_b > tlen))
+        return (i < n_cycles) & ~starved & ~jnp.all(quiescent(st))
+
+    def body(carry):
+        st, i = carry
+        st, _ = vstep(st, trace_b, tn_b, stream_end_b)
+        return st, i + 1
+
+    st, _ = jax.lax.while_loop(cond, body, (st_b, jnp.int32(0)))
+    return st
+
+
+def stream_replay_points(points: Sequence, sources: Sequence,
+                         chunk_len: int = DEFAULT_CHUNK_LEN,
+                         region_priors: Optional[Sequence] = None,
+                         max_cycles: Optional[int] = None) -> List[SimResult]:
+    """Chunked batched replay: one shape-compatible batch of sweep points,
+    each with its own (arbitrarily long) trace source, as ONE device program.
+
+    ``points`` must share a single static signature (one
+    ``grid.partition`` batch — the caller splits mixed sweeps); ``sources``
+    align 1:1. Results are bit-identical per point (modulo window series) to
+    ``repro.sweep.run_points`` on the materialized traces.
+    """
+    from repro.sweep.engine import stack_tunables, system_for
+    from repro.sweep.grid import batch_geometry_alloc, static_signature
+
+    if len(sources) != len(points):
+        raise ValueError("sources must align 1:1 with points")
+    sigs = {static_signature(pt) for pt in points}
+    if len(sigs) > 1:
+        raise ValueError(
+            f"stream_replay_points needs one shape-compatible batch, got "
+            f"{len(sigs)} static signatures; split with repro.sweep.partition")
+    srcs = [as_source(s) for s in sources]
+    traced = len({pt.derived_slots()[:2] for pt in points}) > 1
+    system = system_for(points[0], geometry_alloc=batch_geometry_alloc(points),
+                        traced_geometry=traced)
+    for b, src in enumerate(srcs):
+        if src.n_cores is not None and src.n_cores != system.n_cores:
+            raise ValueError(f"source for point [{b}] has {src.n_cores} "
+                             f"cores, the batch has {system.n_cores}")
+    tn_b = stack_tunables(points, system.p.queue_depth)
+    if region_priors is None:
+        st_b = jax.vmap(system.init)(tn_b)
+    else:
+        from repro.sweep.engine import _stack_priors
+        pri_b = _stack_priors(region_priors, len(points))
+        st_b = (jax.vmap(system.init)(tn_b, pri_b) if pri_b is not None
+                else jax.vmap(system.init)(tn_b))
+    n_pts = len(points)
+    pos = np.zeros((n_pts, system.n_cores), np.int64)
+    bound = chunk_bound(system, chunk_len)
+    win_r: List[List[tuple]] = [[] for _ in range(n_pts)]
+    win_w: List[List[tuple]] = [[] for _ in range(n_pts)]
+    prev = jax.device_get(_snapshot(st_b))
+    prev_cycle = np.asarray(st_b.mem.cycle).copy()
+    while True:
+        staged = [src.stage(pos[b], chunk_len) for b, src in enumerate(srcs)]
+        trace_b = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *(s[0] for s in staged))
+        stream_end_b = jnp.stack([s[1] for s in staged])
+        st_b = st_b._replace(core_ptr=jnp.zeros_like(st_b.core_ptr))
+        st_b = _run_chunk_batch(system, st_b, trace_b, stream_end_b, bound,
+                                tn_b)
+        ptr, quiet, cyc, *snap = jax.device_get(
+            (st_b.core_ptr, quiescent(st_b), st_b.mem.cycle)
+            + _snapshot(st_b))
+        for b in range(n_pts):
+            wr, ww = _window_stats([x[b] for x in prev], [x[b] for x in snap])
+            win_r[b].append(wr)
+            win_w[b].append(ww)
+        prev = snap
+        moved = np.asarray(ptr, np.int64)
+        pos += moved
+        if all(src.exhausted(pos[b]) for b, src in enumerate(srcs)) \
+                and quiet.all():
+            break
+        if not moved.any() and (np.asarray(cyc) - prev_cycle >= bound).all():
+            break
+        if max_cycles is not None and int(np.asarray(cyc).max()) >= max_cycles:
+            break
+        prev_cycle = np.asarray(cyc).copy()
+    host = jax.device_get(st_b)
+    out = []
+    for b in range(n_pts):
+        res = result_from_host(jax.tree.map(lambda x: x[b], host.mem),
+                               host.done_cycle[b])
+        out.append(res._replace(window_read_latency=tuple(win_r[b]),
+                                window_write_latency=tuple(win_w[b])))
+    return out

@@ -17,6 +17,10 @@ import numpy as np
 import pytest
 from conftest import rand_trace
 
+# this suite IS the deprecated reference scheduler's soak harness: it builds
+# scheduler="reference" systems on purpose, so it opts in to the warning
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 from repro.core import controller as ctl
 from repro.core import controller_ref as ctl_ref
 from repro.core.codes import get_tables

@@ -80,6 +80,7 @@ def test_alpha_axis_shares_one_compiled_shape():
             assert got == _looped(pt), pt
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")  # reference soak
 @pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
 def test_r_axis_shares_one_compiled_shape(scheduler, sweep_compile_count):
     """The r-mask equivalence contract: an α×r grid (all sub-coverage) is
@@ -141,6 +142,7 @@ def test_fig20_alpha_ramp_below_r():
     assert ramp[0.05] == tiny
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")  # reference soak
 def test_scheduler_axis_is_static():
     """reference vs vectorized schedulers compile separately but agree."""
     pts = [BASE, BASE.replace(scheduler="reference")]

@@ -1,0 +1,469 @@
+"""repro.traces: chunked replay must be bit-identical to single-shot run(),
+ingestion formats must round-trip, the profiler must recover the synthetic
+generators' band structure, and its region-priors must never hurt."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import rand_trace
+from repro.core.codes import get_tables
+from repro.core.state import make_params, make_tunables
+from repro.core.system import CodedMemorySystem, Trace, drain_bound
+from repro.sim.trace import TraceSpec, addr_to_bank_row, banded_trace
+from repro.traces import (TraceSource, chunk_iter, load_npz, load_trace,
+                          profile_trace, requests_to_trace, save_npz,
+                          stream_file, stream_replay, stream_replay_points,
+                          strip_windows)
+from repro.traces.formats import iter_gem5, iter_ramulator
+
+# the reference scheduler is deprecated (kept as the soak oracle); the
+# streamed-vs-single-shot equivalence here opts in explicitly
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+N_ROWS, N_CORES, TLEN = 32, 3, 10
+
+
+def _system(scheduler="vectorized", alpha=0.25, r=0.125):
+    t = get_tables("scheme_i")
+    p = make_params(t, n_rows=N_ROWS, alpha=alpha, r=r, recode_cap=8,
+                    scheduler=scheduler)
+    return CodedMemorySystem(t, p, n_cores=N_CORES,
+                             tunables=make_tunables(select_period=8))
+
+
+import warnings as _warnings
+
+with _warnings.catch_warnings():
+    # module-scope construction happens before the pytestmark filter applies
+    _warnings.simplefilter("ignore", DeprecationWarning)
+    _SYSTEMS = {s: _system(s) for s in ("vectorized", "reference")}
+
+
+def _split(trace: Trace, cuts):
+    """Cut a trace into chunks at the given time offsets."""
+    arrs = [np.asarray(x) for x in trace]
+    T = arrs[0].shape[1]
+    prev = 0
+    for c in list(cuts) + [T]:
+        if c > prev:
+            yield Trace(*(jnp.asarray(a[:, prev:c]) for a in arrs))
+            prev = c
+
+
+# ------------------------------------------------------------ chunked replay
+@pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
+@pytest.mark.parametrize("chunk_len", [1, 3, 10, 14])
+def test_stream_replay_bit_identical(scheduler, chunk_len):
+    """Any staging chunk length — including 1 and tails longer than the
+    trace — replays bit-identically to single-shot run()."""
+    sys_ = _SYSTEMS[scheduler]
+    rng = np.random.default_rng(5)
+    trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
+    single = sys_.run(trace, drain_bound(N_CORES, TLEN))
+    got = stream_replay(sys_, trace, chunk_len=chunk_len)
+    assert strip_windows(got) == single
+
+
+def test_stream_replay_source_splits_invisible():
+    """The rolling-window source normalizes arbitrary ingest chunking: the
+    same staging length over differently-split sources is identical."""
+    sys_ = _SYSTEMS["vectorized"]
+    rng = np.random.default_rng(9)
+    trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
+    single = sys_.run(trace, drain_bound(N_CORES, TLEN))
+    for cuts in ([2], [1, 2, 3, 4, 9], [5], []):
+        got = stream_replay(sys_, _split(trace, cuts), chunk_len=4)
+        assert strip_windows(got) == single, cuts
+
+
+def test_stream_replay_window_stats_account_for_all_latency():
+    """The per-window latency series partitions the scalar sums exactly."""
+    sys_ = _SYSTEMS["vectorized"]
+    rng = np.random.default_rng(3)
+    trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
+    res = stream_replay(sys_, trace, chunk_len=3)
+    n_r = sum(n for n, _ in res.window_read_latency)
+    n_w = sum(n for n, _ in res.window_write_latency)
+    assert n_r == res.served_reads and n_w == res.served_writes
+    tot_r = sum(n * avg for n, avg in res.window_read_latency)
+    assert tot_r == pytest.approx(res.avg_read_latency * max(n_r, 1))
+
+
+def test_stream_replay_batched_matches_engine():
+    """The chunk axis composes with the engine's point axis: a whole
+    shape-compatible batch streams as one vmapped program, per-point
+    bit-identical to the batched single-shot engine."""
+    from repro.sweep import SweepPoint, grid, run_points
+    from repro.sweep.workloads import build_trace
+    base = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=N_ROWS,
+                      n_cores=N_CORES, n_banks=8, length=TLEN,
+                      select_period=16)
+    pts = grid(base, alpha=(0.25, 0.5), seed=(0, 1))
+    traces = [build_trace(pt) for pt in pts]
+    want = run_points(pts, traces=traces)
+    got = stream_replay_points(pts, traces, chunk_len=4)
+    assert [strip_windows(g) for g in got] == want
+
+
+# -------------------------------------------------------- hypothesis variant
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from([1, 2, 3, 5, 7, 10, 13]),
+           st.sampled_from(["vectorized", "reference"]),
+           st.lists(st.integers(1, TLEN - 1), max_size=4, unique=True))
+    def test_stream_replay_random_splits_hypothesis(seed, chunk_len,
+                                                    scheduler, cuts):
+        """Random traces × random source splits × random staging lengths ×
+        both schedulers: streamed == single-shot, bit for bit."""
+        sys_ = _SYSTEMS[scheduler]
+        rng = np.random.default_rng(seed)
+        trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
+        single = sys_.run(trace, drain_bound(N_CORES, TLEN))
+        got = stream_replay(sys_, _split(trace, sorted(cuts)),
+                            chunk_len=chunk_len)
+        assert strip_windows(got) == single
+
+
+# ------------------------------------------------------------------ source
+def test_trace_source_rolling_window_trims():
+    """The rolling window holds only (spread + stage) columns: staging at
+    advanced positions drops the consumed prefix."""
+    rng = np.random.default_rng(1)
+    trace = rand_trace(rng, 2, 64, 4, 16)
+    src = TraceSource.from_chunks(chunk_iter(trace, 8), prefetch=False)
+    src.stage(np.array([0, 0]), 4)
+    assert src.base == 0
+    src.stage(np.array([40, 42]), 4)
+    assert src.base == 40                     # consumed columns were dropped
+    buffered = src._buf[0].shape[1]
+    assert buffered <= 16                     # spread (2) + stage, chunk-rounded
+    # staging is position-exact despite the trim
+    chunk, se = src.stage(np.array([40, 42]), 4)
+    np.testing.assert_array_equal(np.asarray(chunk.row)[0],
+                                  np.asarray(trace.row)[0, 40:44])
+    np.testing.assert_array_equal(np.asarray(chunk.row)[1],
+                                  np.asarray(trace.row)[1, 42:46])
+
+
+def test_trace_source_prefetch_propagates_ingest_errors():
+    """A failed ingest must fail the replay, not masquerade as a short
+    stream (the background prefetch thread relays its exception)."""
+    def bad_chunks():
+        rng = np.random.default_rng(0)
+        yield rand_trace(rng, 2, 4, 4, 16)
+        raise ValueError("malformed line 17")
+
+    src = TraceSource.from_chunks(bad_chunks(), prefetch=True)
+    with pytest.raises(ValueError, match="malformed line 17"):
+        src.stage(np.array([0, 0]), 64)   # needs data past the first chunk
+
+
+def test_requests_to_trace_refuses_truncation():
+    """A too-small ``length`` must raise, not silently drop the stream's
+    tail and report results for a trace that never fully replayed."""
+    with pytest.raises(ValueError, match="stream has 10"):
+        requests_to_trace(np.arange(10), np.zeros(10, bool), n_cores=2,
+                          length=3)
+    from repro.sweep.workloads import build_trace, file_point
+    # and a file: sweep point whose length is too small names the point
+    lines = "".join(f"{i} R\n" for i in range(40))
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "big.trace")
+        with open(path, "w") as f:
+            f.write(lines)
+        pt = file_point(os.path.join(DATA, "tiny_trace.npz")).replace(
+            trace=f"file:{path}", length=2, n_cores=2, suite="s")
+        with pytest.raises(ValueError) as ei:
+            build_trace(pt, index=7)
+        assert "[7]" in str(ei.value) and "stream has 40" in str(ei.value)
+
+
+def test_file_point_rejects_mismatched_geometry(tmp_path):
+    """An .npz mapped for a different memory geometry must fail loudly —
+    inside jit the out-of-range rows would clamp and corrupt results."""
+    from repro.sweep.workloads import build_trace, file_point
+    rng = np.random.default_rng(0)
+    path = save_npz(os.path.join(tmp_path, "big.npz"),
+                    rand_trace(rng, 2, 6, 8, 512))   # rows up to 511
+    pt = file_point(path, n_rows=64, n_banks=8)      # but a 64-row system
+    with pytest.raises(ValueError, match="different memory geometry"):
+        build_trace(pt)
+
+
+def test_trace_source_stream_end_marks_tails():
+    rng = np.random.default_rng(2)
+    trace = rand_trace(rng, 2, 10, 4, 16)
+    src = TraceSource.from_trace(trace)
+    _, se = src.stage(np.array([0, 8]), 4)
+    se = np.asarray(se)
+    assert se[0] > 4          # more data behind the buffer
+    assert se[1] == 2         # stream ends inside: 2 staged requests remain
+    assert not src.exhausted(np.array([10, 9]))
+    assert src.exhausted(np.array([10, 10]))
+
+
+# ------------------------------------------------------------------ formats
+def test_ramulator_fixture_golden():
+    reqs = list(iter_ramulator(os.path.join(DATA, "tiny_ramulator.trace")))
+    assert reqs == [(0, False), (5, True), (17, False), (3, True),
+                    (9, False), (12, False)]
+    tr = requests_to_trace(*zip(*reqs), n_cores=2, n_banks=4, n_rows=8)
+    bank, row = addr_to_bank_row(np.array([0, 5, 17, 3, 9, 12]), 4, 8)
+    # round-robin deal: request i -> core i % 2, slot i // 2
+    np.testing.assert_array_equal(np.asarray(tr.bank),
+                                  bank.reshape(3, 2).T)
+    np.testing.assert_array_equal(np.asarray(tr.row),
+                                  row.reshape(3, 2).T)
+    np.testing.assert_array_equal(np.asarray(tr.is_write),
+                                  [[False, False, False], [True, True, False]])
+    assert np.asarray(tr.valid).all()
+
+
+def test_gem5_fixture_golden():
+    reqs = list(iter_gem5(os.path.join(DATA, "tiny_gem5.gem5")))
+    assert reqs == [(0x000, False), (0x040, True), (0x080, False),
+                    (0x100, True), (0x140, False)]
+    tr = load_trace(os.path.join(DATA, "tiny_gem5.gem5"), n_cores=1,
+                    n_banks=4, n_rows=8, line_bytes=64)
+    np.testing.assert_array_equal(np.asarray(tr.bank), [[0, 1, 2, 0, 1]])
+    np.testing.assert_array_equal(np.asarray(tr.row), [[0, 0, 0, 1, 1]])
+    np.testing.assert_array_equal(np.asarray(tr.is_write),
+                                  [[False, True, False, True, False]])
+
+
+def test_npz_fixture_roundtrip_and_replay():
+    """The canonical .npz form is lossless, and an ingested file replays
+    through the batched sweep engine exactly like its in-memory original."""
+    path = os.path.join(DATA, "tiny_trace.npz")
+    tr = load_npz(path)
+    spec = TraceSpec(n_cores=4, length=12, n_banks=8, n_rows=64, seed=7)
+    want = banded_trace(spec)
+    for a, b in zip(tr, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_npz_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(4)
+    trace = rand_trace(rng, 3, 9, 8, 32)
+    path = save_npz(os.path.join(tmp_path, "t.npz"), trace)
+    back = load_npz(path)
+    for a, b in zip(back, trace):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stream_file_matches_whole_file_load(tmp_path):
+    """Lazy chunked file reading deals requests and synthesizes payloads
+    exactly like a whole-file load — chunk boundaries are invisible."""
+    lines = [f"{16 * i + (i % 5)} {'W' if i % 3 == 0 else 'R'}\n"
+             for i in range(23)]
+    path = os.path.join(tmp_path, "long.trace")
+    with open(path, "w") as f:
+        f.writelines(lines)
+    whole = load_trace(path, n_cores=2, n_banks=4, n_rows=32)
+    for chunk_len in (4, 9):       # 9: short tail chunk (23 = 18 + 5 reqs)
+        chunks = list(stream_file(path, chunk_len, n_cores=2, n_banks=4,
+                                  n_rows=32))
+        cat = [np.concatenate([np.asarray(getattr(c, f)) for c in chunks],
+                              axis=1) for f in Trace._fields]
+        # the tail chunk is SHORT, not padded: the concatenation must equal
+        # the whole-file load column for column (a padded tail would append
+        # idle columns that delay the replay's completion cycle)
+        for name, a, b in zip(Trace._fields, cat, whole):
+            np.testing.assert_array_equal(a, np.asarray(b),
+                                          err_msg=f"{name} chunk={chunk_len}")
+
+
+def test_file_point_rides_sweep_engine():
+    """A file: point flows through partition/batch/replay like any other."""
+    from repro.sim.ramulator import simulate
+    from repro.sweep import run_points
+    from repro.sweep.workloads import build_trace, file_point
+    path = os.path.join(DATA, "tiny_trace.npz")
+    pt = file_point(path, alpha=0.25, r=0.125, n_rows=64, select_period=16)
+    assert (pt.n_cores, pt.length) == (4, 12)
+    tr = build_trace(pt)
+    got = run_points([pt])[0]
+    want = simulate(pt.scheme, tr, pt.n_rows, alpha=pt.alpha, r=pt.r,
+                    n_cycles=pt.resolved_cycles(),
+                    select_period=pt.select_period)
+    assert got == want
+
+
+def test_build_trace_error_names_point():
+    """The error path names the failing point (suite + index), not just the
+    unknown key — chunked file-backed sweeps are unattributable otherwise."""
+    from repro.sweep import run_points
+    from repro.sweep.workloads import build_trace, suite
+    pts = suite("trace_zoo")
+    bad = pts[2].replace(trace="no_such_generator")
+    with pytest.raises(KeyError) as ei:
+        build_trace(bad, index=2)
+    msg = str(ei.value)
+    assert "trace_zoo" in msg and "[2]" in msg and "no_such_generator" in msg
+    with pytest.raises(FileNotFoundError) as ei2:
+        run_points([pts[0].replace(trace="file:/does/not/exist.npz")])
+    assert "trace_zoo" in str(ei2.value) and "[0]" in str(ei2.value)
+
+
+# ----------------------------------------------------------------- profiler
+def test_profiler_recovers_generator_bands():
+    """Fig 15 reproduction: band detection on ``banded_trace`` recovers the
+    generator's band count and extents."""
+    n_banks, n_rows = 8, 512
+    spec = TraceSpec(n_cores=8, length=400, n_banks=n_banks, n_rows=n_rows,
+                     seed=0)
+    trace = banded_trace(spec, n_bands=2)
+    prof = profile_trace(trace, n_banks=n_banks, n_rows=n_rows, window=256)
+    bands = prof.bands()
+    assert len(bands) == 2
+    space = n_banks * n_rows
+    width_rows = max(space // 32, n_banks * 4) // n_banks
+    tol = 2 * prof.bin_rows
+    for i, band in enumerate(bands):
+        center = (i + 0.5) * space / 2 / n_banks   # generator band center
+        assert abs(band.center - center) <= tol
+        assert abs((band.row_hi - band.row_lo + 1) - width_rows) <= 2 * tol
+        assert band.persistence >= 0.5
+    assert sum(b.weight for b in bands) > 0.9      # bands carry the traffic
+    # profile basics ride along
+    assert prof.n_requests == int(np.asarray(trace.valid).sum())
+    assert 0.15 < prof.write_frac < 0.45
+
+
+def test_profiler_streaming_equals_one_shot():
+    """Chunked accumulation is the same profile as one-shot (windows are
+    request-aligned, so chunk boundaries are invisible)."""
+    spec = TraceSpec(n_cores=4, length=200, n_banks=8, n_rows=128, seed=1)
+    trace = banded_trace(spec)
+    one = profile_trace(trace, 8, 128, window=64)
+    chunked = profile_trace(chunk_iter(trace, 17), 8, 128, window=64)
+    assert one.n_windows == chunked.n_windows
+    np.testing.assert_array_equal(one.row_hist, chunked.row_hist)
+    np.testing.assert_array_equal(one.presence, chunked.presence)
+    np.testing.assert_allclose(one.bank_window_var, chunked.bank_window_var)
+
+
+def test_region_priors_rank_hot_regions():
+    spec = TraceSpec(n_cores=8, length=300, n_banks=8, n_rows=256, seed=2)
+    trace = banded_trace(spec, n_bands=2)
+    prof = profile_trace(trace, 8, 256, window=128)
+    rs = 13                                        # r=0.05 over 256 rows
+    n_regions = -(-256 // rs)
+    pri = prof.region_priors(rs, n_regions, k=4)
+    assert pri.shape == (4,)
+    counts = np.zeros(n_regions, np.int64)
+    np.add.at(counts, np.arange(256) // rs, prof.row_hist)
+    ranked = np.argsort(-counts, kind="stable")
+    np.testing.assert_array_equal(pri, ranked[:4])
+    # hot regions must carry real traffic
+    assert counts[pri[0]] > counts.mean()
+
+
+@pytest.mark.parametrize("suite_name,kw", [
+    ("paper_fig18", dict(schemes=("scheme_i",), alphas=(0.1, 0.25))),
+])
+def test_region_priors_never_increase_stalls_fast(suite_name, kw):
+    _check_priors_no_stall_regression(suite_name, kw)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("suite_name,kw", [
+    ("paper_fig18", {}),
+    ("paper_fig19", {}),
+    ("paper_fig20", {}),
+])
+def test_region_priors_never_increase_stalls(suite_name, kw):
+    _check_priors_no_stall_regression(suite_name, kw)
+
+
+def _check_priors_no_stall_regression(suite_name, kw):
+    """Seeding the dynamic unit with profiled region-priors must never cost
+    stall cycles vs a cold start on the paper-figure suites."""
+    from repro.sweep import SweepPoint, run_points
+    from repro.sweep.workloads import build_trace, suite
+    base_pt = SweepPoint(n_rows=64, n_cores=8, n_banks=8, length=48,
+                         select_period=32)
+    pts = suite(suite_name, base_pt, **kw)
+    traces = [build_trace(pt) for pt in pts]
+    priors = []
+    for pt, tr in zip(pts, traces):
+        prof = profile_trace(tr, n_banks=pt.n_banks, n_rows=pt.n_rows,
+                             window=64)
+        rs, nr, ns = pt.derived_slots()
+        priors.append(prof.region_priors(rs, nr, k=max(ns, 1)))
+    cold = run_points(pts, traces=traces)
+    seeded = run_points(pts, traces=traces, region_priors=priors)
+    cold_stalls = sum(r.stall_cycles for r in cold)
+    seeded_stalls = sum(r.stall_cycles for r in seeded)
+    assert seeded_stalls <= cold_stalls, (suite_name, seeded_stalls,
+                                          cold_stalls)
+
+
+# --------------------------------------------------------------- drain bound
+def test_drain_bound_single_helper():
+    """One helper, one derivation: the looped driver's default budget IS
+    drain_bound, and the chunked budget only adds the carried backlog."""
+    from repro.sim.ramulator import default_n_cycles
+    from repro.traces.stream import chunk_bound
+    rng = np.random.default_rng(0)
+    trace = rand_trace(rng, 3, 10, 8, 32)
+    assert default_n_cycles(trace) == drain_bound(3, 10)
+    sys_ = _SYSTEMS["vectorized"]
+    backlog = 2 * sys_.p.n_data * sys_.p.queue_depth
+    assert chunk_bound(sys_, 16) == drain_bound(sys_.n_cores, 16,
+                                                backlog=backlog)
+    assert drain_bound(3, 10, backlog=5) > drain_bound(3, 10)
+
+
+# --------------------------------------------------------------- deprecation
+def test_reference_scheduler_deprecation_warning():
+    """scheduler='reference' survives only as the soak oracle; selecting it
+    must say so loudly (ROADMAP retirement path)."""
+    t = get_tables("scheme_i")
+    with pytest.warns(DeprecationWarning, match="soak"):
+        make_params(t, n_rows=32, alpha=1.0, r=0.25, scheduler="reference")
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        make_params(t, n_rows=32, alpha=1.0, r=0.25)   # default: no warning
+
+
+# ------------------------------------------------------------- slow soak
+@pytest.mark.slow
+@pytest.mark.timeout(3600)
+def test_stream_million_requests():
+    """A ≥1M-request trace replays through stream_replay under a fixed
+    per-chunk device footprint, completes, and serves every request."""
+    from repro.sim.trace import uniform_trace
+    n_cores, chunk_cols, n_chunks = 8, 2048, 62
+    n_banks, n_rows = 8, 512
+    total = n_cores * chunk_cols * n_chunks
+    assert total >= 1_000_000
+
+    def chunks():
+        for i in range(n_chunks):
+            spec = TraceSpec(n_cores=n_cores, length=chunk_cols,
+                             n_banks=n_banks, n_rows=n_rows, seed=1000 + i)
+            yield uniform_trace(spec)
+
+    t = get_tables("scheme_i")
+    p = make_params(t, n_rows=n_rows, alpha=1.0, r=0.05)
+    sys_ = CodedMemorySystem(t, p, n_cores=n_cores)
+    res = stream_replay(sys_, chunks(), chunk_len=chunk_cols)
+    assert res.completed
+    assert res.served_reads + res.served_writes == total
+    assert len(res.window_read_latency) >= n_chunks
