@@ -4,17 +4,16 @@ Public surface:
   codes      — Scheme I/II/III + replication/uncoded baselines (§III)
   state      — MemParams/MemState pytrees (code status table refinement, §IV-A)
   controller — read/write pattern builders (§IV-B/C), work-proportional
-  controller_ref — the sequential reference builders they are verified against
   recoding   — ReCoding unit (§IV-D)
   dynamic    — dynamic coding unit (§IV-E)
   system     — CodedMemorySystem cycle engine + trace-driven run()
 
 The scheduler hot path (pattern builders, write commit, core arbiter, recode
-scan) ships in two interchangeable implementations selected by
-``make_params(scheduler=...)``: ``"vectorized"`` (default, cost proportional
-to queued work) and ``"reference"`` (the paper-flowchart sequential loops).
-Both produce bit-identical plans and simulation results — see
-docs/performance.md.
+scan) is the vectorized, work-proportional implementation described in
+docs/performance.md. Its ground truth is the independent pure-NumPy golden
+model in ``repro.oracle``: plans and end-to-end simulation state must be
+bit-identical to it — enforced by tests/test_conformance.py, see
+docs/testing.md. There is deliberately no second jax implementation.
 """
 from repro.core.codes import (  # noqa: F401
     MAX_OPTS,

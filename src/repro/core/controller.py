@@ -27,14 +27,12 @@ Write actions:
 
 Scheduling algorithm (the per-cycle hot path)
 ---------------------------------------------
-The *reference* builders (``repro.core.controller_ref``) walk **all**
-N = ``n_data × queue_depth`` candidate slots in a ``lax.fori_loop``, and
-each iteration re-scans a ``max_syms``-entry symbol list three times — an
-O(N · max_syms) sequential chain per simulated cycle, paid in full even
-when every queue is empty, that neither ``vmap`` nor sharding can hide.
-
-The builders here compute the **same plans, bit for bit**, but make the
-walk's cost track the work a cycle actually contains:
+A naive matcher walks **all** N = ``n_data × queue_depth`` candidate slots
+sequentially and re-scans a symbol list per candidate — an O(N · max_syms)
+chain per simulated cycle, paid in full even when every queue is empty,
+that neither ``vmap`` nor sharding can hide. The builders here implement
+the same greedy semantics with cost that tracks the work a cycle actually
+contains:
 
   * **compacted trip count** — candidates are age-sorted with invalid slots
     keyed to +inf, and the walk stops after the last valid position
@@ -42,10 +40,11 @@ walk's cost track the work a cycle actually contains:
     post-drain cycles and the off-duty builder of each read/write cycle
     (see ``CodedMemorySystem.cycle_fn``) collapse to the fixed setup cost.
   * **O(1) symbol set** — the chained-decode symbols materialized this
-    cycle live in an (n_data, n_rows) bit-matrix with scalar lookups
-    instead of 3×``max_syms``-element scans per candidate. Set semantics
-    equal the reference's append-list whenever its capacity cannot bind
-    (below).
+    cycle live in an (n_data, n_rows) bit-matrix with scalar lookups: true
+    set semantics, no capacity. ``make_params`` still bounds ``max_syms``
+    from below (>= ``n_ports``) so that a capacity-bounded implementation
+    of the same semantics could never saturate — the per-cycle symbol
+    count is bounded by port claims.
   * **hoisted candidate tables** — per-candidate geometry (freshness,
     parity options, validity, sibling/port ids) is gathered once, outside
     the walk; each iteration is ~30 scalar ops against it.
@@ -58,13 +57,11 @@ destination queue and scatters once, the write datapath commits via an
 age-rank scatter-max, and the ReCoding unit retires ring entries in
 budget-bounded parallel rounds (see ``system.py`` / ``recoding.py``).
 
-Equivalence contract: plans are bit-identical to the reference whenever
-``max_syms >= n_ports`` (symbols materialized per cycle are bounded by port
-claims, so the reference's symbol-list cap cannot bind; the default
-``max_syms=96`` satisfies this for every supported scheme). When the bound
-fails — or ``make_params(scheduler="reference")`` asks for it — the builders
-transparently fall back to the reference implementation. Randomized and
-end-to-end equivalence is enforced by tests/test_scheduler_equiv.py.
+Correctness contract: plans are **bit-identical** to the pure-NumPy golden
+model in ``repro.oracle`` — an independent, sequential re-derivation of
+the paper's matcher that shares no code with this package. The
+differential suite in tests/test_conformance.py enforces it on randomized
+states and full workloads; see docs/testing.md.
 
 Region geometry is traced, not static: both builders take an optional
 ``rs_active`` (the point's own region size inside a padded sweep
@@ -141,17 +138,12 @@ class WritePlan(NamedTuple):
     n_rc_dropped: jnp.ndarray  # () int32 — recode requests lost to a full ring
 
 
-def _use_reference(p: MemParams) -> bool:
-    return p.scheduler == "reference" or p.max_syms < p.n_ports
-
-
 def _walk_bounds(cand_age, cand_valid):
     """Age order + trip bound covering every valid candidate.
 
     Invalid slots sort to the back via an +inf key; the walk only needs to
-    reach the last position holding a valid candidate (they act as no-ops in
-    the body, exactly as in the reference loop, so skipping the tail is
-    unobservable)."""
+    reach the last position holding a valid candidate (invalid ones are
+    no-ops in the body, so skipping the tail is unobservable)."""
     n = cand_age.shape[0]
     order = jnp.argsort(jnp.where(cand_valid, cand_age, INT32_MAX))
     last = jnp.max(jnp.where(cand_valid[order],
@@ -172,12 +164,6 @@ def build_read_pattern(
     region_slot: jnp.ndarray,
     rs_active=None,
 ) -> ReadPlan:
-    if _use_reference(p):
-        from repro.core import controller_ref
-        return controller_ref.build_read_pattern_ref(
-            p, t, cand_bank, cand_row, cand_age, cand_valid, port_busy,
-            fresh_loc, parity_valid, region_slot, rs_active)
-
     import jax
 
     n = cand_bank.shape[0]
@@ -195,8 +181,8 @@ def build_read_pattern(
     coded = slot >= 0
     pr = jnp.maximum(slot, 0) * rs + i % rs_a
     hold_port = t.par_port[jnp.maximum(fl - 1, 0)]
-    # a negative hold_port (scheme with no parities) wraps the reference's
-    # REDIRECT gather/claim onto the dummy sink slot — point it there
+    # a negative hold_port (scheme with no parities) points the REDIRECT
+    # gather/claim at the dummy sink slot
     hold_idx = jnp.where(hold_port < 0, nop, hold_port)
     optj = t.opt_parity[b]                    # (N, K)
     optjj = jnp.maximum(optj, 0)
@@ -264,8 +250,7 @@ def build_read_pattern(
         port_busy = (port_busy.at[p_dir].set(True).at[p_par].set(True)
                      .at[p_s0].set(True).at[p_s1].set(True))
 
-        # --- materialize symbols (set semantics; cap can't bind, see module
-        # docstring)
+        # --- materialize symbols (true set semantics, see module docstring)
         oob = jnp.int32(p.n_data)
         sym = sym.at[jnp.where(is_dir | is_opt, bc, oob), ic].set(
             True, mode="drop")
@@ -280,8 +265,9 @@ def build_read_pattern(
 
     carry = (jnp.int32(0), port_busy, sym0, served0, mode0)
     _, port_busy, _, served, mode = jax.lax.while_loop(cond, body, carry)
-    # the reference's no-op scatters leave the sink slot marked busy even
-    # when it never reaches a valid candidate
+    # the masked no-op claims land on the sink slot; mark it busy even when
+    # the walk never reaches a valid candidate, so its state is
+    # deterministic for downstream consumers
     port_busy = port_busy.at[p.n_ports].set(True)
     n_served = jnp.sum(served).astype(jnp.int32)
     n_degraded = jnp.sum(
@@ -307,13 +293,6 @@ def build_write_pattern(
     rc_valid: jnp.ndarray,
     rs_active=None,
 ) -> WritePlan:
-    if _use_reference(p):
-        from repro.core import controller_ref
-        return controller_ref.build_write_pattern_ref(
-            p, t, cand_bank, cand_row, cand_age, cand_valid, port_busy,
-            fresh_loc, parity_valid, region_slot, parked_count, rc_bank,
-            rc_row, rc_valid, rs_active)
-
     import jax
 
     n = cand_bank.shape[0]
@@ -407,7 +386,7 @@ def build_write_pattern(
     out = jax.lax.while_loop(cond, body, carry)
     (_, port_busy, served, mode, fresh_loc, parity_valid, parked_count,
      rc_bank, rc_row, rc_valid, dropped) = out
-    port_busy = port_busy.at[p.n_ports].set(True)   # ref's no-op scatters
+    port_busy = port_busy.at[p.n_ports].set(True)   # deterministic sink
     n_served = jnp.sum(served).astype(jnp.int32)
     n_parked = jnp.sum(served & (mode >= WMODE_PARK0)).astype(jnp.int32)
     return WritePlan(served, mode, port_busy, fresh_loc, parity_valid,

@@ -64,13 +64,10 @@ def recode_step(
     removes the moot entries the scan passed over on the way (their view is
     unchanged within a trip — nothing between two retirements mutates
     state). Retirement order, port charges, budget accounting and the ring
-    left behind are bit-identical to the sequential scan
-    (``recode_step_ref``); an empty or workless ring costs one trip.
+    left behind are bit-identical to a sequential scan — enforced against
+    the golden model's (``repro.oracle.recode_step``) by
+    tests/test_conformance.py; an empty or workless ring costs one trip.
     """
-    if p.scheduler == "reference":
-        return recode_step_ref(p, t, port_busy, fresh_loc, parity_valid,
-                               parked_count, rc_bank, rc_row, rc_valid,
-                               region_slot, banks_data, parity_data, rs_active)
     rs = p.region_size
     rs_a = rs if rs_active is None else rs_active
     cap = rc_valid.shape[0]
@@ -175,118 +172,3 @@ def recode_step(
     return RecodeOut(port_busy, fresh_loc, parity_valid, parked_count,
                      rc_valid, banks_data, parity_data,
                      jnp.int32(p.recode_budget) - budget)
-
-
-def recode_step_ref(
-    p: MemParams,
-    t: JTables,
-    port_busy: jnp.ndarray,
-    fresh_loc: jnp.ndarray,
-    parity_valid: jnp.ndarray,
-    parked_count: jnp.ndarray,
-    rc_bank: jnp.ndarray,
-    rc_row: jnp.ndarray,
-    rc_valid: jnp.ndarray,
-    region_slot: jnp.ndarray,
-    banks_data: jnp.ndarray,
-    parity_data: jnp.ndarray,
-    rs_active=None,
-) -> RecodeOut:
-    rs = p.region_size
-    rs_a = rs if rs_active is None else rs_active
-    nop = jnp.int32(p.n_ports)
-
-    def body(e, carry):
-        (port_busy, fresh_loc, parity_valid, parked_count, rc_valid,
-         banks_data, parity_data, budget) = carry
-        b = jnp.maximum(rc_bank[e], 0)
-        i = jnp.maximum(rc_row[e], 0)
-        active = rc_valid[e] & (budget > 0)
-        region = i // rs_a
-        slot = region_slot[region]
-        coded = slot >= 0
-        pr = jnp.maximum(slot, 0) * rs + i % rs_a
-        fl = fresh_loc[b, i]
-        parked = fl > 0
-        holder = jnp.maximum(fl - 1, 0)
-
-        # Which covering parities need recomputation?
-        #  * stale ones, and
-        #  * when (b,i) is parked: ALL covering parities — restoring changes
-        #    banks_data[b,i], so even currently-valid ones go inconsistent.
-        # A parity j is BLOCKED if another member's fresh value is parked in
-        # j's row — recomputing would destroy that parked value; that
-        # member's own recode entry restores it and then recomputes j.
-        recompute = []
-        blocked_l = []
-        for kk in range(MAX_OPTS):
-            j = t.opt_parity[b, kk]
-            jj = jnp.maximum(j, 0)
-            blocked = jnp.zeros((), bool)
-            for mm in range(MAX_SIBS + 1):
-                m = t.par_members[jj, mm]
-                blocked = blocked | ((m >= 0) & (m != b) &
-                                     (fresh_loc[jnp.maximum(m, 0), i] == jj + 1))
-            need = (j >= 0) & coded & (~parity_valid[jj, pr] | parked)
-            recompute.append(need & ~blocked)
-            blocked_l.append(need & blocked)
-        has_work = parked | jnp.stack(recompute).any()
-        work = active & coded & has_work
-        moot = active & (~coded | ~has_work)
-
-        # required ports: b, holder parity (if parked), each recomputed
-        # parity and all of its members
-        needed = jnp.zeros((p.n_ports + 1,), bool)
-        needed = needed.at[jnp.where(work, b, nop)].set(True)
-        needed = needed.at[jnp.where(work & parked, t.par_port[holder], nop)].set(True)
-        for kk in range(MAX_OPTS):
-            j = t.opt_parity[b, kk]
-            jj = jnp.maximum(j, 0)
-            rc_ = recompute[kk] & work
-            needed = needed.at[jnp.where(rc_, t.par_port[jj], nop)].set(True)
-            for mm in range(MAX_SIBS + 1):
-                m = t.par_members[jj, mm]
-                needed = needed.at[jnp.where(rc_ & (m >= 0), jnp.maximum(m, 0), nop)].set(True)
-        needed = needed.at[p.n_ports].set(False)
-        feasible = work & ~jnp.any(needed & port_busy[: p.n_ports + 1])
-
-        # ---- execute -----------------------------------------------------
-        port_busy = port_busy | jnp.where(feasible, needed, False)
-        # restore parked value to the data bank
-        restored = jnp.where(
-            feasible & parked, parity_data[holder, pr], banks_data[b, i]
-        )
-        banks_data = banks_data.at[b, i].set(restored)
-        fresh_loc = fresh_loc.at[b, i].set(jnp.where(feasible, 0, fl))
-        parked_count = parked_count.at[region].add(
-            -(feasible & parked).astype(jnp.int32)
-        )
-        # recompute from the (now canonical) data banks; blocked parities are
-        # explicitly invalidated (bank value changed under them)
-        for kk in range(MAX_OPTS):
-            j = t.opt_parity[b, kk]
-            jj = jnp.maximum(j, 0)
-            do = recompute[kk] & feasible
-            inv = blocked_l[kk] & feasible & parked
-            val = jnp.zeros((), jnp.int32)
-            for mm in range(MAX_SIBS + 1):
-                m = t.par_members[jj, mm]
-                val = val ^ jnp.where(m >= 0, banks_data[jnp.maximum(m, 0), i], 0)
-            parity_data = parity_data.at[jj, pr].set(
-                jnp.where(do, val, parity_data[jj, pr])
-            )
-            parity_valid = parity_valid.at[jj, pr].set(
-                jnp.where(do, True, jnp.where(inv, False, parity_valid[jj, pr]))
-            )
-        rc_valid = rc_valid.at[e].set(jnp.where(feasible | moot, False, rc_valid[e]))
-        budget = budget - feasible.astype(jnp.int32)
-        return (port_busy, fresh_loc, parity_valid, parked_count, rc_valid,
-                banks_data, parity_data, budget)
-
-    carry = (port_busy, fresh_loc, parity_valid, parked_count, rc_valid,
-             banks_data, parity_data, jnp.int32(p.recode_budget))
-    out = jax.lax.fori_loop(0, p.recode_cap, body, carry)
-    (port_busy, fresh_loc, parity_valid, parked_count, rc_valid,
-     banks_data, parity_data, budget) = out
-    return RecodeOut(port_busy, fresh_loc, parity_valid, parked_count, rc_valid,
-                     banks_data, parity_data, jnp.int32(p.recode_budget) - budget)

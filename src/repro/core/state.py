@@ -23,7 +23,6 @@ Dynamic coding (§IV-E): rows are grouped into ``n_regions`` regions of
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -61,18 +60,12 @@ class MemParams(NamedTuple):
     n_active: int         # slots usable for coded regions (0 when α < r)
     queue_depth: int
     recode_cap: int
-    max_syms: int
+    max_syms: int         # symbol bit-matrix capacity bound; must cover
+                          # n_ports (enforced by ``make_params``) so the
+                          # per-cycle symbol set can never saturate
     recode_budget: int    # max recode entries retired per cycle
     coalesce: bool        # allow FROM_SYM / chained-decode reuse (off for the
                           # uncoded Ramulator-like baseline)
-    scheduler: str = "vectorized"  # "vectorized" (compacted-walk builders) or
-                                   # "reference" (the sequential greedy loops).
-                                   # "reference" is DEPRECATED: it is retained
-                                   # only as the bit-identical soak oracle for
-                                   # the vectorized scheduler and will be
-                                   # removed once the ROADMAP's soak period
-                                   # ends; selecting it raises a
-                                   # DeprecationWarning from ``make_params``.
     encode_rows_per_cycle: int = 64  # encoder bandwidth; the traced
                                      # per-point encode latency is
                                      # max(1, region_size_active // this)
@@ -200,21 +193,22 @@ def make_params(
     encode_rows_per_cycle: int = 64,
     recode_budget: int = 4,
     coalesce: bool = True,
-    scheduler: str = "vectorized",
     n_slots_alloc: Optional[int] = None,
     region_size_alloc: Optional[int] = None,
     n_regions_alloc: Optional[int] = None,
     traced_geometry: bool = False,
 ) -> MemParams:
-    if scheduler == "reference":
-        # the sequential loops are kept only as the equivalence-soak oracle
-        # (docs/performance.md); suites that assert vectorized == reference
-        # opt in to the warning explicitly (filterwarnings marks)
-        warnings.warn(
-            "scheduler='reference' is deprecated: the sequential scheduler "
-            "survives only as the bit-identical soak oracle for "
-            "scheduler='vectorized' and will be removed after the soak "
-            "period (ROADMAP).", DeprecationWarning, stacklevel=2)
+    if max_syms < tables.n_ports:
+        # the builders' O(1) symbol bit-matrix has true set semantics; the
+        # scheduling contract (plans equal the sequential golden model's)
+        # additionally requires that a capacity-bounded symbol list could
+        # never saturate, which holds when max_syms covers the per-cycle
+        # port-claim bound. Reject configurations below it instead of
+        # silently changing chained-decode behaviour.
+        raise ValueError(
+            f"max_syms={max_syms} < n_ports={tables.n_ports}: the symbol "
+            "capacity must cover the per-cycle port-claim bound (see "
+            "docs/testing.md)")
     region_size, n_regions, n_slots = derive_geometry(n_rows, alpha, r)
     full = n_slots >= n_regions
     # ---- group allocation: a sweep batches several α/r geometries over one
@@ -259,7 +253,6 @@ def make_params(
         max_syms=max_syms,
         recode_budget=recode_budget,
         coalesce=coalesce if tables.n_parities > 0 else False,
-        scheduler=scheduler,
         encode_rows_per_cycle=encode_rows_per_cycle,
         traced_geometry=traced_geometry,
     )

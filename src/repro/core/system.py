@@ -191,11 +191,11 @@ class CodedMemorySystem:
         """Push each core's pending request into its destination queue.
 
         Vectorized: cores are ranked within their destination (bank, r/w)
-        queue by core index — the same service order the sequential loop
-        walks — and all pushes land in one scatter. The first ``rank`` free
-        slots of a queue go to the first ``rank`` ranked cores, so slot
-        assignment, full-queue stalls and pointer advances are bit-identical
-        to the reference loop (``_arbiter_ref``).
+        queue by core index — the service order a sequential walk takes —
+        and all pushes land in one scatter. The first ``rank`` free slots of
+        a queue go to the first ``rank`` ranked cores, so slot assignment,
+        full-queue stalls and pointer advances are bit-identical to the
+        sequential golden model (``repro.oracle``, conformance-tested).
 
         ``stream_end`` (chunked replay): per-core count of staged requests —
         a core whose pointer reaches its stream end has consumed its whole
@@ -204,8 +204,6 @@ class CodedMemorySystem:
         buffer). ``None`` (single-shot) means the trace length is the end
         for every core — the exact pre-chunking program.
         """
-        if self.p.scheduler == "reference":
-            return self._arbiter_ref(st, trace, rs_a, stream_end)
         p = self.p
         m = st.mem
         tlen = trace.bank.shape[1]
@@ -271,58 +269,6 @@ class CodedMemorySystem:
         )
         return st._replace(mem=mem, core_ptr=ptr)
 
-    def _arbiter_ref(self, st: SimState, trace: Trace, rs_a, stream_end=None):
-        p = self.p
-        tlen = trace.bank.shape[1]
-
-        def core_body(ci, carry):
-            (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid, wq_data,
-             access_count, stalls, cyc) = carry
-            pos = ptr[ci]
-            in_range = pos < (tlen if stream_end is None else stream_end[ci])
-            pc = jnp.minimum(pos, tlen - 1)
-            v = trace.valid[ci, pc] & in_range
-            b = jnp.maximum(trace.bank[ci, pc], 0)
-            i = jnp.maximum(trace.row[ci, pc], 0)
-            isw = trace.is_write[ci, pc]
-            payload = trace.data[ci, pc]
-
-            r_full = jnp.all(rq_valid[b])
-            w_full = jnp.all(wq_valid[b])
-            full = jnp.where(isw, w_full, r_full)
-            push = v & ~full
-            # first free slot in the destination queue
-            r_slot = jnp.argmax(~rq_valid[b]).astype(jnp.int32)
-            w_slot = jnp.argmax(~wq_valid[b]).astype(jnp.int32)
-            pr_ = push & ~isw
-            pw_ = push & isw
-            rq_row = rq_row.at[b, r_slot].set(jnp.where(pr_, i, rq_row[b, r_slot]))
-            rq_age = rq_age.at[b, r_slot].set(jnp.where(pr_, cyc, rq_age[b, r_slot]))
-            rq_valid = rq_valid.at[b, r_slot].set(jnp.where(pr_, True, rq_valid[b, r_slot]))
-            wq_row = wq_row.at[b, w_slot].set(jnp.where(pw_, i, wq_row[b, w_slot]))
-            wq_age = wq_age.at[b, w_slot].set(jnp.where(pw_, cyc, wq_age[b, w_slot]))
-            wq_valid = wq_valid.at[b, w_slot].set(jnp.where(pw_, True, wq_valid[b, w_slot]))
-            wq_data = wq_data.at[b, w_slot].set(jnp.where(pw_, payload, wq_data[b, w_slot]))
-            access_count = access_count.at[i // rs_a].add(push.astype(jnp.int32))
-            stalls = wide_add(stalls, v & full)
-            # advance pointer on push or idle entry
-            ptr = ptr.at[ci].set(pos + (in_range & (push | ~v)).astype(jnp.int32))
-            return (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid,
-                    wq_data, access_count, stalls, cyc)
-
-        m = st.mem
-        carry = (st.core_ptr, m.rq_row, m.rq_age, m.rq_valid, m.wq_row, m.wq_age,
-                 m.wq_valid, m.wq_data, m.access_count, m.stall_cycles, m.cycle)
-        out = jax.lax.fori_loop(0, self.n_cores, core_body, carry)
-        (ptr, rq_row, rq_age, rq_valid, wq_row, wq_age, wq_valid, wq_data,
-         access_count, stalls, _) = out
-        mem = m._replace(
-            rq_row=rq_row, rq_age=rq_age, rq_valid=rq_valid, wq_row=wq_row,
-            wq_age=wq_age, wq_valid=wq_valid, wq_data=wq_data,
-            access_count=access_count, stall_cycles=stalls,
-        )
-        return st._replace(mem=mem, core_ptr=ptr)
-
     # ----------------------------------------------------------- read values
     def _read_values(self, m: MemState, plan: ctl.ReadPlan, cb, ci, rs_a):
         """Vectorized XOR-decode datapath for the served reads."""
@@ -363,36 +309,6 @@ class CodedMemorySystem:
         rs = p.region_size
         b = jnp.maximum(cb, 0)
         i = jnp.maximum(ci_, 0)
-        if p.scheduler == "reference":
-            order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
-
-            def commit(k, carry):
-                banks_data, parity_data, golden = carry
-                c = order[k]
-                bc = b[c]
-                ic = i[c]
-                served = plan.served[c]
-                mode = plan.mode[c]
-                slot = m.region_slot[ic // rs_a]
-                pr = jnp.maximum(slot, 0) * rs + ic % rs_a
-                is_dir = served & (mode == ctl.WMODE_DIRECT)
-                is_park = served & (mode >= ctl.WMODE_PARK0)
-                kk = jnp.clip(mode - ctl.WMODE_PARK0, 0, MAX_OPTS - 1)
-                j = jnp.maximum(t.opt_parity[bc, kk], 0)
-                banks_data = banks_data.at[bc, ic].set(
-                    jnp.where(is_dir, cd[c], banks_data[bc, ic])
-                )
-                parity_data = parity_data.at[j, pr].set(
-                    jnp.where(is_park, cd[c], parity_data[j, pr])
-                )
-                golden = golden.at[bc, ic].set(
-                    jnp.where(served, cd[c], golden[bc, ic]))
-                return banks_data, parity_data, golden
-
-            return jax.lax.fori_loop(
-                0, cb.shape[0], commit, (m.banks_data, m.parity_data, m.golden)
-            )
-
         n = cb.shape[0]
         order = jnp.argsort(jnp.where(cv, ca, INT32_MAX))
         pos = jnp.zeros((n,), jnp.int32).at[order].set(
@@ -504,22 +420,18 @@ class CodedMemorySystem:
             )
             return m, plan.port_busy, out
 
-        if p.scheduler == "reference":
-            m, port_busy, out = jax.lax.cond(serve_writes, do_writes,
-                                             do_reads, m)
-        else:
-            # Under vmap, ``cond`` evaluates both branches for every point
-            # anyway — at the full cost of each builder's walk over loaded
-            # queues. Instead run both branches with the off-duty builder's
-            # candidates masked invalid (its compacted walk exits
-            # immediately) and select per point. The selected branch saw
-            # exactly the candidates ``cond`` would hand it, so results are
-            # bit-identical; the discarded branch is discarded either way.
-            m_r, pb_r, out_r = do_reads(m, active=~serve_writes)
-            m_w, pb_w, out_w = do_writes(m, active=serve_writes)
-            pick = lambda w, r: jax.tree.map(                  # noqa: E731
-                lambda x, y: jnp.where(serve_writes, x, y), w, r)
-            m, port_busy, out = pick(m_w, m_r), pick(pb_w, pb_r), pick(out_w, out_r)
+        # Under vmap, ``lax.cond`` would evaluate both branches for every
+        # point anyway — at the full cost of each builder's walk over loaded
+        # queues. Instead run both branches with the off-duty builder's
+        # candidates masked invalid (its compacted walk exits immediately)
+        # and select per point. The selected branch saw exactly the
+        # candidates a ``cond`` would hand it, so results are bit-identical;
+        # the discarded branch is discarded either way.
+        m_r, pb_r, out_r = do_reads(m, active=~serve_writes)
+        m_w, pb_w, out_w = do_writes(m, active=serve_writes)
+        pick = lambda w, r: jax.tree.map(                  # noqa: E731
+            lambda x, y: jnp.where(serve_writes, x, y), w, r)
+        m, port_busy, out = pick(m_w, m_r), pick(pb_w, pb_r), pick(out_w, out_r)
         m = m._replace(write_mode=wm)
 
         # recoding unit uses leftover ports

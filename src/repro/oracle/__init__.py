@@ -1,0 +1,40 @@
+"""The NumPy golden model ("oracle") of the coded memory system.
+
+An independent, deliberately dumb re-derivation of the paper's cycle
+semantics used as the sole ground truth for the production (vectorized,
+jax) scheduler — see ``docs/testing.md`` and ``tests/test_conformance.py``.
+No jax anywhere in this package, and no code shared with ``repro.core``.
+
+Public surface:
+  codes — scheme tables re-derived from the paper (§III)
+  model — ``OracleMemorySystem`` (cycle engine, plan builders, recode,
+          dynamic coding), ``OracleParams.derive``, ``OracleResult``
+"""
+from repro.oracle.codes import (  # noqa: F401
+    MAX_OPTS,
+    MAX_SIBS,
+    ORACLE_SCHEMES,
+    OracleScheme,
+    oracle_scheme,
+)
+from repro.oracle.model import (  # noqa: F401
+    MODE_DIRECT,
+    MODE_FROM_SYM,
+    MODE_OPT0,
+    MODE_REDIRECT,
+    MODE_UNSERVED,
+    WMODE_DIRECT,
+    WMODE_PARK0,
+    WMODE_UNSERVED,
+    OracleCycleOut,
+    OracleMemorySystem,
+    OracleParams,
+    OracleReadPlan,
+    OracleRecodeOut,
+    OracleResult,
+    OracleState,
+    OracleWritePlan,
+    build_read_plan,
+    build_write_plan,
+    recode_step,
+)

@@ -66,7 +66,6 @@ def system_for(pt: SweepPoint,
                              recode_cap=pt.recode_cap, max_syms=pt.max_syms,
                              encode_rows_per_cycle=pt.encode_rows_per_cycle,
                              recode_budget=pt.recode_budget,
-                             scheduler=pt.scheduler,
                              n_slots_alloc=ns_alloc,
                              region_size_alloc=rs_alloc,
                              n_regions_alloc=nr_alloc,

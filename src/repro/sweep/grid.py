@@ -71,8 +71,6 @@ class SweepPoint:
     select_period: int = 256
     wq_hi: int = 8
     wq_lo: int = 2
-    # ---- static: scheduler implementation (vectorized | reference)
-    scheduler: str = "vectorized"
     # free-form tag carried through to result rows
     label: str = ""
     # provenance metadata (not a simulation coordinate): the registry suite
@@ -112,7 +110,7 @@ def static_signature(pt: SweepPoint) -> Tuple:
     full = n_slots >= n_regions
     return (pt.scheme, pt.n_data, pt.n_rows, full,
             pt.queue_depth, pt.coalesce, pt.recode_cap, pt.max_syms,
-            pt.encode_rows_per_cycle, pt.recode_budget, pt.scheduler,
+            pt.encode_rows_per_cycle, pt.recode_budget,
             pt.n_cores, pt.n_banks, pt.length, pt.resolved_cycles())
 
 

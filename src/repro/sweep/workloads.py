@@ -94,6 +94,22 @@ def file_point(path: str, base: SweepPoint = SweepPoint(), **kw) -> SweepPoint:
                         **kw)
 
 
+def text_file_point(path: str, base: SweepPoint = SweepPoint(), *,
+                    line_bytes: int = 1, format: Optional[str] = None,
+                    **kw) -> SweepPoint:
+    """A SweepPoint sized to a Ramulator/gem5 *text* trace: the request
+    count is probed (one lazy parse) and ``length`` set to the per-core
+    columns the round-robin deal needs under ``base.n_cores``; the mapping
+    options ride ``trace_kwargs`` into ingestion."""
+    from repro.traces.formats import count_requests
+    n = count_requests(path, format=format)
+    tkw = [("line_bytes", line_bytes)]
+    if format is not None:
+        tkw.append(("format", format))
+    return base.replace(trace=f"file:{path}", length=-(-n // base.n_cores),
+                        trace_kwargs=tuple(tkw), **kw)
+
+
 def stack_traces(traces: Sequence[Trace]) -> Trace:
     """Stack shape-compatible traces along a new leading batch axis."""
     shapes = {t.bank.shape for t in traces}
@@ -174,6 +190,41 @@ def paper_fig20(base: SweepPoint = SweepPoint(), *,
     return pts
 
 
+SCENARIO_EXTENSIONS = (".trace", ".gem5", ".csv", ".npz")
+
+
+def scenario_pack(base: SweepPoint = SweepPoint(), *,
+                  directory: Optional[str] = None,
+                  line_bytes: int = 64,
+                  alphas: Sequence[float] = (0.25,)) -> List[SweepPoint]:
+    """Checked-in real-trace excerpts as sweep points: every supported trace
+    file under ``directory`` (sorted; Ramulator/gem5 text and canonical
+    ``.npz``) × α, each point sized to its file and labeled with the file
+    stem. The repo ships a pack under ``tests/data/scenarios/`` (gem5- and
+    Ramulator-style excerpts with the paper's banded access structure);
+    point ``directory`` at any folder of traces to make it a suite."""
+    if directory is None:
+        raise ValueError(
+            "scenario_pack needs directory=<folder of trace files> "
+            "(the checked-in pack lives in tests/data/scenarios/)")
+    paths = sorted(
+        os.path.join(directory, f) for f in os.listdir(directory)
+        if f.endswith(SCENARIO_EXTENSIONS))
+    if not paths:
+        raise ValueError(f"no trace files under {directory!r} "
+                         f"(looked for {SCENARIO_EXTENSIONS})")
+    pts: List[SweepPoint] = []
+    for path in paths:
+        stem = os.path.splitext(os.path.basename(path))[0]
+        if path.endswith(".npz"):
+            pt = file_point(path, base, label=stem)
+        else:
+            pt = text_file_point(path, base, line_bytes=line_bytes,
+                                 label=stem)
+        pts.extend(pt.replace(alpha=a) for a in alphas)
+    return pts
+
+
 SUITES: Dict[str, Callable[..., List[SweepPoint]]] = {
     "trace_zoo": trace_zoo,
     "multi_seed": multi_seed,
@@ -181,6 +232,7 @@ SUITES: Dict[str, Callable[..., List[SweepPoint]]] = {
     "paper_fig18": paper_fig18,
     "paper_fig19": paper_fig19,
     "paper_fig20": paper_fig20,
+    "scenario_pack": scenario_pack,
 }
 
 

@@ -188,6 +188,16 @@ def probe(path: str) -> Tuple[int, int]:
         return tuple(int(d) for d in z["bank"].shape)
 
 
+def count_requests(path: str, format: Optional[str] = None) -> int:
+    """Number of requests in a text trace (one lazy parse, nothing
+    materialized) — lets callers size a ``SweepPoint``'s per-core ``length``
+    to a Ramulator/gem5 file the way ``probe`` does for ``.npz``."""
+    fmt = format or _sniff_format(path)
+    if fmt not in PARSERS:
+        raise ValueError(f"unknown trace format {fmt!r}; have {sorted(PARSERS)}")
+    return sum(1 for _ in PARSERS[fmt](path))
+
+
 def load_trace(path: str, *, format: Optional[str] = None, n_cores: int = 8,
                n_banks: int = 8, n_rows: int = 512, line_bytes: int = 1,
                length: Optional[int] = None) -> Trace:

@@ -161,7 +161,8 @@ def _run_chunk_batch(system: CodedMemorySystem, st_b: SimState, trace_b,
 def stream_replay_points(points: Sequence, sources: Sequence,
                          chunk_len: int = DEFAULT_CHUNK_LEN,
                          region_priors: Optional[Sequence] = None,
-                         max_cycles: Optional[int] = None) -> List[SimResult]:
+                         max_cycles: Optional[int] = None,
+                         shard: bool = True) -> List[SimResult]:
     """Chunked batched replay: one shape-compatible batch of sweep points,
     each with its own (arbitrarily long) trace source, as ONE device program.
 
@@ -169,8 +170,18 @@ def stream_replay_points(points: Sequence, sources: Sequence,
     ``grid.partition`` batch — the caller splits mixed sweeps); ``sources``
     align 1:1. Results are bit-identical per point (modulo window series) to
     ``repro.sweep.run_points`` on the materialized traces.
+
+    With more than one device (and ``shard``), the point axis is padded to a
+    device-count multiple with replicas of the last real point — the same
+    masked-dummy scheme as ``repro.sweep.engine._maybe_shard`` — and laid
+    across the 1-D sweep mesh every chunk step. A replica stages the same
+    buffer at the same position as its original, so it starves and quiesces
+    exactly when the original does and never changes the lock-step exits;
+    its rows are stripped from the results.
     """
-    from repro.sweep.engine import stack_tunables, system_for
+    from repro.sweep.engine import (_maybe_shard, _pad_points,
+                                    _replicate_tail, stack_tunables,
+                                    system_for)
     from repro.sweep.grid import batch_geometry_alloc, static_signature
 
     if len(sources) != len(points):
@@ -188,27 +199,37 @@ def stream_replay_points(points: Sequence, sources: Sequence,
         if src.n_cores is not None and src.n_cores != system.n_cores:
             raise ValueError(f"source for point [{b}] has {src.n_cores} "
                              f"cores, the batch has {system.n_cores}")
-    tn_b = stack_tunables(points, system.p.queue_depth)
-    if region_priors is None:
-        st_b = jax.vmap(system.init)(tn_b)
-    else:
-        from repro.sweep.engine import _stack_priors
-        pri_b = _stack_priors(region_priors, len(points))
-        st_b = (jax.vmap(system.init)(tn_b, pri_b) if pri_b is not None
-                else jax.vmap(system.init)(tn_b))
     n_pts = len(points)
+    pad = _pad_points(n_pts) if shard else 0
+    tn_b = stack_tunables(points, system.p.queue_depth)
+    pri_b = None
+    if region_priors is not None:
+        from repro.sweep.engine import _stack_priors
+        pri_b = _stack_priors(region_priors, n_pts)
+    if pad:
+        tn_b = _replicate_tail(tn_b, pad)
+        if pri_b is not None:
+            pri_b = _replicate_tail(pri_b, pad)
+    st_b = (jax.vmap(system.init)(tn_b) if pri_b is None
+            else jax.vmap(system.init)(tn_b, pri_b))
     pos = np.zeros((n_pts, system.n_cores), np.int64)
     bound = chunk_bound(system, chunk_len)
     win_r: List[List[tuple]] = [[] for _ in range(n_pts)]
     win_w: List[List[tuple]] = [[] for _ in range(n_pts)]
     prev = jax.device_get(_snapshot(st_b))
-    prev_cycle = np.asarray(st_b.mem.cycle).copy()
+    prev_cycle = np.asarray(st_b.mem.cycle).copy()[:n_pts]
     while True:
         staged = [src.stage(pos[b], chunk_len) for b, src in enumerate(srcs)]
         trace_b = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *(s[0] for s in staged))
         stream_end_b = jnp.stack([s[1] for s in staged])
+        if pad:
+            trace_b = _replicate_tail(trace_b, pad)
+            stream_end_b = _replicate_tail(stream_end_b, pad)
         st_b = st_b._replace(core_ptr=jnp.zeros_like(st_b.core_ptr))
+        if shard:
+            st_b, trace_b, stream_end_b, tn_b = _maybe_shard(
+                (st_b, trace_b, stream_end_b, tn_b), n_pts + pad)
         st_b = _run_chunk_batch(system, st_b, trace_b, stream_end_b, bound,
                                 tn_b)
         ptr, quiet, cyc, *snap = jax.device_get(
@@ -219,16 +240,17 @@ def stream_replay_points(points: Sequence, sources: Sequence,
             win_r[b].append(wr)
             win_w[b].append(ww)
         prev = snap
-        moved = np.asarray(ptr, np.int64)
+        moved = np.asarray(ptr, np.int64)[:n_pts]
         pos += moved
         if all(src.exhausted(pos[b]) for b, src in enumerate(srcs)) \
                 and quiet.all():
             break
-        if not moved.any() and (np.asarray(cyc) - prev_cycle >= bound).all():
+        cycles = np.asarray(cyc)[:n_pts]
+        if not moved.any() and (cycles - prev_cycle >= bound).all():
             break
-        if max_cycles is not None and int(np.asarray(cyc).max()) >= max_cycles:
+        if max_cycles is not None and int(cycles.max()) >= max_cycles:
             break
-        prev_cycle = np.asarray(cyc).copy()
+        prev_cycle = cycles.copy()
     host = jax.device_get(st_b)
     out = []
     for b in range(n_pts):

@@ -1,0 +1,349 @@
+"""Differential conformance: the NumPy golden model is the ground truth.
+
+The production scheduler (``repro.core``, vectorized jax) is checked against
+``repro.oracle`` — an independent, sequential, pure-NumPy re-derivation of
+the paper's cycle semantics that shares no code (not even the scheme
+tables) with the system under test. Four layers, each asserting **bit
+equality**, not statistical closeness:
+
+1. *tables* — the independently derived code schemes agree;
+2. *plans* — randomized controller states produce identical read/write
+   plans and recode outcomes (hypothesis-driven when installed, seeded
+   NumPy fallback otherwise);
+3. *workloads* — full simulations agree on every state leaf, every
+   statistic, and the per-cycle read datapath;
+4. *streams & masked geometry* — the chunked replay driver and the sweep
+   engine's padded α×r batching agree with the oracle run at each point's
+   exact geometry (at least one masked grid point per scheme).
+
+See docs/testing.md for the contract and how to evolve the scheduler
+without reintroducing a second jax implementation.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_state_matches_oracle, oracle_twin, rand_trace
+
+from repro.core import controller as ctl
+from repro.core.codes import get_tables
+from repro.core.recoding import recode_step as jax_recode_step
+from repro.core.state import make_params, make_tunables
+from repro.core.system import CodedMemorySystem, drain_bound
+from repro import oracle
+from repro.oracle import (OracleMemorySystem, OracleParams, build_read_plan,
+                          build_write_plan, oracle_scheme)
+from repro.oracle import recode_step as oracle_recode_step
+
+SCHEMES = ["scheme_i", "scheme_ii", "scheme_iii", "replication_2", "uncoded"]
+
+_read_jax = jax.jit(ctl.build_read_pattern, static_argnums=0)
+_write_jax = jax.jit(ctl.build_write_pattern, static_argnums=0)
+_recode_jax = jax.jit(jax_recode_step, static_argnums=0)
+
+
+# ------------------------------------------------------------------- tables
+@pytest.mark.parametrize("scheme", SCHEMES + ["replication_4"])
+def test_oracle_tables_match_core(scheme):
+    """The oracle's independently derived scheme tables agree with the
+    production ones — members, physical packing, port ids and per-bank
+    serving options. (Divergence here would invalidate every other layer.)"""
+    t = get_tables(scheme)
+    o = oracle_scheme(scheme, t.n_data)
+    assert o.n_data == t.n_data
+    assert o.n_parities == len(t.scheme.members)
+    assert o.n_ports == t.n_ports
+    assert tuple(o.members) == tuple(t.scheme.members)
+    assert tuple(o.phys) == tuple(t.scheme.phys)
+    for j in range(o.n_parities):
+        assert o.par_port(j) == int(t.par_port[j])
+    for b in range(o.n_data):
+        opts = o.options(b)
+        assert len(opts) == int(t.opt_n[b])
+        for k, (j, sibs) in enumerate(opts):
+            assert j == int(t.opt_parity[b, k])
+            want = tuple(int(s) for s in t.opt_sibs[b, k] if s >= 0)
+            assert sibs == want
+
+
+def test_mode_numbering_contract():
+    """Plan `mode` values are compared elementwise across implementations,
+    so the action numbering is a shared contract, re-derived on both
+    sides."""
+    assert (oracle.MODE_FROM_SYM, oracle.MODE_DIRECT, oracle.MODE_OPT0,
+            oracle.MODE_REDIRECT, oracle.MODE_UNSERVED) == (
+        ctl.MODE_FROM_SYM, ctl.MODE_DIRECT, ctl.MODE_OPT0, ctl.MODE_REDIRECT,
+        ctl.MODE_UNSERVED)
+    assert (oracle.WMODE_DIRECT, oracle.WMODE_PARK0, oracle.WMODE_UNSERVED
+            ) == (ctl.WMODE_DIRECT, ctl.WMODE_PARK0, ctl.WMODE_UNSERVED)
+
+
+# ---------------------------------------------------------- randomized plans
+@functools.lru_cache(maxsize=None)
+def _geom(scheme, n_rows=16, alpha=1.0, r=0.25, rc_cap=8):
+    t = get_tables(scheme)
+    p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=rc_cap)
+    op = OracleParams.derive(n_rows, alpha, r, n_data=t.n_data,
+                             recode_cap=rc_cap)
+    om = OracleMemorySystem(scheme, op, n_cores=4)
+    return t, p, ctl.jtables(t), om
+
+
+def _rand_mem(rng, t, p, n_rows):
+    """Random reachable controller state: freshness points only at real
+    logical parities (a bank with no parities can never be parked), the
+    recode ring fill includes FULL, the region map is a random partial
+    injection."""
+    nb = p.n_data
+    n_logical = len(t.scheme.members)
+    fresh = np.asarray(
+        rng.integers(0, n_logical + 1, (nb, n_rows))
+        * (rng.random((nb, n_rows)) < 0.25), np.int32)
+    pv = rng.random((p.n_parities, p.n_slots * p.region_size)) < 0.7
+    rslot = np.full(p.n_regions, -1, np.int32)
+    slots = rng.permutation(p.n_slots)
+    regs = rng.permutation(p.n_regions)
+    k = rng.integers(0, min(p.n_slots, p.n_regions) + 1)
+    rslot[regs[:k]] = slots[:k]
+    cap = p.recode_cap
+    fill = int(rng.integers(0, cap + 1))
+    rcv = np.zeros(cap, bool)
+    rcv[rng.permutation(cap)[:fill]] = True
+    rcb = np.where(rcv, rng.integers(0, nb, cap), -1).astype(np.int32)
+    rcr = np.where(rcv, rng.integers(0, n_rows, cap), -1).astype(np.int32)
+    parked = rng.integers(0, 3, p.n_regions).astype(np.int32)
+    return fresh, pv, rslot, parked, rcb, rcr, rcv
+
+
+def _rand_cands(rng, p, n_rows, n=24):
+    cb = rng.integers(0, p.n_data, n).astype(np.int32)
+    ci = rng.integers(0, n_rows, n).astype(np.int32)
+    ca = rng.integers(0, 50, n).astype(np.int32)   # age ties likely
+    cv = rng.random(n) < 0.8
+    pb = np.append(rng.random(p.n_ports) < 0.3, False)
+    return cb, ci, ca, cv, pb
+
+
+def _assert_plans_equal(got, want, label):
+    """jax plan pytree vs oracle plan namedtuple, matched by field name."""
+    for name in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(want, name)),
+            err_msg=f"{label}: field {name!r}")
+
+
+def check_plan_conformance(scheme, seed):
+    n_rows = 16
+    t, p, jt, om = _geom(scheme)
+    rng = np.random.default_rng(seed)
+    fresh, pv, rslot, parked, rcb, rcr, rcv = _rand_mem(rng, t, p, n_rows)
+    cb, ci, ca, cv, pb = _rand_cands(rng, p, n_rows)
+    got = _read_jax(p, jt, *map(jnp.asarray,
+                                (cb, ci, ca, cv, pb, fresh, pv, rslot)))
+    want = build_read_plan(om, cb, ci, ca, cv, pb, fresh, pv, rslot)
+    _assert_plans_equal(got, want, f"ReadPlan {scheme} seed={seed}")
+    got = _write_jax(p, jt, *map(jnp.asarray,
+                                 (cb, ci, ca, cv, pb, fresh, pv, rslot,
+                                  parked, rcb, rcr, rcv)))
+    want = build_write_plan(om, cb, ci, ca, cv, pb, fresh, pv, rslot,
+                            parked, rcb, rcr, rcv)
+    _assert_plans_equal(got, want, f"WritePlan {scheme} seed={seed}")
+
+
+def check_recode_conformance(scheme, seed):
+    n_rows = 16
+    t, p, jt, om = _geom(scheme)
+    rng = np.random.default_rng(seed)
+    fresh, pv, rslot, parked, rcb, rcr, rcv = _rand_mem(rng, t, p, n_rows)
+    pb = np.append(rng.random(p.n_ports) < 0.3, False)
+    banks = rng.integers(0, 1 << 20, (p.n_data, n_rows)).astype(np.int32)
+    pdata = rng.integers(0, 1 << 20, pv.shape).astype(np.int32)
+    got = _recode_jax(p, jt, *map(jnp.asarray,
+                                  (pb, fresh, pv, parked, rcb, rcr, rcv,
+                                   rslot, banks, pdata)))
+    want = oracle_recode_step(om, pb, fresh, pv, parked, rcb, rcr, rcv,
+                              rslot, banks, pdata)
+    _assert_plans_equal(got, want, f"RecodeOut {scheme} seed={seed}")
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_plan_conformance_random_states(scheme):
+    """Read/write plans are bit-identical to the golden model across random
+    queue/port/freshness/parity/ring states (incl. full recode rings)."""
+    for seed in range(6):
+        check_plan_conformance(scheme, seed)
+
+
+@pytest.mark.parametrize("scheme", ["scheme_i", "scheme_iii"])
+def test_recode_conformance_random_states(scheme):
+    for seed in range(6):
+        check_recode_conformance(scheme, 1000 + seed)
+
+
+# ------------------------------------------------------------ full workloads
+def _system(scheme, n_rows=32, alpha=0.25, r=0.125, n_cores=4,
+            select_period=16, **kw):
+    t = get_tables(scheme)
+    p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8, **kw)
+    tn = make_tunables(queue_depth=p.queue_depth, select_period=select_period)
+    return CodedMemorySystem(t, p, n_cores=n_cores, tunables=tn)
+
+
+def check_workload_conformance(scheme, alpha, r, seed, write_frac=0.45):
+    sys_ = _system(scheme, alpha=alpha, r=r)
+    om = oracle_twin(sys_)
+    rng = np.random.default_rng(seed)
+    trace = rand_trace(rng, 4, 20, sys_.p.n_data, 32, write_frac=write_frac)
+    n_cycles = 96
+    st, _ = sys_._run(sys_.init(), trace, n_cycles)
+    ost = om.run(trace, n_cycles)
+    assert_state_matches_oracle(
+        st, ost, f"{scheme} α={alpha} r={r} seed={seed}")
+    from repro.traces.stream import strip_windows
+    assert strip_windows(sys_.summarize(st)) == om.result(ost)
+
+
+@pytest.mark.parametrize("scheme,alpha,r", [
+    ("scheme_i", 1.0, 0.25),
+    ("scheme_i", 0.25, 0.125),      # dynamic coding engaged
+    ("uncoded", 1.0, 0.25),
+    ("replication_2", 0.25, 0.125),
+    pytest.param("scheme_ii", 0.5, 0.125, marks=pytest.mark.slow),
+    pytest.param("scheme_iii", 1.0, 0.25, marks=pytest.mark.slow),
+])
+def test_full_workload_conformance(scheme, alpha, r):
+    """End-to-end: every state leaf and every statistic of a full simulation
+    equals the golden model's, write-heavy mixes included."""
+    check_workload_conformance(scheme, alpha, r, seed=7)
+    check_workload_conformance(scheme, alpha, r, seed=8, write_frac=0.7)
+
+
+def test_per_cycle_datapath_conformance():
+    """Cycle-by-cycle CycleOut equality: which reads are served, from where,
+    and the exact values the XOR-decode datapath returns — not just final
+    state. Catches compensating errors that cancel by drain time."""
+    sys_ = _system("scheme_i", alpha=0.25, r=0.125)
+    om = oracle_twin(sys_)
+    rng = np.random.default_rng(3)
+    trace = rand_trace(rng, 4, 16, sys_.p.n_data, 32)
+    st = sys_.init()
+    ost = om.init_state()
+    tr_np = tuple(np.asarray(x) for x in trace)
+    for cyc in range(64):
+        st, out = sys_.cycle_fn(st, trace)
+        oout = om.cycle(ost, tr_np)
+        for name in ("r_served", "r_bank", "r_row", "r_value", "n_served"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out, name)), getattr(oout, name),
+                err_msg=f"cycle {cyc}: {name}")
+    assert_state_matches_oracle(st, ost, "per-cycle run")
+
+
+# ------------------------------------------------------------ chunked streams
+def _split_trace(trace, cuts):
+    """Cut a trace into time-axis chunks at the given offsets."""
+    from repro.core.system import Trace
+    arrs = [np.asarray(x) for x in trace]
+    T = arrs[0].shape[1]
+    prev = 0
+    out = []
+    for c in list(cuts) + [T]:
+        if c > prev:
+            out.append(Trace(*(jnp.asarray(a[:, prev:c]) for a in arrs)))
+            prev = c
+    return out
+
+
+def check_stream_conformance(seed, chunk_len, cuts):
+    from repro.traces import stream_replay, strip_windows
+    sys_ = _system("scheme_i", alpha=0.25, r=0.125, n_cores=3)
+    om = oracle_twin(sys_)
+    rng = np.random.default_rng(seed)
+    tlen = 10
+    trace = rand_trace(rng, 3, tlen, sys_.p.n_data, 32)
+    got = stream_replay(sys_, _split_trace(trace, sorted(cuts)),
+                        chunk_len=chunk_len)
+    ost = om.run(trace, drain_bound(3, tlen), stop_when_quiescent=True)
+    assert strip_windows(got) == om.result(ost), (seed, chunk_len, cuts)
+
+
+@pytest.mark.parametrize("chunk_len,cuts", [
+    (1, ()), (3, (2, 5)), (10, (1, 2, 3, 4, 9)), (14, (5,)),
+])
+def test_chunked_stream_matches_oracle(chunk_len, cuts):
+    """Arbitrary staging lengths × arbitrary source splits: the chunked
+    replay equals the golden model on the concatenated stream — the oracle
+    (which has no notion of chunks) anchors split-invariance."""
+    check_stream_conformance(5, chunk_len, cuts)
+
+
+# --------------------------------------------------------- masked α×r points
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_masked_geometry_grid_matches_oracle(scheme):
+    """An α×r grid runs as ONE padded-geometry program per scheme (the
+    engine's r-mask batching); every point must equal the oracle run at the
+    point's own exact geometry — the masked grid point per scheme the
+    conformance contract requires."""
+    from repro.sweep import SweepPoint, grid, partition, run_points
+    from repro.sweep.workloads import build_trace
+    from repro.traces.stream import strip_windows
+
+    t = get_tables(scheme)
+    base = SweepPoint(scheme=scheme, n_rows=32, n_cores=3,
+                      n_banks=t.n_data, n_data=t.n_data, length=10,
+                      select_period=16, recode_cap=8)
+    pts = grid(base, alpha=(0.25, 0.5), r=(0.125, 0.25))
+    assert len({pt.derived_slots() for pt in pts}) > 1   # genuinely masked
+    assert len(partition(pts)) == 1                      # one padded program
+    got = run_points(pts)
+    for pt, res in zip(pts, got):
+        op = OracleParams.derive(pt.n_rows, pt.alpha, pt.r,
+                                 n_data=pt.n_data, recode_cap=pt.recode_cap,
+                                 select_period=pt.select_period,
+                                 wq_hi=pt.wq_hi, wq_lo=pt.wq_lo,
+                                 queue_depth=pt.queue_depth)
+        om = OracleMemorySystem(scheme, op, n_cores=pt.n_cores)
+        ost = om.run(build_trace(pt), pt.resolved_cycles(),
+                     stop_when_quiescent=True)
+        assert strip_windows(res) == om.result(ost), pt
+
+
+# ----------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(SCHEMES))
+    def test_plan_conformance_hypothesis(seed, scheme):
+        check_plan_conformance(scheme, seed)
+
+    @settings(max_examples=10)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(["scheme_i", "scheme_iii"]))
+    def test_recode_conformance_hypothesis(seed, scheme):
+        check_recode_conformance(scheme, seed)
+
+    @settings(max_examples=6)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from([("scheme_i", 0.25, 0.125), ("scheme_i", 1.0, 0.25),
+                            ("uncoded", 1.0, 0.25)]),
+           st.floats(0.2, 0.8))
+    def test_workload_conformance_hypothesis(seed, cfg, write_frac):
+        scheme, alpha, r = cfg
+        check_workload_conformance(scheme, alpha, r, seed,
+                                   write_frac=write_frac)
+
+    @settings(max_examples=10)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from([1, 2, 3, 5, 7, 10, 13]),
+           st.lists(st.integers(1, 9), max_size=4, unique=True))
+    def test_chunked_stream_conformance_hypothesis(seed, chunk_len, cuts):
+        """Random traces × random source splits × random staging lengths:
+        streamed replay == the golden model, stats and latencies exact."""
+        check_stream_conformance(seed, chunk_len, cuts)

@@ -1,0 +1,123 @@
+"""Checked-in scenario pack: real-format trace excerpts as a sweep suite.
+
+``tests/data/scenarios/`` ships small gem5-/Ramulator-style excerpts with
+the paper's banded access structure (dedup-like persistent bands, vips-like
+column-major bank hammering). The ``scenario_pack`` workloads suite turns a
+folder of such files into sweep points; these tests pin the registration,
+the profiler's reading of each scenario, and a conformance smoke against
+the NumPy golden model per scenario point.
+"""
+import os
+
+import numpy as np
+import pytest
+from conftest import oracle_twin
+
+from repro.sweep import partition, run_points
+from repro.sweep.grid import SweepPoint
+from repro.sweep.workloads import SUITES, build_trace, suite
+from repro.traces import count_requests, profile_trace, stream_file
+from repro.traces.stream import strip_windows
+
+SCEN_DIR = os.path.join(os.path.dirname(__file__), "data", "scenarios")
+SCEN_FILES = sorted(f for f in os.listdir(SCEN_DIR)
+                    if f.endswith((".trace", ".gem5")))
+
+BASE = SweepPoint(scheme="scheme_i", n_rows=64, n_cores=4, n_banks=8,
+                  alpha=0.25, r=0.05, select_period=32, recode_cap=16)
+
+
+def _pack():
+    return suite("scenario_pack", BASE, directory=SCEN_DIR)
+
+
+def test_scenario_pack_registered_and_sized():
+    """The pack is a first-class SUITES entry: every checked-in excerpt
+    becomes a file: point sized to its own request count, stamped with the
+    suite name and labeled with the file stem."""
+    assert "scenario_pack" in SUITES
+    pts = _pack()
+    assert len(pts) == len(SCEN_FILES)
+    assert {pt.label for pt in pts} == {os.path.splitext(f)[0]
+                                        for f in SCEN_FILES}
+    for pt in pts:
+        assert pt.suite == "scenario_pack"
+        path = pt.trace[len("file:"):]
+        n = count_requests(path)
+        assert pt.length == -(-n // pt.n_cores)
+        tr = build_trace(pt)
+        assert tuple(tr.bank.shape) == (pt.n_cores, pt.length)
+        assert int(np.asarray(tr.valid).sum()) == n
+
+
+def test_scenario_pack_needs_directory():
+    with pytest.raises(ValueError, match="directory"):
+        suite("scenario_pack", BASE)
+
+
+@pytest.mark.parametrize("fname", SCEN_FILES)
+def test_scenario_profiler_smoke(fname):
+    """The locality profiler reads each scenario the way Fig 15 reads the
+    PARSEC traces: streamed, with a plausible read/write mix, detectable
+    persistent bands carrying most of the traffic, and in-range ranked
+    region priors."""
+    path = os.path.join(SCEN_DIR, fname)
+    n = count_requests(path)
+    prof = profile_trace(
+        stream_file(path, 32, n_cores=BASE.n_cores, n_banks=BASE.n_banks,
+                    n_rows=BASE.n_rows, line_bytes=64),
+        n_banks=BASE.n_banks, n_rows=BASE.n_rows, window=64)
+    assert prof.n_requests == n
+    assert 0.0 < prof.write_frac < 0.5          # both excerpts are read-heavy
+    bands = prof.bands(min_persistence=0.5, min_weight=0.05)
+    assert bands, "scenario should show persistent address bands"
+    assert sum(b.weight for b in bands) > 0.5   # bands carry the traffic
+    rs, nr, ns = BASE.derived_slots()
+    priors = prof.region_priors(rs, nr, k=max(ns, 1))
+    assert priors.shape == (max(ns, 1),)
+    live = priors[priors >= 0]
+    assert live.size > 0 and live.max() < nr
+    assert live.size == np.unique(live).size    # ranked ids are distinct
+
+
+def test_scenario_conformance_smoke():
+    """Every scenario point replays through the batched engine identically
+    to the golden model — the oracle anchors the checked-in pack, not a
+    second jax implementation."""
+    pts = _pack()
+    results = run_points(pts)
+    for pt, res in zip(pts, results):
+        assert res.completed, pt.label
+        assert res.served_reads + res.served_writes > 0
+        sys_ = _point_system(pt)
+        om = oracle_twin(sys_)
+        ost = om.run(build_trace(pt), pt.resolved_cycles(),
+                     stop_when_quiescent=True)
+        assert strip_windows(res) == om.result(ost), pt.label
+
+
+def _point_system(pt):
+    from repro.core.codes import get_tables
+    from repro.core.state import make_params, make_tunables
+    from repro.core.system import CodedMemorySystem
+    t = get_tables(pt.scheme, n_data=pt.n_data)
+    p = make_params(t, n_rows=pt.n_rows, alpha=pt.alpha, r=pt.r,
+                    queue_depth=pt.queue_depth, recode_cap=pt.recode_cap,
+                    max_syms=pt.max_syms,
+                    encode_rows_per_cycle=pt.encode_rows_per_cycle,
+                    recode_budget=pt.recode_budget, coalesce=pt.coalesce)
+    tn = make_tunables(queue_depth=p.queue_depth,
+                       select_period=pt.select_period,
+                       wq_hi=pt.wq_hi, wq_lo=pt.wq_lo)
+    return CodedMemorySystem(t, p, n_cores=pt.n_cores, tunables=tn)
+
+
+def test_scenario_points_batch_together():
+    """Same memory geometry, different files: the pack's points share one
+    static signature only when their lengths agree — mixed lengths still
+    partition cleanly and reassemble in order."""
+    pts = _pack()
+    batches = partition(pts)
+    assert sum(len(b) for b in batches) == len(pts)
+    lengths = {pt.length for pt in pts}
+    assert len(batches) == len(lengths)

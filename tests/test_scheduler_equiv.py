@@ -1,200 +1,71 @@
-"""Vectorized-vs-reference scheduler equivalence (the PR-2 contract).
+"""Scheduler invariants against the golden model (post reference-retirement).
 
-The compacted-walk builders in ``repro.core.controller`` (and the vectorized
-arbiter / write-commit / recode paths behind ``scheduler="vectorized"``) must
-produce **bit-identical** plans and simulation states vs the sequential
-reference implementations, across random queue states, port-busy vectors,
-freshness/parity configurations and recode-ring fills — including full rings
-(the rc-drop path). Randomized here with seeded NumPy so the suite runs
-without optional deps; a hypothesis-driven variant engages when the package
-is installed (requirements-dev.txt).
+PR 2's second jax implementation (``controller_ref`` and the
+``scheduler="reference"`` branches) is gone; the NumPy golden model in
+``repro.oracle`` is the sole ground truth, and the bulk of the differential
+contract lives in tests/test_conformance.py. This file keeps the targeted
+invariants that used to ride the vectorized-vs-reference harness:
+
+* the padded-geometry contract — an over-allocated (r-masked) program is
+  bit-identical to the exactly allocated one, both anchored to the oracle;
+* recode-drop accounting on a full ring, in both the production builder and
+  the oracle (no silent parity-refresh loss);
+* the ``max_syms`` floor that replaced the old silent fallback: symbol
+  capacity below the port-claim bound is now a configuration error.
 """
-import functools
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from conftest import rand_trace
-
-# this suite IS the deprecated reference scheduler's soak harness: it builds
-# scheduler="reference" systems on purpose, so it opts in to the warning
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+from conftest import oracle_twin, rand_trace
 
 from repro.core import controller as ctl
-from repro.core import controller_ref as ctl_ref
 from repro.core.codes import get_tables
-from repro.core.recoding import recode_step, recode_step_ref
 from repro.core.state import derive_geometry, make_params, make_tunables
 from repro.core.system import CodedMemorySystem
+from repro.oracle import OracleMemorySystem, OracleParams
+from repro.oracle import build_write_plan as oracle_write_plan
 
-SCHEMES = ["scheme_i", "scheme_ii", "scheme_iii", "replication_2", "uncoded"]
-
-_read_vec = jax.jit(ctl.build_read_pattern, static_argnums=0)
-_read_ref = jax.jit(ctl_ref.build_read_pattern_ref, static_argnums=0)
-_write_vec = jax.jit(ctl.build_write_pattern, static_argnums=0)
-_write_ref = jax.jit(ctl_ref.build_write_pattern_ref, static_argnums=0)
-_recode_vec = jax.jit(recode_step, static_argnums=0)
-_recode_ref = jax.jit(recode_step_ref, static_argnums=0)
-
-
-@functools.lru_cache(maxsize=None)
-def _geom(scheme, n_rows=16, alpha=1.0, r=0.25, rc_cap=8):
-    t = get_tables(scheme)
-    p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=rc_cap)
-    return t, p, ctl.jtables(t)
-
-
-def _rand_mem(rng, p, n_rows):
-    """Random freshness / parity-validity / region-map / ring state."""
-    nb = p.n_data
-    fresh = jnp.asarray(
-        rng.integers(0, p.n_parities + 1, (nb, n_rows))
-        * (rng.random((nb, n_rows)) < 0.25), jnp.int32)
-    pv = jnp.asarray(
-        rng.random((p.n_parities, p.n_slots * p.region_size)) < 0.7)
-    rslot = np.full(p.n_regions, -1, np.int32)
-    slots = rng.permutation(p.n_slots)
-    regs = rng.permutation(p.n_regions)
-    k = rng.integers(0, min(p.n_slots, p.n_regions) + 1)
-    rslot[regs[:k]] = slots[:k]
-    cap = p.recode_cap
-    fill = int(rng.integers(0, cap + 1))       # includes a FULL ring
-    rcv = np.zeros(cap, bool)
-    rcv[rng.permutation(cap)[:fill]] = True
-    rcb = np.where(rcv, rng.integers(0, nb, cap), -1).astype(np.int32)
-    rcr = np.where(rcv, rng.integers(0, n_rows, cap), -1).astype(np.int32)
-    parked = jnp.asarray(rng.integers(0, 3, p.n_regions), jnp.int32)
-    return (fresh, pv, jnp.asarray(rslot), parked, jnp.asarray(rcb),
-            jnp.asarray(rcr), jnp.asarray(rcv))
-
-
-def _rand_cands(rng, p, n_rows, n=24):
-    cb = jnp.asarray(rng.integers(0, p.n_data, n), jnp.int32)
-    ci = jnp.asarray(rng.integers(0, n_rows, n), jnp.int32)
-    ca = jnp.asarray(rng.integers(0, 50, n), jnp.int32)   # age ties likely
-    cv = jnp.asarray(rng.random(n) < 0.8)
-    pb = jnp.asarray(np.append(rng.random(p.n_ports) < 0.3, False))
-    return cb, ci, ca, cv, pb
-
-
-def _assert_trees_equal(got, want, label):
-    for name, x, y in zip(want._fields, got, want):
-        np.testing.assert_array_equal(
-            np.asarray(x), np.asarray(y), err_msg=f"{label}: field {name!r}")
-
-
-def _check_one(scheme, seed):
-    n_rows = 16
-    t, p, jt = _geom(scheme)
-    rng = np.random.default_rng(seed)
-    fresh, pv, rslot, parked, rcb, rcr, rcv = _rand_mem(rng, p, n_rows)
-    cb, ci, ca, cv, pb = _rand_cands(rng, p, n_rows)
-    rp = _read_vec(p, jt, cb, ci, ca, cv, pb, fresh, pv, rslot)
-    rr = _read_ref(p, jt, cb, ci, ca, cv, pb, fresh, pv, rslot)
-    _assert_trees_equal(rp, rr, f"ReadPlan {scheme} seed={seed}")
-    wp = _write_vec(p, jt, cb, ci, ca, cv, pb, fresh, pv, rslot,
-                    parked, rcb, rcr, rcv)
-    wr = _write_ref(p, jt, cb, ci, ca, cv, pb, fresh, pv, rslot,
-                    parked, rcb, rcr, rcv)
-    _assert_trees_equal(wp, wr, f"WritePlan {scheme} seed={seed}")
-
-
-@pytest.mark.parametrize("scheme", SCHEMES)
-def test_plan_equivalence_random_states(scheme):
-    """Read and write plans are bit-identical to the reference across random
-    queue/port/freshness/parity/ring states (incl. full recode rings)."""
-    for seed in range(6):
-        _check_one(scheme, seed)
-
-
-@pytest.mark.parametrize("scheme", ["scheme_i", "scheme_iii"])
-def test_recode_step_equivalence_random_states(scheme):
-    n_rows = 16
-    t, p, jt = _geom(scheme)
-    for seed in range(6):
-        rng = np.random.default_rng(1000 + seed)
-        fresh, pv, rslot, parked, rcb, rcr, rcv = _rand_mem(rng, p, n_rows)
-        pb = jnp.asarray(
-            np.append(rng.random(p.n_ports) < 0.3, False))
-        banks = jnp.asarray(
-            rng.integers(0, 1 << 20, (p.n_data, n_rows)), jnp.int32)
-        pdata = jnp.asarray(
-            rng.integers(0, 1 << 20, pv.shape), jnp.int32)
-        a = _recode_vec(p, jt, pb, fresh, pv, parked, rcb, rcr, rcv, rslot,
-                        banks, pdata)
-        b = _recode_ref(p, jt, pb, fresh, pv, parked, rcb, rcr, rcv, rslot,
-                        banks, pdata)
-        _assert_trees_equal(a, b, f"RecodeOut {scheme} seed={seed}")
+_write_jax = jax.jit(ctl.build_write_pattern, static_argnums=0)
 
 
 def test_rc_dropped_counted_when_ring_full():
-    """A direct write to a coded region with a FULL recode ring must count the
-    lost parity-refresh (satellite: no silent drops) — in both builders."""
-    t, p, jt = _geom("scheme_i", rc_cap=4)
+    """A direct write to a coded region with a FULL recode ring must count
+    the lost parity-refresh (no silent drops) — in the production builder
+    and in the golden model alike."""
+    t = get_tables("scheme_i")
+    p = make_params(t, n_rows=16, alpha=1.0, r=0.25, recode_cap=4)
+    jt = ctl.jtables(t)
+    op = OracleParams.derive(16, 1.0, 0.25, recode_cap=4)
+    om = OracleMemorySystem("scheme_i", op, n_cores=4)
     n_rows = 16
-    full = jnp.ones((p.recode_cap,), bool)
-    rcb = jnp.arange(p.recode_cap, dtype=jnp.int32) % p.n_data
-    rcr = jnp.full((p.recode_cap,), 15, jnp.int32)   # no dup with row 0
-    fresh = jnp.zeros((p.n_data, n_rows), jnp.int32)
-    pv = jnp.ones((p.n_parities, p.n_slots * p.region_size), bool)
-    rslot = jnp.arange(p.n_regions, dtype=jnp.int32)
-    args = (jnp.asarray([0], jnp.int32), jnp.asarray([0], jnp.int32),
-            jnp.asarray([0], jnp.int32), jnp.asarray([True]),
-            jnp.zeros((p.n_ports + 1,), bool), fresh, pv, rslot,
-            jnp.zeros((p.n_regions,), jnp.int32), rcb, rcr, full)
-    for fn in (_write_vec, _write_ref):
-        plan = fn(p, jt, *args)
-        assert bool(plan.served[0])                  # the write itself lands
+    full = np.ones(p.recode_cap, bool)
+    rcb = (np.arange(p.recode_cap) % p.n_data).astype(np.int32)
+    rcr = np.full(p.recode_cap, 15, np.int32)    # no dup with row 0
+    fresh = np.zeros((p.n_data, n_rows), np.int32)
+    pv = np.ones((p.n_parities, p.n_slots * p.region_size), bool)
+    rslot = np.arange(p.n_regions, dtype=np.int32)
+    args = (np.asarray([0], np.int32), np.asarray([0], np.int32),
+            np.asarray([0], np.int32), np.asarray([True]),
+            np.zeros(p.n_ports + 1, bool), fresh, pv, rslot,
+            np.zeros(p.n_regions, np.int32), rcb, rcr, full)
+    for plan in (_write_jax(p, jt, *args), oracle_write_plan(om, *args)):
+        assert bool(plan.served[0])                   # the write itself lands
         assert int(plan.mode[0]) == ctl.WMODE_DIRECT  # park needs ring space
-        assert int(plan.n_rc_dropped) == 1           # ...and the refresh is lost
-        assert int(plan.rc_valid.sum()) == p.recode_cap
+        assert int(plan.n_rc_dropped) == 1            # ...the refresh is lost
+        assert int(np.asarray(plan.rc_valid).sum()) == p.recode_cap
 
 
-def _run_state(scheme, scheduler, trace, n_cycles, **kw):
-    t = get_tables(scheme)
-    p = make_params(t, n_rows=32, alpha=kw.pop("alpha", 1.0),
-                    r=kw.pop("r", 0.25), recode_cap=8,
-                    scheduler=scheduler, **kw)
-    sys = CodedMemorySystem(t, p, n_cores=trace.bank.shape[0])
-    st, _ = sys._run(sys.init(), trace, n_cycles)
-    return sys, st
-
-
-@pytest.mark.parametrize("scheme,alpha,r", [
-    ("scheme_i", 1.0, 0.25),
-    ("scheme_i", 0.25, 0.125),     # dynamic coding engaged
-    ("uncoded", 1.0, 0.25),
-    pytest.param("scheme_iii", 1.0, 0.25, marks=pytest.mark.slow),
-])
-def test_end_to_end_state_equivalence(scheme, alpha, r):
-    """Full simulations (arbiter + builders + commit + recode + dynamic) agree
-    on every field of the final state, not just summary stats."""
-    rng = np.random.default_rng(7)
-    trace = rand_trace(rng, 4, 20, min(8, get_tables(scheme).n_data), 32)
-    _, st_v = _run_state(scheme, "vectorized", trace, 96, alpha=alpha, r=r)
-    _, st_r = _run_state(scheme, "reference", trace, 96, alpha=alpha, r=r)
-    leaves_v, treedef_v = jax.tree.flatten(st_v)
-    leaves_r, _ = jax.tree.flatten(st_r)
-    names = [str(k) for k in range(len(leaves_v))]
-    for name, lv, lr in zip(names, leaves_v, leaves_r):
-        np.testing.assert_array_equal(
-            np.asarray(lv), np.asarray(lr),
-            err_msg=f"{scheme} α={alpha} r={r}: leaf {name}")
-
-
-@pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
 @pytest.mark.parametrize("alpha,r", [
     (0.25, 0.125),     # sub-coverage: dynamic coding engaged
     (1.0, 0.125),      # full coverage: static identity map
     (0.05, 0.25),      # α < r: explicit 0-slot uncoded point
 ])
-def test_padded_geometry_matches_exact_allocation(scheduler, alpha, r):
+def test_padded_geometry_matches_exact_allocation(alpha, r):
     """The r-mask contract at the system level: a program whose region and
     parity state is over-allocated (padded region_size / n_regions /
     n_slots) but runs at the point's traced active geometry must produce
-    the same SimResult as the exactly-allocated program — for both
-    schedulers."""
+    the same SimResult as the exactly-allocated program — and both must
+    equal the golden model run at the exact geometry."""
     n_rows = 32
     rng = np.random.default_rng(11)
     t = get_tables("scheme_i")
@@ -202,18 +73,17 @@ def test_padded_geometry_matches_exact_allocation(scheduler, alpha, r):
     rs, nr, ns = derive_geometry(n_rows, alpha, r)
     full = ns >= nr
 
-    exact_p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8,
-                          scheduler=scheduler)
-    exact = CodedMemorySystem(t, exact_p, n_cores=4).run(trace, 96)
+    exact_p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8)
+    exact_sys = CodedMemorySystem(t, exact_p, n_cores=4)
+    exact = exact_sys.run(trace, 96)
 
     # pad every geometry axis past the derived values (a full-coverage
     # allocation must keep n_slots == n_regions to stay full-coverage)
     pad_nr = nr + 3
     pad_ns = pad_nr if full else ns + 2
     padded_p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8,
-                           scheduler=scheduler, region_size_alloc=rs + 5,
-                           n_regions_alloc=pad_nr, n_slots_alloc=pad_ns,
-                           traced_geometry=True)
+                           region_size_alloc=rs + 5, n_regions_alloc=pad_nr,
+                           n_slots_alloc=pad_ns, traced_geometry=True)
     tn = make_tunables(queue_depth=padded_p.queue_depth,
                        n_slots_active=ns, region_size_active=rs,
                        n_regions_active=nr)
@@ -221,16 +91,16 @@ def test_padded_geometry_matches_exact_allocation(scheduler, alpha, r):
                                tunables=tn).run(trace, 96)
     assert padded == exact
 
+    om = oracle_twin(exact_sys)
+    ost = om.run(trace, 96)
+    assert exact == om.result(ost)
 
-# ---------------------------------------------------------------- hypothesis
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:                                       # pragma: no cover
-    HAVE_HYPOTHESIS = False
 
-if HAVE_HYPOTHESIS:
-    @settings(max_examples=25, deadline=None)
-    @given(st.integers(0, 2**31 - 1), st.sampled_from(SCHEMES))
-    def test_plan_equivalence_hypothesis(seed, scheme):
-        _check_one(scheme, seed)
+def test_max_syms_floor_enforced():
+    """The old implementation silently fell back to a sequential path when
+    ``max_syms < n_ports``; with that path retired, the configuration is
+    rejected outright (the symbol bit-matrix contract needs the bound)."""
+    t = get_tables("scheme_i")
+    with pytest.raises(ValueError, match="max_syms"):
+        make_params(t, n_rows=32, alpha=1.0, r=0.25, max_syms=t.n_ports - 1)
+    make_params(t, n_rows=32, alpha=1.0, r=0.25, max_syms=t.n_ports)

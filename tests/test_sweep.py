@@ -26,7 +26,7 @@ def _looped(pt: SweepPoint):
 @pytest.mark.parametrize("scheme", [
     "uncoded", "scheme_i",
     # schemes II/III re-run the same engine path with bigger tables; their
-    # plan/e2e equivalence is already covered fast by test_scheduler_equiv —
+    # plan/e2e conformance is already covered fast by test_conformance —
     # keep the looped-vs-batched recheck for the nightly/slow tier
     pytest.param("scheme_ii", marks=pytest.mark.slow),
     pytest.param("scheme_iii", marks=pytest.mark.slow),
@@ -80,18 +80,16 @@ def test_alpha_axis_shares_one_compiled_shape():
             assert got == _looped(pt), pt
 
 
-@pytest.mark.filterwarnings("ignore::DeprecationWarning")  # reference soak
-@pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
-def test_r_axis_shares_one_compiled_shape(scheduler, sweep_compile_count):
+def test_r_axis_shares_one_compiled_shape(sweep_compile_count):
     """The r-mask equivalence contract: an α×r grid (all sub-coverage) is
     ONE partition — region/parity state allocated at the group-max geometry,
     each point's own (region_size, n_regions, n_slots) traced — and every
-    point is bit-identical to today's per-r exactly-allocated compiled
-    program (the looped path), for both schedulers."""
+    point is bit-identical to the per-r exactly-allocated compiled program
+    (the looped path). The oracle-anchored variant of this grid lives in
+    tests/test_conformance.py::test_masked_geometry_grid_matches_oracle."""
     from repro.sweep.engine import clear_caches
     clear_caches()
-    pts = grid(BASE.replace(scheduler=scheduler),
-               alpha=(0.25, 0.5), r=(0.125, 0.25))
+    pts = grid(BASE, alpha=(0.25, 0.5), r=(0.125, 0.25))
     assert len({pt.derived_slots() for pt in pts}) == 4   # 4 distinct geoms
     assert len(partition(pts)) == 1
     before = sweep_compile_count()
@@ -140,15 +138,6 @@ def test_fig20_alpha_ramp_below_r():
                        r=BASE.r, n_cycles=BASE.resolved_cycles(),
                        select_period=BASE.select_period)
     assert ramp[0.05] == tiny
-
-
-@pytest.mark.filterwarnings("ignore::DeprecationWarning")  # reference soak
-def test_scheduler_axis_is_static():
-    """reference vs vectorized schedulers compile separately but agree."""
-    pts = [BASE, BASE.replace(scheduler="reference")]
-    assert len(partition(pts)) == 2
-    a, b = run_points(pts)
-    assert a == b
 
 
 def test_partition_groups_only_shape_compatible_points():

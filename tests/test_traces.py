@@ -20,29 +20,20 @@ from repro.traces import (TraceSource, chunk_iter, load_npz, load_trace,
                           strip_windows)
 from repro.traces.formats import iter_gem5, iter_ramulator
 
-# the reference scheduler is deprecated (kept as the soak oracle); the
-# streamed-vs-single-shot equivalence here opts in explicitly
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
-
 DATA = os.path.join(os.path.dirname(__file__), "data")
 
 N_ROWS, N_CORES, TLEN = 32, 3, 10
 
 
-def _system(scheduler="vectorized", alpha=0.25, r=0.125):
+def _system(alpha=0.25, r=0.125):
     t = get_tables("scheme_i")
-    p = make_params(t, n_rows=N_ROWS, alpha=alpha, r=r, recode_cap=8,
-                    scheduler=scheduler)
+    p = make_params(t, n_rows=N_ROWS, alpha=alpha, r=r, recode_cap=8)
     return CodedMemorySystem(t, p, n_cores=N_CORES,
                              tunables=make_tunables(select_period=8))
 
 
-import warnings as _warnings
-
-with _warnings.catch_warnings():
-    # module-scope construction happens before the pytestmark filter applies
-    _warnings.simplefilter("ignore", DeprecationWarning)
-    _SYSTEMS = {s: _system(s) for s in ("vectorized", "reference")}
+# one shared system (= one jit cache) for the whole module
+_SYS = _system()
 
 
 def _split(trace: Trace, cuts):
@@ -57,12 +48,11 @@ def _split(trace: Trace, cuts):
 
 
 # ------------------------------------------------------------ chunked replay
-@pytest.mark.parametrize("scheduler", ["vectorized", "reference"])
 @pytest.mark.parametrize("chunk_len", [1, 3, 10, 14])
-def test_stream_replay_bit_identical(scheduler, chunk_len):
+def test_stream_replay_bit_identical(chunk_len):
     """Any staging chunk length — including 1 and tails longer than the
     trace — replays bit-identically to single-shot run()."""
-    sys_ = _SYSTEMS[scheduler]
+    sys_ = _SYS
     rng = np.random.default_rng(5)
     trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
     single = sys_.run(trace, drain_bound(N_CORES, TLEN))
@@ -73,7 +63,7 @@ def test_stream_replay_bit_identical(scheduler, chunk_len):
 def test_stream_replay_source_splits_invisible():
     """The rolling-window source normalizes arbitrary ingest chunking: the
     same staging length over differently-split sources is identical."""
-    sys_ = _SYSTEMS["vectorized"]
+    sys_ = _SYS
     rng = np.random.default_rng(9)
     trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
     single = sys_.run(trace, drain_bound(N_CORES, TLEN))
@@ -84,7 +74,7 @@ def test_stream_replay_source_splits_invisible():
 
 def test_stream_replay_window_stats_account_for_all_latency():
     """The per-window latency series partitions the scalar sums exactly."""
-    sys_ = _SYSTEMS["vectorized"]
+    sys_ = _SYS
     rng = np.random.default_rng(3)
     trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
     res = stream_replay(sys_, trace, chunk_len=3)
@@ -111,6 +101,47 @@ def test_stream_replay_batched_matches_engine():
     assert [strip_windows(g) for g in got] == want
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(600)   # two full compiles on a forced 4-device host
+def test_stream_points_padded_sharding_multidevice_subprocess():
+    """Multi-device chunked replay: a streamed batch whose size does NOT
+    divide the device count is padded with masked replica points, sharded
+    across a forced 4-device host every chunk step, and returns the same
+    per-point results as the unsharded single-shot engine (replicas
+    stripped)."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+assert len(jax.devices()) == 4
+from repro.sweep import SweepPoint, grid, run_points
+from repro.sweep.engine import clear_caches
+from repro.traces import stream_replay_points, strip_windows
+
+BASE = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=32,
+                  n_cores=3, n_banks=8, length=10, select_period=16)
+pts = grid(BASE, alpha=(0.25, 0.5), r=(0.125, 0.25), seed=(0, 1))[:6]
+assert len(pts) % 4 != 0          # forces the pad-to-device-multiple path
+from repro.sweep.workloads import build_trace
+traces = [build_trace(pt) for pt in pts]
+streamed = stream_replay_points(pts, traces, chunk_len=4, shard=True)
+clear_caches()                    # fresh program, no sharding
+want = run_points(pts, traces=traces, shard=False)
+assert len(streamed) == len(pts)
+for i, (a, b) in enumerate(zip(streamed, want)):
+    assert strip_windows(a) == b, (i, a, b)
+print("STREAM_SHARDED_OK")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "STREAM_SHARDED_OK" in out.stdout, out.stdout + out.stderr
+
+
 # -------------------------------------------------------- hypothesis variant
 try:
     from hypothesis import given, settings, strategies as st
@@ -122,13 +153,12 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 2**31 - 1),
            st.sampled_from([1, 2, 3, 5, 7, 10, 13]),
-           st.sampled_from(["vectorized", "reference"]),
            st.lists(st.integers(1, TLEN - 1), max_size=4, unique=True))
-    def test_stream_replay_random_splits_hypothesis(seed, chunk_len,
-                                                    scheduler, cuts):
-        """Random traces × random source splits × random staging lengths ×
-        both schedulers: streamed == single-shot, bit for bit."""
-        sys_ = _SYSTEMS[scheduler]
+    def test_stream_replay_random_splits_hypothesis(seed, chunk_len, cuts):
+        """Random traces × random source splits × random staging lengths:
+        streamed == single-shot, bit for bit (the oracle-anchored variant
+        lives in tests/test_conformance.py)."""
+        sys_ = _SYS
         rng = np.random.default_rng(seed)
         trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
         single = sys_.run(trace, drain_bound(N_CORES, TLEN))
@@ -357,6 +387,75 @@ def test_profiler_streaming_equals_one_shot():
     np.testing.assert_allclose(one.bank_window_var, chunked.bank_window_var)
 
 
+def test_profiler_empty_trace():
+    """A trace with no valid requests: zero counts, no windows, no bands,
+    all-padding priors, and a defined (zero) Fano factor — not NaNs."""
+    rng = np.random.default_rng(0)
+    trace = rand_trace(rng, 2, 8, 4, 16)._replace(
+        valid=jnp.zeros((2, 8), bool), is_write=jnp.zeros((2, 8), bool))
+    prof = profile_trace(trace, n_banks=4, n_rows=16, window=4)
+    assert prof.n_requests == prof.reads == prof.writes == 0
+    assert prof.n_windows == 0
+    assert prof.bank_hist.sum() == 0 and prof.row_hist.sum() == 0
+    assert prof.bands() == []
+    assert prof.write_frac == 0.0
+    assert prof.burstiness == 0.0
+    np.testing.assert_array_equal(prof.region_priors(4, 4, k=3),
+                                  [-1, -1, -1])
+
+
+def test_profiler_single_bank_trace():
+    """Every request on one bank: the histogram concentrates, the hot bank's
+    windowed counts are constant (zero variance ⇒ Fano 0 per bank), and
+    band detection still sees the row band."""
+    rng = np.random.default_rng(1)
+    n_banks, n_rows, T = 4, 64, 32
+    trace = rand_trace(rng, 2, T, 1, n_rows)._replace(
+        bank=jnp.full((2, T), 2, jnp.int32),
+        row=jnp.asarray(rng.integers(8, 16, (2, T)), jnp.int32),
+        valid=jnp.ones((2, T), bool))
+    prof = profile_trace(trace, n_banks=n_banks, n_rows=n_rows, window=16)
+    assert prof.bank_hist[2] == prof.n_requests == 2 * T
+    assert prof.bank_hist.sum() == prof.bank_hist[2]
+    # full 16-request windows always hold 16 bank-2 requests: variance 0
+    assert prof.bank_window_var[2] == 0.0
+    assert prof.burstiness == 0.0
+    bands = prof.bands(min_weight=0.5)
+    assert len(bands) == 1
+    assert bands[0].row_lo >= 8 - prof.bin_rows
+    assert bands[0].row_hi <= 15 + prof.bin_rows
+
+
+def test_profiler_window_larger_than_trace():
+    """A window that never fills leaves the presence statistics empty —
+    band detection must report no bands rather than divide by zero, while
+    the aggregate histograms still accumulate."""
+    rng = np.random.default_rng(2)
+    trace = rand_trace(rng, 2, 10, 4, 32)
+    prof = profile_trace(trace, n_banks=4, n_rows=32, window=512)
+    assert prof.n_windows == 0
+    assert prof.n_requests > 0
+    assert prof.row_hist.sum() == prof.n_requests
+    assert prof.bands() == []
+    assert prof.burstiness == 0.0
+    # priors need no windows — they rank the aggregate row histogram
+    pri = prof.region_priors(8, 4)
+    assert pri.size > 0
+
+
+def test_profiler_all_writes_mix():
+    """A pure-write stream: the mix saturates at 1.0 and the read counter
+    stays zero (windowing, bands and priors are operation-agnostic)."""
+    rng = np.random.default_rng(3)
+    T = 24
+    trace = rand_trace(rng, 2, T, 4, 32)._replace(
+        is_write=jnp.ones((2, T), bool), valid=jnp.ones((2, T), bool))
+    prof = profile_trace(trace, n_banks=4, n_rows=32, window=8)
+    assert prof.write_frac == 1.0
+    assert prof.reads == 0 and prof.writes == prof.n_requests == 2 * T
+    assert prof.n_windows == (2 * T) // 8
+
+
 def test_region_priors_rank_hot_regions():
     spec = TraceSpec(n_cores=8, length=300, n_banks=8, n_rows=256, seed=2)
     trace = banded_trace(spec, n_bands=2)
@@ -422,24 +521,11 @@ def test_drain_bound_single_helper():
     rng = np.random.default_rng(0)
     trace = rand_trace(rng, 3, 10, 8, 32)
     assert default_n_cycles(trace) == drain_bound(3, 10)
-    sys_ = _SYSTEMS["vectorized"]
+    sys_ = _SYS
     backlog = 2 * sys_.p.n_data * sys_.p.queue_depth
     assert chunk_bound(sys_, 16) == drain_bound(sys_.n_cores, 16,
                                                 backlog=backlog)
     assert drain_bound(3, 10, backlog=5) > drain_bound(3, 10)
-
-
-# --------------------------------------------------------------- deprecation
-def test_reference_scheduler_deprecation_warning():
-    """scheduler='reference' survives only as the soak oracle; selecting it
-    must say so loudly (ROADMAP retirement path)."""
-    t = get_tables("scheme_i")
-    with pytest.warns(DeprecationWarning, match="soak"):
-        make_params(t, n_rows=32, alpha=1.0, r=0.25, scheduler="reference")
-    import warnings as w
-    with w.catch_warnings():
-        w.simplefilter("error")
-        make_params(t, n_rows=32, alpha=1.0, r=0.25)   # default: no warning
 
 
 # ------------------------------------------------------------- slow soak
