@@ -1,42 +1,122 @@
-"""Shared benchmark utilities: result table formatting + JSON artifacts."""
+"""Shared benchmark utilities: result table formatting + JSON artifacts.
+
+Artifact contract (docs/observability.md):
+
+* every blob carries a ``manifest`` block (``repro.obs.runlog``): git SHA,
+  device topology, versions, argv — ``scripts/check_bench_manifests.py``
+  fails CI when a root ``BENCH_*.json`` lacks one;
+* root-level ``BENCH_*.json`` files keep a ``history`` list — one
+  ``{ts, git_sha, headline}`` entry per emitting run, appended (never
+  overwritten) so the perf trajectory survives re-runs on one commit tree;
+* ``profile_trace`` wraps a benchmark's warm region in
+  ``jax.profiler.trace`` for the ``--profile`` flags.
+"""
 from __future__ import annotations
 
+import contextlib
 import json
 import os
+import sys
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 ART_DIR = os.path.join(REPO_ROOT, "experiments", "bench")
+PROFILE_DIR = os.path.join(REPO_ROOT, "experiments", "profiles")
+HISTORY_CAP = 500   # root history entries kept (newest last)
 
 
-def emit(name: str, rows: List[Dict[str, Any]], meta: Dict[str, Any] = None,
-         root: bool = False):
-    """Write ``experiments/bench/<name>.json``; with ``root=True`` also a
-    repo-root copy (the per-commit perf trajectory collects root-level
-    ``BENCH_*.json`` files — without the copy it records nothing)."""
+def _runlog():
+    """Lazy ``repro.obs.runlog`` import — benchmarks run as scripts, so
+    ``src`` may not be on the path yet."""
+    try:
+        from repro.obs import runlog
+    except ImportError:
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+        from repro.obs import runlog
+    return runlog
+
+
+def emit(name: str, rows: List[Dict[str, Any]],
+         meta: Optional[Dict[str, Any]] = None, root: bool = False,
+         headline: Optional[Dict[str, Any]] = None,
+         timings: Optional[Dict[str, float]] = None):
+    """Write ``experiments/bench/<name>.json``; with ``root=True`` also
+    merge into the repo-root copy (the per-commit perf trajectory collects
+    root-level ``BENCH_*.json`` files — without it it records nothing).
+
+    ``headline`` is the one-line summary recorded in the root ``history``
+    (e.g. ``{"warm_tput": 1.2e6}``); ``timings`` lands in the manifest."""
     os.makedirs(ART_DIR, exist_ok=True)
-    blob = {"name": name, "meta": meta or {}, "rows": rows}
+    manifest = _runlog().run_manifest(timings=timings)
+    blob = {"name": name, "meta": meta or {}, "manifest": manifest,
+            "headline": headline or {}, "rows": rows}
     path = os.path.join(ART_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(blob, f, indent=1, default=float)
     if root:
-        with open(os.path.join(REPO_ROOT, f"{name}.json"), "w") as f:
-            json.dump(blob, f, indent=1, default=float)
+        _write_root(name, blob)
+    return path
+
+
+def _load_history(path: str) -> List[Dict[str, Any]]:
+    try:
+        with open(path) as f:
+            hist = json.load(f).get("history", [])
+        return hist if isinstance(hist, list) else []
+    except (OSError, ValueError):
+        return []
+
+
+def _write_root(name: str, blob: Dict[str, Any]) -> str:
+    """Replace the root blob's rows but APPEND to its run history.
+
+    The history entry is keyed by the manifest's ``created_unix`` so
+    mirroring an already-rooted blob (``mirror_bench_to_root`` after an
+    ``emit(root=True)``) dedups instead of double-counting the run."""
+    path = os.path.join(REPO_ROOT, f"{name}.json")
+    history = _load_history(path)
+    man = blob.get("manifest", {})
+    entry = {"ts": man.get("created_unix"), "git_sha": man.get("git_sha"),
+             "headline": blob.get("headline") or {}}
+    if not any(h.get("ts") == entry["ts"] for h in history):
+        history.append(entry)
+    history = history[-HISTORY_CAP:]
+    with open(path, "w") as f:
+        json.dump({**blob, "history": history}, f, indent=1, default=float)
     return path
 
 
 def mirror_bench_to_root():
-    """Copy every ``experiments/bench/BENCH_*.json`` to the repo root (the
-    trajectory contract: perf artifacts live at the root, named BENCH_*)."""
+    """Merge every ``experiments/bench/BENCH_*.json`` into the repo root
+    (the trajectory contract: perf artifacts live at the root, named
+    BENCH_*). Root ``history`` is preserved and appended to, never
+    clobbered — this used to be a plain copy, which erased it."""
     import glob
-    import shutil
-    copied = []
+    merged = []
     for src in sorted(glob.glob(os.path.join(ART_DIR, "BENCH_*.json"))):
-        dst = os.path.join(REPO_ROOT, os.path.basename(src))
-        shutil.copyfile(src, dst)
-        copied.append(dst)
-    return copied
+        with open(src) as f:
+            blob = json.load(f)
+        name = os.path.splitext(os.path.basename(src))[0]
+        merged.append(_write_root(name, blob))
+    return merged
+
+
+@contextlib.contextmanager
+def profile_trace(name: str, enabled: bool = True):
+    """Wrap a benchmark region in ``jax.profiler.trace`` when ``enabled``.
+
+    Yields the profile directory (``experiments/profiles/<name>-<stamp>``)
+    or None when disabled — so call sites stay one ``with`` either way."""
+    if not enabled:
+        yield None
+        return
+    import jax
+    out = os.path.join(PROFILE_DIR, f"{name}-{time.strftime('%Y%m%d-%H%M%S')}")
+    os.makedirs(out, exist_ok=True)
+    with jax.profiler.trace(out):
+        yield out
+    print(f"profile written to {out}")
 
 
 def table(rows: List[Dict[str, Any]], cols: List[str]) -> str:

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""CI gate: every root ``BENCH_*.json`` must carry a run manifest.
+
+The perf-trajectory files at the repo root are only useful if each blob
+says what produced it (commit, devices, versions — the ``manifest`` block
+``benchmarks/common.emit`` attaches, schema in docs/observability.md).
+This check fails when any root ``BENCH_*.json`` is missing the block or
+the block lacks a ``git_sha``, so a regression in ``emit`` (or a
+hand-edited artifact) cannot silently strip provenance from the trajectory.
+
+Usage: ``python scripts/check_bench_manifests.py [repo_root]`` — exits 1
+listing offenders. Importable: ``check(repo_root) -> list[str]``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def check(repo_root: str = REPO_ROOT) -> List[str]:
+    """Return one human-readable problem per offending root BENCH blob."""
+    problems: List[str] = []
+    paths = sorted(glob.glob(os.path.join(repo_root, "BENCH_*.json")))
+    if not paths:
+        return [f"no BENCH_*.json files at {repo_root} (trajectory empty?)"]
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError) as e:
+            problems.append(f"{name}: unreadable ({e})")
+            continue
+        man = blob.get("manifest")
+        if not isinstance(man, dict):
+            problems.append(f"{name}: missing 'manifest' block "
+                            "(benchmarks/common.emit attaches it)")
+        elif not man.get("git_sha"):
+            problems.append(f"{name}: manifest has no 'git_sha'")
+        if not isinstance(blob.get("history"), list):
+            problems.append(f"{name}: missing 'history' list "
+                            "(root blobs append one entry per run)")
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = argv[0] if argv else REPO_ROOT
+    problems = check(root)
+    if problems:
+        print("bench manifest check FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n = len(glob.glob(os.path.join(root, "BENCH_*.json")))
+    print(f"bench manifest check passed ({n} root BENCH blobs)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

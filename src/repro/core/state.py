@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codes import CodeTables
+from repro.obs.planes import Telemetry, init_telemetry
 
 NOP_PORT_PAD = 1  # port_busy has one trailing dummy slot used as a no-op sink
 
@@ -76,6 +77,14 @@ class MemParams(NamedTuple):
                                      # and indexing stays static (no traced
                                      # divisions — the exact pre-masking
                                      # program)
+    telemetry: bool = False          # True: carry repro.obs.planes metric
+                                     # planes through the cycle loop (stall/
+                                     # wait attribution, provenance, queue
+                                     # HWMs, latency histograms). False: the
+                                     # ``tele`` leaf is None and the traced
+                                     # program is bit-identical to one built
+                                     # before the flag existed (same gating
+                                     # style as ``traced_geometry``)
 
 
 class TunableParams(NamedTuple):
@@ -197,6 +206,7 @@ def make_params(
     region_size_alloc: Optional[int] = None,
     n_regions_alloc: Optional[int] = None,
     traced_geometry: bool = False,
+    telemetry: bool = False,
 ) -> MemParams:
     if max_syms < tables.n_ports:
         # the builders' O(1) symbol bit-matrix has true set semantics; the
@@ -255,6 +265,7 @@ def make_params(
         coalesce=coalesce if tables.n_parities > 0 else False,
         encode_rows_per_cycle=encode_rows_per_cycle,
         traced_geometry=traced_geometry,
+        telemetry=telemetry,
     )
 
 
@@ -303,6 +314,12 @@ class MemState(NamedTuple):
     write_latency_sum: jnp.ndarray  # (2,) uint32 wide accumulator
     stall_cycles: jnp.ndarray   # (2,) uint32 wide (core-stall events)
     rc_dropped: jnp.ndarray     # () int32 (recode requests lost to a full ring)
+    # opt-in telemetry planes (repro.obs): None unless MemParams.telemetry —
+    # a None leaf is an empty pytree node, so the telemetry-off carry has
+    # exactly the pre-telemetry tree structure and the compiled program is
+    # unchanged. MUST stay the last field (older pickled/positional states
+    # keep their layout).
+    tele: Optional[Telemetry] = None
 
 
 def _concrete_int(x) -> Optional[int]:
@@ -314,7 +331,7 @@ def _concrete_int(x) -> Optional[int]:
 
 
 def init_state(p: MemParams, tn: Optional[TunableParams] = None,
-               region_priors=None) -> MemState:
+               region_priors=None, n_cores: int = 8) -> MemState:
     """Initial controller state.
 
     With ``tn`` (the batched-sweep path), the point's *active* geometry
@@ -329,6 +346,9 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None,
     entries are pre-mapped into parity slots with their parities already
     valid (all banks are zero at init, so the all-zero parity rows are the
     true XOR of their members). See ``repro.core.dynamic.priors_layout``.
+
+    ``n_cores`` only sizes the telemetry provenance planes; the
+    telemetry-off state does not depend on it.
     """
     if tn is not None and not p.traced_geometry:
         # a non-traced system ignores the geometry actives entirely — reject
@@ -408,4 +428,6 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None,
         write_latency_sum=wide_zero(),
         stall_cycles=wide_zero(),
         rc_dropped=z,
+        tele=(init_telemetry(p.n_data, n_cores, p.queue_depth)
+              if p.telemetry else None),
     )

@@ -36,6 +36,7 @@ from repro.core.recoding import recode_step
 from repro.core.state import (MemParams, MemState, TunableParams,
                               active_geometry, init_state, make_tunables,
                               wide_add, wide_total)
+from repro.obs import planes as obs
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -181,7 +182,8 @@ class CodedMemorySystem:
         ``repro.traces.profiler``) pre-mapped into parity slots so the
         dynamic coding unit starts warm instead of cold."""
         return SimState(
-            mem=init_state(self.p, tn, region_priors=region_priors),
+            mem=init_state(self.p, tn, region_priors=region_priors,
+                           n_cores=self.n_cores),
             core_ptr=jnp.zeros((self.n_cores,), jnp.int32),
             done_cycle=jnp.int32(-1),
         )
@@ -262,10 +264,27 @@ class CodedMemorySystem:
         stalls = wide_add(m.stall_cycles, jnp.sum(v & full))
         ptr = pos + (in_range & (push | ~v)).astype(jnp.int32)
 
+        tele = m.tele
+        if p.telemetry:
+            # the full-queue rejection above is the ONLY core-stall source,
+            # so this per-bank per-cause plane sums exactly to stall_cycles
+            stall = v & full
+            stall_cause = tele.stall_cause.at[
+                jnp.where(stall, b, oob), isw.astype(jnp.int32)
+            ].add(1, mode="drop")
+            # provenance carriers: the core id lands in the SAME slot the
+            # request scatter above picked, so the serve step can attribute
+            # each served candidate to its issuing core
+            car32 = car.astype(jnp.int32)
+            tele = tele._replace(
+                stall_cause=stall_cause,
+                rq_core=tele.rq_core.at[br, slot_r].set(car32, mode="drop"),
+                wq_core=tele.wq_core.at[bw, slot_w].set(car32, mode="drop"),
+            )
         mem = m._replace(
             rq_row=rq_row, rq_age=rq_age, rq_valid=rq_valid, wq_row=wq_row,
             wq_age=wq_age, wq_valid=wq_valid, wq_data=wq_data,
-            access_count=access_count, stall_cycles=stalls,
+            access_count=access_count, stall_cycles=stalls, tele=tele,
         )
         return st._replace(mem=mem, core_ptr=ptr)
 
@@ -357,6 +376,15 @@ class CodedMemorySystem:
         was_done = st.done_cycle >= 0
         st = self._arbiter(st, trace, rs_a, stream_end)
         m = st.mem
+        if p.telemetry:
+            # post-arbiter occupancy is the per-cycle maximum (slots only
+            # free up in the serve step below)
+            m = m._replace(tele=m.tele._replace(
+                rq_hwm=jnp.maximum(m.tele.rq_hwm,
+                                   jnp.sum(m.rq_valid, axis=1, dtype=jnp.int32)),
+                wq_hwm=jnp.maximum(m.tele.wq_hwm,
+                                   jnp.sum(m.wq_valid, axis=1, dtype=jnp.int32)),
+            ))
         n_cand = p.n_data * p.queue_depth
         port_busy0 = jnp.zeros((p.n_ports + 1,), bool)
         bank_ids = jnp.repeat(jnp.arange(p.n_data, dtype=jnp.int32), p.queue_depth)
@@ -379,11 +407,36 @@ class CodedMemorySystem:
             )
             vals = self._read_values(m, plan, cb, ci_, rs_a)
             lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
+            tele = m.tele
+            if p.telemetry:
+                # provenance class from the plan's action id; latency
+                # histogram over served candidates; unserved-but-valid
+                # candidates count a read-conflict wait cycle on their bank.
+                # (With ``active=False`` — the masked off-duty branch — cv
+                # and plan.served are all False, so every scatter here drops
+                # and the merged ``pick`` takes the other branch's updates.)
+                cls = jnp.where(
+                    plan.mode == ctl.MODE_DIRECT, 0,
+                    jnp.where(plan.mode == ctl.MODE_FROM_SYM, 1,
+                              jnp.where(plan.mode >= ctl.MODE_REDIRECT, 3, 2)))
+                core = jnp.where(plan.served, tele.rq_core.reshape(-1),
+                                 jnp.int32(self.n_cores))
+                tele = tele._replace(
+                    read_mode_core=tele.read_mode_core.at[core, cls].add(
+                        1, mode="drop"),
+                    lat_hist_read=tele.lat_hist_read.at[
+                        jnp.where(plan.served, obs.lat_bin(m.cycle - ca),
+                                  obs.HIST_BINS)].add(1, mode="drop"),
+                    wait_cause=tele.wait_cause.at[
+                        jnp.where(cv & ~plan.served, cb, jnp.int32(p.n_data)),
+                        obs.WAIT_READ].add(1, mode="drop"),
+                )
             m = m._replace(
                 rq_valid=m.rq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
                 served_reads=m.served_reads + plan.n_served,
                 degraded_reads=m.degraded_reads + plan.n_degraded,
                 read_latency_sum=wide_add(m.read_latency_sum, lat),
+                tele=tele,
             )
             out = CycleOut(plan.served, cb, ci_, vals, plan.n_served)
             return m, plan.port_busy, out
@@ -402,7 +455,23 @@ class CodedMemorySystem:
             banks_data, parity_data, golden = self._commit_writes(
                 m, plan, cb, ci_, ca, cv, cd, rs_a)
             lat = jnp.sum(jnp.where(plan.served, m.cycle - ca, 0))
+            tele = m.tele
+            if p.telemetry:
+                cls = (plan.mode >= ctl.WMODE_PARK0).astype(jnp.int32)
+                core = jnp.where(plan.served, tele.wq_core.reshape(-1),
+                                 jnp.int32(self.n_cores))
+                tele = tele._replace(
+                    write_mode_core=tele.write_mode_core.at[core, cls].add(
+                        1, mode="drop"),
+                    lat_hist_write=tele.lat_hist_write.at[
+                        jnp.where(plan.served, obs.lat_bin(m.cycle - ca),
+                                  obs.HIST_BINS)].add(1, mode="drop"),
+                    wait_cause=tele.wait_cause.at[
+                        jnp.where(cv & ~plan.served, cb, jnp.int32(p.n_data)),
+                        obs.WAIT_WRITE].add(1, mode="drop"),
+                )
             m = m._replace(
+                tele=tele,
                 wq_valid=m.wq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
                 fresh_loc=plan.fresh_loc,
                 parity_valid=plan.parity_valid,
@@ -445,6 +514,18 @@ class CodedMemorySystem:
             parked_count=rc.parked_count, rc_valid=rc.rc_valid,
             banks_data=rc.banks_data, parity_data=rc.parity_data,
         )
+        if p.telemetry:
+            # ring entries still pending after the recode unit ran charge a
+            # recode-budget/port-starvation wait cycle to their bank
+            tele = m.tele
+            m = m._replace(tele=tele._replace(
+                recode_retired=tele.recode_retired
+                + rc.n_recoded.astype(jnp.uint32),
+                wait_cause=tele.wait_cause.at[
+                    jnp.where(m.rc_valid, jnp.maximum(m.rc_bank, 0),
+                              jnp.int32(p.n_data)),
+                    obs.WAIT_RECODE].add(1, mode="drop"),
+            ))
         # dynamic coding unit
         dy = dynamic_step(
             p, t, tn, m.cycle, m.region_slot, m.slot_region, m.access_count,

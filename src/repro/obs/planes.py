@@ -1,0 +1,193 @@
+"""Device-side telemetry metric planes (the ``MemParams.telemetry`` payload).
+
+A *plane* is a small counter array carried inside the scan state and updated
+in the same masked scatters the cycle engine already uses, so telemetry-on
+runs stay one compiled program with no host round trips. The planes answer
+the questions the three opaque aggregates (``stall_cycles``,
+``read/write_latency_sum``) cannot: *which bank* stalled a core, *why* a
+queued request waited, *how* each core's reads were served (direct vs
+parity-decoded), how deep the queues ran, and how latency distributes — the
+paper's Fig 18-20 evaluation axes, per cause instead of in aggregate.
+
+This module must stay importable by ``repro.core.state`` (the planes are
+``MemState`` leaves), so it imports **nothing from repro** — only jax/numpy.
+The NumPy golden model re-derives every counter independently in
+``repro.oracle.model`` and the conformance suite asserts equality, so the
+planes are ground-truthed, not decorative.
+
+Cause taxonomy (see docs/observability.md):
+
+* ``stall_cause[b, c]`` — arbiter stalls by destination data bank ``b``:
+  ``c=0`` read queue full, ``c=1`` write queue full. The arbiter's
+  full-queue rejection is the ONLY core-stall source, so
+  ``stall_cause.sum() == stall_cycles`` exactly.
+* ``wait_cause[b, c]`` — per-cycle pending-work attribution by bank:
+  ``c=0`` a valid read candidate went unserved in a read cycle (bank
+  conflict / port contention), ``c=1`` a valid write went unserved in a
+  write cycle, ``c=2`` a recode-ring entry for bank ``b`` was still pending
+  at cycle end (recode-budget / port starvation). These are wait *cycles*
+  (one count per request per cycle spent waiting), not events.
+* ``read_mode_core[core, k]`` — served-read provenance per issuing core:
+  ``k=0`` direct, ``k=1`` chained-decode reuse (FROM_SYM), ``k=2``
+  parity-decoded (degraded), ``k=3`` redirect to a parked copy.
+  ``read_mode_core.sum() == served_reads``; columns 1+2 sum to
+  ``degraded_reads``.
+* ``write_mode_core[core, k]`` — ``k=0`` direct commit, ``k=1`` parked
+  into a parity row. Sums to ``served_writes`` / ``parked_writes``.
+* ``rq_hwm`` / ``wq_hwm`` — post-arbiter per-bank queue-depth high-water
+  marks.
+* ``lat_hist_read`` / ``lat_hist_write`` — log2-binned critical-word
+  latency histograms over served requests: bin 0 holds latency 0, bin k
+  holds [2^(k-1), 2^k), the last bin is open-ended.
+* ``recode_retired`` — total recode-ring retirements.
+* ``rq_core`` / ``wq_core`` — provenance carriers, not counters: the core
+  id occupying each queue slot, written by the arbiter in the same scatter
+  as the slot itself, read back by the serve step to attribute provenance.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+STALL_CAUSES = ("read_queue_full", "write_queue_full")
+WAIT_CAUSES = ("read_conflict", "write_conflict", "recode_pending")
+READ_CLASSES = ("direct", "from_sym", "parity_decode", "redirect")
+WRITE_CLASSES = ("direct", "parked")
+WAIT_READ, WAIT_WRITE, WAIT_RECODE = range(len(WAIT_CAUSES))
+HIST_BINS = 16
+
+
+class Telemetry(NamedTuple):
+    """Per-point metric planes (jnp arrays; ride the scan carry)."""
+
+    stall_cause: jnp.ndarray      # (n_data, 2) uint32
+    wait_cause: jnp.ndarray       # (n_data, 3) uint32
+    read_mode_core: jnp.ndarray   # (n_cores, 4) uint32
+    write_mode_core: jnp.ndarray  # (n_cores, 2) uint32
+    rq_hwm: jnp.ndarray           # (n_data,) int32
+    wq_hwm: jnp.ndarray           # (n_data,) int32
+    lat_hist_read: jnp.ndarray    # (HIST_BINS,) uint32
+    lat_hist_write: jnp.ndarray   # (HIST_BINS,) uint32
+    recode_retired: jnp.ndarray   # () uint32
+    rq_core: jnp.ndarray          # (n_data, queue_depth) int32 provenance
+    wq_core: jnp.ndarray          # (n_data, queue_depth) int32 provenance
+
+
+def init_telemetry(n_data: int, n_cores: int, queue_depth: int) -> Telemetry:
+    return Telemetry(
+        stall_cause=jnp.zeros((n_data, len(STALL_CAUSES)), jnp.uint32),
+        wait_cause=jnp.zeros((n_data, len(WAIT_CAUSES)), jnp.uint32),
+        read_mode_core=jnp.zeros((n_cores, len(READ_CLASSES)), jnp.uint32),
+        write_mode_core=jnp.zeros((n_cores, len(WRITE_CLASSES)), jnp.uint32),
+        rq_hwm=jnp.zeros((n_data,), jnp.int32),
+        wq_hwm=jnp.zeros((n_data,), jnp.int32),
+        lat_hist_read=jnp.zeros((HIST_BINS,), jnp.uint32),
+        lat_hist_write=jnp.zeros((HIST_BINS,), jnp.uint32),
+        recode_retired=jnp.zeros((), jnp.uint32),
+        rq_core=jnp.full((n_data, queue_depth), -1, jnp.int32),
+        wq_core=jnp.full((n_data, queue_depth), -1, jnp.int32),
+    )
+
+
+def lat_bin(lat: jnp.ndarray) -> jnp.ndarray:
+    """log2 histogram bin of a latency: 0→0, 1→1, [2,3]→2, [4,7]→3, …,
+    clamped into the open-ended last bin. Integer-exact (a threshold-count,
+    no float log), so the NumPy oracle's independent ``bit_length``
+    derivation matches bit for bit."""
+    lat = jnp.asarray(lat)
+    thresholds = jnp.asarray([1 << k for k in range(HIST_BINS - 1)],
+                             dtype=lat.dtype)
+    return jnp.sum(lat[..., None] >= thresholds, axis=-1).astype(jnp.int32)
+
+
+# ------------------------------------------------------------- host snapshot
+class TelemetrySnapshot:
+    """Host-side (numpy) view of one point's planes, plus derived totals.
+
+    Build with ``snapshot(state_or_telemetry[, point])``; every plane is a
+    plain int64 numpy array named like its ``Telemetry`` field.
+    """
+
+    def __init__(self, tele):
+        for name in Telemetry._fields:
+            setattr(self, name, np.asarray(
+                getattr(tele, name)).astype(np.int64))
+
+    # ---- derived totals (the cross-checks the tests assert against
+    # SimResult aggregates)
+    def stall_total(self) -> int:
+        return int(self.stall_cause.sum())
+
+    def stall_by_cause(self) -> dict:
+        return {c: int(self.stall_cause[:, k].sum())
+                for k, c in enumerate(STALL_CAUSES)}
+
+    def wait_by_cause(self) -> dict:
+        return {c: int(self.wait_cause[:, k].sum())
+                for k, c in enumerate(WAIT_CAUSES)}
+
+    def reads_by_class(self) -> dict:
+        return {c: int(self.read_mode_core[:, k].sum())
+                for k, c in enumerate(READ_CLASSES)}
+
+    def writes_by_class(self) -> dict:
+        return {c: int(self.write_mode_core[:, k].sum())
+                for k, c in enumerate(WRITE_CLASSES)}
+
+    def served_reads(self) -> int:
+        return int(self.read_mode_core.sum())
+
+    def served_writes(self) -> int:
+        return int(self.write_mode_core.sum())
+
+    def degraded_reads(self) -> int:
+        by = self.reads_by_class()
+        return by["from_sym"] + by["parity_decode"]
+
+    def parked_writes(self) -> int:
+        return self.writes_by_class()["parked"]
+
+    def as_dict(self) -> dict:
+        """JSON-serializable dump (counter planes + derived totals; the
+        provenance carriers are transient state, not metrics — skipped)."""
+        out = {name: getattr(self, name).tolist()
+               for name in Telemetry._fields
+               if name not in ("rq_core", "wq_core")}
+        out["recode_retired"] = int(self.recode_retired)
+        out["derived"] = {
+            "stall_total": self.stall_total(),
+            "served_reads": self.served_reads(),
+            "served_writes": self.served_writes(),
+            "degraded_reads": self.degraded_reads(),
+            "parked_writes": self.parked_writes(),
+            "stall_by_cause": self.stall_by_cause(),
+            "wait_by_cause": self.wait_by_cause(),
+            "reads_by_class": self.reads_by_class(),
+            "writes_by_class": self.writes_by_class(),
+        }
+        return out
+
+
+def _find_tele(obj):
+    if obj is None or isinstance(obj, Telemetry):
+        return obj
+    t = getattr(obj, "tele", None)
+    if t is not None:
+        return t
+    m = getattr(obj, "mem", None)
+    return getattr(m, "tele", None) if m is not None else None
+
+
+def snapshot(obj, point: Optional[int] = None) -> Optional[TelemetrySnapshot]:
+    """Host snapshot of the planes in ``obj`` — a ``Telemetry``, a
+    ``MemState`` or a ``SimState`` (duck-typed to avoid importing
+    repro.core). ``point`` indexes the leading batch axis of a batched
+    (vmapped sweep) state. Returns None when telemetry is off."""
+    tele = _find_tele(obj)
+    if tele is None:
+        return None
+    if point is not None:
+        tele = Telemetry(*(np.asarray(leaf)[point] for leaf in tele))
+    return TelemetrySnapshot(tele)

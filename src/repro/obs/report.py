@@ -1,0 +1,235 @@
+"""Stall-attribution reports: where the cycles went, per bank and per cause.
+
+``stall_report`` runs a paper suite (fig18/19/20) with telemetry planes on,
+cross-checks the planes against the ``SimResult`` aggregates (the report
+refuses to render numbers that disagree with the engine), and writes a
+markdown report plus a machine-readable JSON twin into
+``experiments/obs/``:
+
+* a per-point summary table — stalls split by cause, wait cycles split by
+  cause, served-read provenance (direct vs degraded) — the coded columns of
+  Fig 18-20 with their *why* attached;
+* a coded-vs-uncoded comparison for the suite's baseline pair;
+* a per-bank heatmap for a coded exemplar (stalls, waits, queue high-water
+  marks by bank) — the spatial view the aggregates flatten away;
+* log2-binned read/write latency histograms for the same exemplar.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.obs.report --suite paper_fig18 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs import planes
+
+# trimmed suite axes for --smoke (CI artifact job): one coded scheme, one α
+_SMOKE_KW = {
+    "paper_fig18": dict(schemes=("scheme_i",), alphas=(0.25,)),
+    "paper_fig19": dict(rs=(0.05,), alphas=(0.25,)),
+    "paper_fig20": dict(drifts=(0.0, 1.0), alphas=(0.25,)),
+}
+
+
+def _bar(v: int, vmax: int, width: int = 10) -> str:
+    if vmax <= 0:
+        return ""
+    return "#" * max(int(round(width * v / vmax)), 1 if v else 0)
+
+
+def _pct(num: int, den: int) -> str:
+    return f"{100.0 * num / den:.1f}%" if den else "-"
+
+
+def _md_table(headers: List[str], rows: List[List[str]]) -> List[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    out += ["| " + " | ".join(str(c) for c in row) + " |" for row in rows]
+    return out
+
+
+def _check_against_result(pt, res, snap) -> None:
+    """The planes must sum exactly to the engine's own aggregates — a
+    report built on disagreeing numbers is worse than no report."""
+    pairs = [
+        ("stall_cycles", snap.stall_total(), res.stall_cycles),
+        ("served_reads", snap.served_reads(), res.served_reads),
+        ("served_writes", snap.served_writes(), res.served_writes),
+        ("degraded_reads", snap.degraded_reads(), res.degraded_reads),
+        ("parked_writes", snap.parked_writes(), res.parked_writes),
+    ]
+    for name, plane, agg in pairs:
+        if int(plane) != int(agg):
+            raise AssertionError(
+                f"telemetry plane disagrees with SimResult on {name} for "
+                f"{pt.scheme} alpha={pt.alpha} r={pt.r}: plane sum "
+                f"{int(plane)} != aggregate {int(agg)}")
+
+
+def _point_row(pt, res, snap) -> List[str]:
+    st = snap.stall_by_cause()
+    wt = snap.wait_by_cause()
+    return [
+        pt.scheme, f"{pt.alpha:g}", f"{pt.r:g}", str(res.cycles),
+        str(res.served_reads), str(res.served_writes),
+        str(snap.stall_total()),
+        str(st["read_queue_full"]), str(st["write_queue_full"]),
+        str(wt["read_conflict"]), str(wt["write_conflict"]),
+        str(wt["recode_pending"]),
+        _pct(snap.degraded_reads(), res.served_reads),
+        _pct(snap.parked_writes(), res.served_writes),
+    ]
+
+
+def _bank_heatmap(snap) -> List[str]:
+    n_data = snap.stall_cause.shape[0]
+    rows = []
+    hw = np.maximum(snap.rq_hwm, 0)
+    for b in range(n_data):
+        rows.append([
+            str(b),
+            str(int(snap.stall_cause[b, 0])), str(int(snap.stall_cause[b, 1])),
+            str(int(snap.wait_cause[b, 0])), str(int(snap.wait_cause[b, 1])),
+            str(int(snap.wait_cause[b, 2])),
+            str(int(hw[b])), str(int(max(snap.wq_hwm[b], 0))),
+            _bar(int(snap.wait_cause[b].sum()),
+                 int(max(snap.wait_cause.sum(axis=1).max(), 1))),
+        ])
+    return _md_table(
+        ["bank", "stall:rq_full", "stall:wq_full", "wait:read", "wait:write",
+         "wait:recode", "rq hwm", "wq hwm", "wait load"], rows)
+
+
+def _latency_section(snap) -> List[str]:
+    lines = ["| bin | latency | reads | writes | |", "|---|---|---|---|---|"]
+    vmax = int(max(snap.lat_hist_read.max(), snap.lat_hist_write.max(), 1))
+    for k in range(planes.HIST_BINS):
+        r, w = int(snap.lat_hist_read[k]), int(snap.lat_hist_write[k])
+        if r == 0 and w == 0:
+            continue
+        lo = 0 if k == 0 else 1 << (k - 1)
+        hi = "inf" if k == planes.HIST_BINS - 1 else (1 << k) - 1
+        span = str(lo) if hi != "inf" and lo == int(hi) else f"{lo}-{hi}"
+        lines.append(f"| {k} | {span} | {r} | {w} | {_bar(r + w, 2 * vmax)} |")
+    return lines
+
+
+def stall_report(suite_name: str = "paper_fig18", *,
+                 base=None, out_dir: str = "experiments/obs",
+                 smoke: bool = False, **suite_kw) -> Dict:
+    """Run ``suite_name`` with telemetry on and write the attribution report.
+
+    Returns ``{"md_path", "json_path", "points", "results", "snapshots"}``
+    so tests and callers can assert on the numbers without re-parsing."""
+    from repro.obs.runlog import run_manifest
+    from repro.sweep.engine import run_points
+    from repro.sweep.grid import SweepPoint
+    from repro.sweep.workloads import build_trace, suite
+
+    if base is None:
+        base = SweepPoint(length=32, n_rows=64) if smoke else \
+            SweepPoint(length=96, n_rows=128)
+    kw = dict(_SMOKE_KW.get(suite_name, {})) if smoke else {}
+    kw.update(suite_kw)
+    pts = [pt.replace(telemetry=True) for pt in suite(suite_name, base, **kw)]
+    traces = [build_trace(pt, index=i) for i, pt in enumerate(pts)]
+    results, snaps = run_points(pts, traces=traces, collect_telemetry=True)
+    for pt, res, snap in zip(pts, results, snaps):
+        if snap is None:
+            raise AssertionError(f"telemetry-on point returned no snapshot: "
+                                 f"{pt.scheme} alpha={pt.alpha}")
+        _check_against_result(pt, res, snap)
+
+    manifest = run_manifest(config={"suite": suite_name, "smoke": smoke,
+                                    "n_points": len(pts)})
+    # exemplar: the busiest coded point (most wait cycles) gets the
+    # per-bank and latency deep dives; uncoded is the comparison anchor
+    coded = [i for i, pt in enumerate(pts) if pt.scheme != "uncoded"]
+    uncoded = [i for i, pt in enumerate(pts) if pt.scheme == "uncoded"]
+    ex = max(coded, key=lambda i: int(snaps[i].wait_cause.sum())) \
+        if coded else 0
+
+    lines = [f"# Stall attribution — {suite_name}", "",
+             f"git `{manifest['git_sha'][:12]}` · "
+             f"{manifest['created_iso']} · "
+             f"{manifest['devices']['backend']} backend · "
+             f"{len(pts)} points" + (" · smoke" if smoke else ""), "",
+             "Planes cross-checked against `SimResult` aggregates "
+             "(stalls, served, degraded, parked) — exact equality "
+             "asserted before rendering.", "", "## Per-point summary", ""]
+    lines += _md_table(
+        ["scheme", "alpha", "r", "cycles", "reads", "writes", "stalls",
+         "rq full", "wq full", "wait rd", "wait wr", "wait rc",
+         "degraded", "parked"],
+        [_point_row(pt, res, snap)
+         for pt, res, snap in zip(pts, results, snaps)])
+
+    if coded and uncoded:
+        u, c = uncoded[0], ex
+        ur, cr = results[u], results[c]
+        lines += ["", "## Coded vs uncoded", "",
+                  f"Exemplar: `{pts[c].scheme}` alpha={pts[c].alpha:g} "
+                  f"r={pts[c].r:g} vs `uncoded`.", ""]
+        lines += _md_table(
+            ["metric", "uncoded", pts[c].scheme],
+            [["cycles", str(ur.cycles), str(cr.cycles)],
+             ["stall cycles", str(ur.stall_cycles), str(cr.stall_cycles)],
+             ["wait cycles (all causes)",
+              str(int(snaps[u].wait_cause.sum())),
+              str(int(snaps[c].wait_cause.sum()))],
+             ["degraded reads", _pct(snaps[u].degraded_reads(),
+                                     ur.served_reads),
+              _pct(snaps[c].degraded_reads(), cr.served_reads)],
+             ["parked writes", _pct(snaps[u].parked_writes(),
+                                    ur.served_writes),
+              _pct(snaps[c].parked_writes(), cr.served_writes)]])
+
+    expt = pts[ex]
+    lines += ["", f"## Per-bank heatmap — `{expt.scheme}` "
+              f"alpha={expt.alpha:g} r={expt.r:g}", ""]
+    lines += _bank_heatmap(snaps[ex])
+    lines += ["", "## Latency histograms (log2 bins, cycles) — exemplar", ""]
+    lines += _latency_section(snaps[ex])
+    lines.append("")
+
+    os.makedirs(out_dir, exist_ok=True)
+    md_path = os.path.join(out_dir, f"stall_report_{suite_name}.md")
+    with open(md_path, "w") as f:
+        f.write("\n".join(lines))
+    json_path = os.path.join(out_dir, f"stall_report_{suite_name}.json")
+    blob = {"suite": suite_name, "manifest": manifest,
+            "points": [{"scheme": pt.scheme, "alpha": pt.alpha, "r": pt.r,
+                        "seed": pt.seed, "label": pt.label,
+                        "cycles": int(res.cycles),
+                        "stall_cycles": int(res.stall_cycles),
+                        "telemetry": snap.as_dict()}
+                       for pt, res, snap in zip(pts, results, snaps)]}
+    with open(json_path, "w") as f:
+        json.dump(blob, f, default=float)
+    return {"md_path": md_path, "json_path": json_path, "points": pts,
+            "results": results, "snapshots": snaps}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--suite", default="paper_fig18",
+                    choices=("paper_fig18", "paper_fig19", "paper_fig20"))
+    ap.add_argument("--out-dir", default="experiments/obs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="trimmed axes + tiny trace (CI artifact smoke)")
+    args = ap.parse_args(argv)
+    out = stall_report(args.suite, out_dir=args.out_dir, smoke=args.smoke)
+    n = len(out["points"])
+    print(f"wrote {out['md_path']} and {out['json_path']} ({n} points, "
+          f"planes == aggregates verified)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+"""Structured run manifests: what produced an artifact, pinned in the blob.
+
+Every ``BENCH_*.json`` (and the obs reports/timelines) carries a
+``manifest`` block answering the questions a perf-trajectory reader asks a
+week later: which commit, which device topology, which jax, which config
+(including the sweep layer's ``static_signature`` when the run came from a
+``SweepPoint``), and how long compile vs warm execution took. The schema is
+documented in docs/observability.md; ``scripts/check_bench_manifests.py``
+fails CI when a root ``BENCH_*.json`` is missing its block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional
+
+MANIFEST_SCHEMA = 1
+
+
+def git_sha(repo_root: Optional[str] = None) -> str:
+    """HEAD commit of ``repo_root`` (default: this file's repo), or
+    "unknown" outside a git checkout / without a git binary."""
+    root = repo_root or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=root,
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def device_topology() -> Dict[str, Any]:
+    """Backend platform + per-device kinds (lazy jax import: manifests must
+    be writable from tooling that never initializes a backend)."""
+    try:
+        import jax
+        devs = jax.devices()
+        return {
+            "backend": jax.default_backend(),
+            "n_devices": len(devs),
+            "device_kinds": sorted({d.device_kind for d in devs}),
+            "process_count": jax.process_count(),
+        }
+    except Exception:                                     # pragma: no cover
+        return {"backend": "unavailable", "n_devices": 0,
+                "device_kinds": [], "process_count": 0}
+
+
+def _versions() -> Dict[str, str]:
+    v = {"python": platform.python_version()}
+    try:
+        import jax
+        v["jax"] = jax.__version__
+    except Exception:                                     # pragma: no cover
+        v["jax"] = "unavailable"
+    import numpy
+    v["numpy"] = numpy.__version__
+    return v
+
+
+def point_config(pt) -> Dict[str, Any]:
+    """A ``SweepPoint`` as a manifest config block: its coordinates plus the
+    engine's compile key (``static_signature``)."""
+    from repro.sweep.grid import static_signature
+    cfg = dataclasses.asdict(pt)
+    cfg["static_signature"] = list(static_signature(pt))
+    return cfg
+
+
+def run_manifest(config: Optional[Any] = None,
+                 timings: Optional[Dict[str, float]] = None,
+                 extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The manifest block attached to result artifacts.
+
+    ``config`` may be a ``SweepPoint`` (expanded via ``point_config``), a
+    dict, or any JSON-serializable value; ``timings`` holds wall times in
+    seconds keyed by phase (e.g. ``compile_s``, ``warm_s``)."""
+    if config is not None and dataclasses.is_dataclass(config) \
+            and hasattr(config, "derived_slots"):
+        config = point_config(config)
+    now = time.time()
+    man: Dict[str, Any] = {
+        "schema": MANIFEST_SCHEMA,
+        "created_unix": round(now, 3),
+        "created_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z",
+                                     time.localtime(now)),
+        "git_sha": git_sha(),
+        "argv": list(sys.argv),
+        "versions": _versions(),
+        "devices": device_topology(),
+    }
+    if config is not None:
+        man["config"] = config
+    if timings:
+        man["timings"] = {k: round(float(v), 4) for k, v in timings.items()}
+    if extra:
+        man.update(extra)
+    return man
+
+
+def write_manifest(path: str, **kw) -> str:
+    """Standalone manifest file (for artifacts that are not JSON blobs)."""
+    man = run_manifest(**kw)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(man, f, indent=1, default=str)
+    return path

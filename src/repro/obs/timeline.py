@@ -1,0 +1,216 @@
+"""Scheduler timeline export: replay decisions as Chrome-trace JSON.
+
+``record_timeline`` re-runs a workload through ``cycle_fn`` one cycle at a
+time (host-stepped — the per-cycle readback is the point, not speed) and
+emits the decisions the batched paths fold away: write-drain mode spans,
+dynamic-coding encode spans / region switches / evictions, recode-backlog
+bursts, per-cycle arbiter grants and queue occupancy, and chunked-stream
+restage points. The output is the Chrome trace-event format (one JSON
+object per event), viewable in ``chrome://tracing`` or https://ui.perfetto.dev
+— load the file ``export_chrome_trace`` writes. One simulated cycle maps to
+one microsecond of trace time.
+
+Works on any system (telemetry planes not required): every signal here is
+read from the ordinary ``MemState`` scalars between cycles.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.obs.timeline \
+        --scheme scheme_i --alpha 0.25 --r 0.05 --length 96 \
+        --chunk-len 32 --out experiments/obs/timeline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# pid/tid layout of the exported trace (Perfetto groups rows by these)
+PID = 0
+TID_SCHED, TID_DYNAMIC, TID_RECODE, TID_QUEUES = 0, 1, 2, 3
+_THREADS = {TID_SCHED: "scheduler", TID_DYNAMIC: "dynamic coding",
+            TID_RECODE: "recoding", TID_QUEUES: "queues"}
+
+
+def _meta_events() -> List[dict]:
+    ev = [{"name": "process_name", "ph": "M", "pid": PID,
+           "args": {"name": "coded-memory-system"}}]
+    for tid, name in _THREADS.items():
+        ev.append({"name": "thread_name", "ph": "M", "pid": PID, "tid": tid,
+                   "args": {"name": name}})
+    return ev
+
+
+def record_timeline(system, source, *, chunk_len: Optional[int] = None,
+                    tn=None, region_priors=None,
+                    max_cycles: int = 4096) -> List[dict]:
+    """Replay ``source`` through ``system`` cycle by cycle, returning
+    Chrome-trace events.
+
+    ``source`` is anything ``repro.traces.source.as_source`` accepts (an
+    in-memory ``Trace``, chunk iterable, or ``TraceSource``); ``chunk_len``
+    stages it like ``stream_replay`` (None = one staging window sized to
+    the default chunk length). ``max_cycles`` bounds the host-stepped loop
+    — a timeline is a magnifying glass, not a bulk instrument.
+    """
+    from repro.core.system import quiescent
+    from repro.traces.source import as_source
+    from repro.traces.stream import DEFAULT_CHUNK_LEN, chunk_bound
+
+    src = as_source(source)
+    clen = chunk_len if chunk_len is not None else DEFAULT_CHUNK_LEN
+    tn = tn if tn is not None else system.tunables
+    st = system.init(tn, region_priors=region_priors)
+    bound = chunk_bound(system, clen)
+    pos = np.zeros(system.n_cores, np.int64)
+
+    events = _meta_events()
+    open_spans: Dict[int, str] = {}     # tid -> open B-span name
+
+    def begin(tid, name, ts, **args):
+        open_spans[tid] = name
+        events.append({"name": name, "ph": "B", "ts": ts, "pid": PID,
+                       "tid": tid, "args": args})
+
+    def end(tid, ts):
+        name = open_spans.pop(tid, None)
+        if name is not None:
+            events.append({"name": name, "ph": "E", "ts": ts, "pid": PID,
+                           "tid": tid})
+
+    def instant(tid, name, ts, **args):
+        events.append({"name": name, "ph": "i", "s": "t", "ts": ts,
+                       "pid": PID, "tid": tid, "args": args})
+
+    def counter(name, ts, values):
+        events.append({"name": name, "ph": "C", "ts": ts, "pid": PID,
+                       "args": values})
+
+    prev_wm, prev_enc, prev_sw, prev_rc = False, -1, 0, 0
+    prev_stalls = 0
+    total_cycles = 0
+    while total_cycles < max_cycles:
+        chunk, stream_end = src.stage(pos, clen)
+        st = st._replace(core_ptr=jnp.zeros_like(st.core_ptr))
+        staged = np.asarray(jax.device_get(stream_end))
+        instant(TID_SCHED, "chunk restage", int(jax.device_get(st.mem.cycle)),
+                pos=[int(x) for x in pos],
+                staged=[int(x) for x in np.minimum(staged, clen)])
+        chunk_cycles = 0
+        while total_cycles < max_cycles and chunk_cycles < bound:
+            st, out = system.cycle_fn(st, chunk, tn, stream_end)
+            (cyc, wm, enc_region, enc_slot, switches, rc_backlog, n_served,
+             rq_occ, wq_occ, stalls_lo, ptr, quiet) = jax.device_get((
+                 st.mem.cycle, st.mem.write_mode, st.mem.enc_region,
+                 st.mem.enc_slot, st.mem.switches,
+                 jnp.sum(st.mem.rc_valid), out.n_served,
+                 jnp.sum(st.mem.rq_valid), jnp.sum(st.mem.wq_valid),
+                 st.mem.stall_cycles[0], st.core_ptr, quiescent(st)))
+            ts = int(cyc)           # post-increment: the cycle just executed
+            total_cycles += 1
+            chunk_cycles += 1
+            wm, enc_region, switches = bool(wm), int(enc_region), int(switches)
+            rc_backlog, stalls = int(rc_backlog), int(stalls_lo)
+
+            if wm and not prev_wm:
+                begin(TID_SCHED, "write drain", ts)
+            elif prev_wm and not wm:
+                end(TID_SCHED, ts)
+            if enc_region >= 0 and prev_enc < 0:
+                begin(TID_DYNAMIC, f"encode region {enc_region}", ts,
+                      region=enc_region, slot=int(enc_slot))
+            elif prev_enc >= 0 and enc_region < 0:
+                end(TID_DYNAMIC, ts)
+            if switches > prev_sw:
+                instant(TID_DYNAMIC, "region switch", ts, total=switches)
+            if rc_backlog < prev_rc:
+                instant(TID_RECODE, "recode burst", ts,
+                        retired=prev_rc - rc_backlog)
+            counter("queue occupancy", ts, {"read": int(rq_occ),
+                                            "write": int(wq_occ)})
+            counter("arbiter grants", ts, {"served": int(n_served)})
+            counter("recode backlog", ts, {"pending": rc_backlog})
+            if stalls != prev_stalls:
+                counter("stalled cores", ts,
+                        {"stalls": stalls - prev_stalls})
+            prev_wm, prev_enc, prev_sw = wm, enc_region, switches
+            prev_rc, prev_stalls = rc_backlog, stalls
+
+            tlen = chunk.bank.shape[1]
+            starved = bool(np.any((np.asarray(ptr) >= tlen)
+                                  & (staged > tlen)))
+            if starved or bool(quiet):
+                break
+        moved = np.asarray(jax.device_get(st.core_ptr), np.int64)
+        pos += moved
+        if src.exhausted(pos) and bool(jax.device_get(quiescent(st))):
+            break
+        if not moved.any():
+            break                      # no progress: budget exhausted
+    ts_end = int(jax.device_get(st.mem.cycle))
+    for tid in list(open_spans):
+        end(tid, ts_end)
+    return events
+
+
+def export_chrome_trace(events: List[dict], path: str,
+                        manifest: Optional[dict] = None) -> str:
+    """Write events as a Chrome-trace JSON file (Perfetto-loadable)."""
+    from repro.obs.runlog import run_manifest
+    blob = {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"manifest": manifest or run_manifest(),
+                          "time_unit": "1 us = 1 simulated cycle"}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(blob, f, default=float)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scheme", default="scheme_i")
+    ap.add_argument("--trace", default="banded",
+                    help="trace generator (repro.sim.trace.TRACES)")
+    ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--r", type=float, default=0.05)
+    ap.add_argument("--n-rows", type=int, default=128)
+    ap.add_argument("--length", type=int, default=96)
+    ap.add_argument("--chunk-len", type=int, default=32)
+    ap.add_argument("--select-period", type=int, default=32)
+    ap.add_argument("--max-cycles", type=int, default=4096)
+    ap.add_argument("--out", default="experiments/obs/timeline.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI artifact smoke)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.length, args.n_rows, args.max_cycles = 32, 64, 512
+
+    from repro.sweep.engine import system_for
+    from repro.sweep.grid import SweepPoint
+    from repro.sweep.workloads import build_trace
+    pt = SweepPoint(scheme=args.scheme, trace=args.trace, alpha=args.alpha,
+                    r=args.r, n_rows=args.n_rows, length=args.length,
+                    select_period=args.select_period)
+    system = system_for(pt)
+    from repro.sweep.engine import stack_tunables
+    tn = jax.tree.map(lambda x: x[0], stack_tunables([pt],
+                                                     system.p.queue_depth))
+    events = record_timeline(system, build_trace(pt),
+                             chunk_len=args.chunk_len, tn=tn,
+                             max_cycles=args.max_cycles)
+    from repro.obs.runlog import run_manifest
+    path = export_chrome_trace(events, args.out,
+                               manifest=run_manifest(config=pt))
+    n_real = sum(1 for e in events if e["ph"] != "M")
+    print(f"wrote {path}: {len(events)} events ({n_real} non-metadata) — "
+          f"open in chrome://tracing or ui.perfetto.dev")
+    return 0 if n_real > 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

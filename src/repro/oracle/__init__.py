@@ -33,6 +33,7 @@ from repro.oracle.model import (  # noqa: F401
     OracleRecodeOut,
     OracleResult,
     OracleState,
+    OracleTelemetry,
     OracleWritePlan,
     build_read_plan,
     build_write_plan,

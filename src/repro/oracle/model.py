@@ -95,6 +95,10 @@ class OracleParams:
     select_period: int = 512
     wq_hi: int = 8
     wq_lo: int = 2
+    # mirror of MemParams.telemetry: carry independently-derived metric
+    # planes (OracleTelemetry) so the conformance suite can assert the
+    # production planes against a second implementation
+    telemetry: bool = False
 
     @property
     def rs_active(self) -> int:
@@ -186,6 +190,51 @@ class OracleResult(NamedTuple):
     window_write_latency: tuple = ()
 
 
+# telemetry histogram geometry — independently fixed here (NOT imported from
+# repro.obs; the oracle shares no code with the production path)
+ORACLE_HIST_BINS = 16
+
+
+def _lat_bin(lat: int) -> int:
+    """log2 latency bin: 0→0, 1→1, [2,3]→2, [4,7]→3, … — ``bit_length`` is
+    an independent derivation of the production threshold-count binning."""
+    return min(int(lat).bit_length(), ORACLE_HIST_BINS - 1)
+
+
+@dataclasses.dataclass
+class OracleTelemetry:
+    """Golden-model metric planes (fields named like the production
+    ``repro.obs.planes.Telemetry`` leaves, so conformance compares by
+    name). All plain int64 numpy — magnitudes are trace-bounded."""
+
+    stall_cause: np.ndarray       # (n_data, 2) {read,write}-queue-full
+    wait_cause: np.ndarray        # (n_data, 3) {read,write,recode} waits
+    read_mode_core: np.ndarray    # (n_cores, 4) {direct,from_sym,parity,
+                                  #               redirect}
+    write_mode_core: np.ndarray   # (n_cores, 2) {direct, parked}
+    rq_hwm: np.ndarray            # (n_data,) post-arbiter high-water marks
+    wq_hwm: np.ndarray
+    lat_hist_read: np.ndarray     # (ORACLE_HIST_BINS,)
+    lat_hist_write: np.ndarray
+    recode_retired: int
+    rq_core: np.ndarray           # (n_data, D) issuing-core provenance
+    wq_core: np.ndarray
+
+
+def _init_oracle_telemetry(n_data: int, n_cores: int,
+                           queue_depth: int) -> OracleTelemetry:
+    z = lambda *s: np.zeros(s, np.int64)                      # noqa: E731
+    return OracleTelemetry(
+        stall_cause=z(n_data, 2), wait_cause=z(n_data, 3),
+        read_mode_core=z(n_cores, 4), write_mode_core=z(n_cores, 2),
+        rq_hwm=z(n_data), wq_hwm=z(n_data),
+        lat_hist_read=z(ORACLE_HIST_BINS), lat_hist_write=z(ORACLE_HIST_BINS),
+        recode_retired=0,
+        rq_core=np.full((n_data, queue_depth), -1, np.int64),
+        wq_core=np.full((n_data, queue_depth), -1, np.int64),
+    )
+
+
 @dataclasses.dataclass
 class OracleState:
     """Mutable model state (numpy arrays named like the production
@@ -226,6 +275,7 @@ class OracleState:
     rc_dropped: int
     core_ptr: np.ndarray
     done_cycle: int
+    tele: Optional[OracleTelemetry] = None
 
 
 class OracleCycleOut(NamedTuple):
@@ -548,6 +598,9 @@ class OracleMemorySystem:
             stall_cycles=0, rc_dropped=0,
             core_ptr=np.zeros(self.n_cores, np.int32),
             done_cycle=-1,
+            tele=(_init_oracle_telemetry(p.n_data, self.n_cores,
+                                         p.queue_depth)
+                  if p.telemetry else None),
         )
 
     def _priors_layout(self, priors, n_par: int, n_slot_rows: int):
@@ -590,19 +643,24 @@ class OracleMemorySystem:
                 continue
             b = max(int(bank[c, pc]), 0)
             i = max(int(row[c, pc]), 0)
-            if is_write[c, pc]:
+            w = bool(is_write[c, pc])
+            if w:
                 q_valid, q_row, q_age = st.wq_valid, st.wq_row, st.wq_age
             else:
                 q_valid, q_row, q_age = st.rq_valid, st.rq_row, st.rq_age
             free = np.flatnonzero(~q_valid[b])
             if free.size == 0:
                 st.stall_cycles += 1                  # full queue: stall
+                if st.tele is not None:
+                    st.tele.stall_cause[b, 1 if w else 0] += 1
                 continue
             s = int(free[0])
             q_row[b, s] = i
             q_age[b, s] = st.cycle
             q_valid[b, s] = True
-            if is_write[c, pc]:
+            if st.tele is not None:
+                (st.tele.wq_core if w else st.tele.rq_core)[b, s] = c
+            if w:
                 st.wq_data[b, s] = data[c, pc]
             region = i // rs_a
             if region < p.n_regions:
@@ -710,6 +768,11 @@ class OracleMemorySystem:
         rs_a = p.rs_active
         was_done = st.done_cycle >= 0
         self._arbiter(st, trace, stream_end)
+        if st.tele is not None:
+            np.maximum(st.tele.rq_hwm, st.rq_valid.sum(axis=1),
+                       out=st.tele.rq_hwm)
+            np.maximum(st.tele.wq_hwm, st.wq_valid.sum(axis=1),
+                       out=st.tele.wq_hwm)
 
         # write-drain hysteresis
         wq_occ = int(st.wq_valid.sum(axis=1).max())
@@ -732,6 +795,17 @@ class OracleMemorySystem:
                 st.rc_bank, st.rc_row, st.rc_valid, rs_a)
             self._commit_writes(st, plan, cb, ci, ca, cv, cd)
             lat = int(np.where(plan.served, st.cycle - ca, 0).sum())
+            if st.tele is not None:
+                te = st.tele
+                for c in range(n):
+                    if plan.served[c]:
+                        core = int(te.wq_core[c // p.queue_depth,
+                                              c % p.queue_depth])
+                        cls = 0 if int(plan.mode[c]) == WMODE_DIRECT else 1
+                        te.write_mode_core[core, cls] += 1
+                        te.lat_hist_write[_lat_bin(st.cycle - int(ca[c]))] += 1
+                    elif cv[c]:           # valid but unserved: a wait cycle
+                        te.wait_cause[int(cb[c]), 1] += 1
             st.wq_valid &= ~plan.served.reshape(p.n_data, p.queue_depth)
             st.fresh_loc = plan.fresh_loc
             st.parity_valid = plan.parity_valid
@@ -757,6 +831,20 @@ class OracleMemorySystem:
                                            max(int(ci[c]), 0),
                                            int(plan.mode[c]))
             lat = int(np.where(plan.served, st.cycle - ca, 0).sum())
+            if st.tele is not None:
+                te = st.tele
+                for c in range(n):
+                    m = int(plan.mode[c])
+                    if plan.served[c]:
+                        core = int(te.rq_core[c // p.queue_depth,
+                                              c % p.queue_depth])
+                        cls = (0 if m == MODE_DIRECT else
+                               1 if m == MODE_FROM_SYM else
+                               3 if m >= MODE_REDIRECT else 2)
+                        te.read_mode_core[core, cls] += 1
+                        te.lat_hist_read[_lat_bin(st.cycle - int(ca[c]))] += 1
+                    elif cv[c]:
+                        te.wait_cause[int(cb[c]), 0] += 1
             st.rq_valid &= ~plan.served.reshape(p.n_data, p.queue_depth)
             st.served_reads += plan.n_served
             st.degraded_reads += plan.n_degraded
@@ -772,6 +860,10 @@ class OracleMemorySystem:
         st.fresh_loc, st.parity_valid = rc.fresh_loc, rc.parity_valid
         st.parked_count, st.rc_valid = rc.parked_count, rc.rc_valid
         st.banks_data, st.parity_data = rc.banks_data, rc.parity_data
+        if st.tele is not None:
+            st.tele.recode_retired += rc.n_recoded
+            for e in np.flatnonzero(st.rc_valid):     # still pending: waits
+                st.tele.wait_cause[max(int(st.rc_bank[e]), 0), 2] += 1
 
         # dynamic coding unit
         self._dynamic_step(st, quiesce=was_done)

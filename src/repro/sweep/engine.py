@@ -69,7 +69,8 @@ def system_for(pt: SweepPoint,
                              n_slots_alloc=ns_alloc,
                              region_size_alloc=rs_alloc,
                              n_regions_alloc=nr_alloc,
-                             traced_geometry=traced_geometry)
+                             traced_geometry=traced_geometry,
+                             telemetry=pt.telemetry)
         sys = CodedMemorySystem(tables, params, n_cores=pt.n_cores)
         _SYSTEMS[sig] = sys
     return sys
@@ -183,8 +184,15 @@ def _stack_priors(priors: Sequence, n_points: int):
 
 def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
               shard: bool = True,
-              region_priors: Optional[Sequence] = None) -> List[SimResult]:
-    """Evaluate one shape-compatible batch as a single device program."""
+              region_priors: Optional[Sequence] = None,
+              collect_telemetry: bool = False):
+    """Evaluate one shape-compatible batch as a single device program.
+
+    With ``collect_telemetry`` the return is ``(results, snapshots)`` where
+    ``snapshots`` aligns with the batch points: a
+    ``repro.obs.planes.TelemetrySnapshot`` per telemetry-on point, None for
+    telemetry-off ones (the planes ride the same device program; collecting
+    them costs one extra host transfer of a few small arrays per point)."""
     pts = batch.points
     # geometry indexing is traced only when this batch actually mixes
     # (region_size, n_regions) geometries; a uniform batch (trace/seed/
@@ -216,32 +224,50 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
         st_b, trace_b, tn_b = _maybe_shard((st_b, trace_b, tn_b),
                                            len(pts) + pad)
     st = _scan_batch(sys, st_b, trace_b, tn_b, pts[0].resolved_cycles())
-    return summarize_batch(st, n_points=len(pts))
+    results = summarize_batch(st, n_points=len(pts))
+    if not collect_telemetry:
+        return results
+    from repro.obs.planes import snapshot
+    host = jax.device_get(st)
+    snaps = [snapshot(host, point=b) if host.mem.tele is not None else None
+             for b in range(len(pts))]
+    return results, snaps
 
 
 def run_points(points: Sequence[SweepPoint],
                traces: Optional[Sequence[Trace]] = None,
                shard: bool = True,
-               region_priors: Optional[Sequence] = None) -> List[SimResult]:
+               region_priors: Optional[Sequence] = None,
+               collect_telemetry: bool = False):
     """Evaluate an arbitrary sweep; results align with ``points`` order.
 
     ``region_priors`` aligns 1:1 with ``points``: each entry is None (cold
     start) or a ranked hot-region array warm-starting that point's dynamic
     coding unit (``repro.traces.profiler.TraceProfile.region_priors``).
+
+    ``collect_telemetry`` returns ``(results, snapshots)`` — a per-point
+    ``TelemetrySnapshot`` (None for telemetry-off points); see ``run_batch``.
     """
     if traces is not None and len(traces) != len(points):
         raise ValueError("traces must align 1:1 with points")
     if region_priors is not None and len(region_priors) != len(points):
         raise ValueError("region_priors must align 1:1 with points")
     results: List[Optional[SimResult]] = [None] * len(points)
+    snaps: List = [None] * len(points)
     for batch in partition(points):
         btraces = ([traces[i] for i in batch.indices]
                    if traces is not None else None)
         bpriors = ([region_priors[i] for i in batch.indices]
                    if region_priors is not None else None)
-        for i, res in zip(batch.indices,
-                          run_batch(batch, btraces, shard, bpriors)):
-            results[i] = res
+        out = run_batch(batch, btraces, shard, bpriors,
+                        collect_telemetry=collect_telemetry)
+        bres, bsnaps = out if collect_telemetry else (out, None)
+        for k, i in enumerate(batch.indices):
+            results[i] = bres[k]
+            if bsnaps is not None:
+                snaps[i] = bsnaps[k]
+    if collect_telemetry:
+        return results, snaps
     return results  # type: ignore[return-value]
 
 

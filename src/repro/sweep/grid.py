@@ -58,6 +58,10 @@ class SweepPoint:
     n_banks: int = 8
     length: int = 96
     n_cycles: Optional[int] = None   # None = drain bound from length/n_cores
+    # ---- static: observability (a telemetry-on point carries the
+    # repro.obs metric planes through its scan carry — a different compiled
+    # program from the telemetry-off one, see MemParams.telemetry)
+    telemetry: bool = False
     # ---- batchable: trace contents
     trace: str = "banded"            # name in repro.sim.trace.TRACES, or
                                      # "file:<path>" for an ingested on-disk
@@ -111,7 +115,8 @@ def static_signature(pt: SweepPoint) -> Tuple:
     return (pt.scheme, pt.n_data, pt.n_rows, full,
             pt.queue_depth, pt.coalesce, pt.recode_cap, pt.max_syms,
             pt.encode_rows_per_cycle, pt.recode_budget,
-            pt.n_cores, pt.n_banks, pt.length, pt.resolved_cycles())
+            pt.n_cores, pt.n_banks, pt.length, pt.resolved_cycles(),
+            pt.telemetry)
 
 
 def batch_geometry_alloc(points: Sequence[SweepPoint]) -> Tuple[int, int, int]:

@@ -55,18 +55,34 @@ def chunk_bound(system: CodedMemorySystem, chunk_len: int) -> int:
 
 
 def _window_stats(host_prev, host_now) -> Tuple[tuple, tuple]:
-    """((n_reads, avg_read_lat), (n_writes, avg_write_lat)) for one window."""
+    """((n_reads, avg_read_lat[, hist]), (n_writes, avg_write_lat[, hist]))
+    for one window. The histogram element — the per-window delta of the
+    telemetry latency histograms (``repro.obs.planes``, log2 bins) — is
+    present only when the system runs with ``MemParams.telemetry``; without
+    it the window entries keep their pre-telemetry 2-tuple shape."""
     dr = int(host_now[0]) - int(host_prev[0])
     dw = int(host_now[1]) - int(host_prev[1])
     drl = wide_total(host_now[2]) - wide_total(host_prev[2])
     dwl = wide_total(host_now[3]) - wide_total(host_prev[3])
-    return (dr, drl / max(dr, 1)), (dw, dwl / max(dw, 1))
+    wr: tuple = (dr, drl / max(dr, 1))
+    ww: tuple = (dw, dwl / max(dw, 1))
+    if len(host_now) > 4:
+        wr += (tuple(int(a) - int(b)
+                     for a, b in zip(np.asarray(host_now[4]).ravel(),
+                                     np.asarray(host_prev[4]).ravel())),)
+        ww += (tuple(int(a) - int(b)
+                     for a, b in zip(np.asarray(host_now[5]).ravel(),
+                                     np.asarray(host_prev[5]).ravel())),)
+    return wr, ww
 
 
 def _snapshot(st: SimState):
     m = st.mem
-    return (m.served_reads, m.served_writes, m.read_latency_sum,
+    base = (m.served_reads, m.served_writes, m.read_latency_sum,
             m.write_latency_sum)
+    if m.tele is not None:
+        base += (m.tele.lat_hist_read, m.tele.lat_hist_write)
+    return base
 
 
 def stream_replay(system: CodedMemorySystem, source,

@@ -79,7 +79,7 @@ def oracle_twin(system):
         n_regions_active=active(tn.n_regions_active, p.n_regions),
         n_slots_active=active(tn.n_slots_active, p.n_active),
         select_period=int(tn.select_period), wq_hi=int(tn.wq_hi),
-        wq_lo=int(tn.wq_lo))
+        wq_lo=int(tn.wq_lo), telemetry=p.telemetry)
     return OracleMemorySystem(system.tables.scheme.name, op,
                               n_cores=system.n_cores)
 
@@ -119,6 +119,18 @@ def assert_state_matches_oracle(st, ost, label=""):
     np.testing.assert_array_equal(np.asarray(host.core_ptr), ost.core_ptr,
                                   err_msg=f"{label}: core_ptr")
     assert int(host.done_cycle) == ost.done_cycle, f"{label}: done_cycle"
+    # telemetry planes (repro.obs): both models carry them or neither does;
+    # each plane must match the oracle's independent derivation exactly
+    assert (m.tele is None) == (ost.tele is None), \
+        f"{label}: telemetry presence mismatch"
+    if m.tele is not None:
+        from repro.obs.planes import Telemetry
+
+        for name in Telemetry._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(m.tele, name)).astype(np.int64),
+                np.asarray(getattr(ost.tele, name)),
+                err_msg=f"{label}: tele.{name}")
 
 
 @pytest.fixture(scope="session")

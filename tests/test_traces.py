@@ -85,6 +85,49 @@ def test_stream_replay_window_stats_account_for_all_latency():
     assert tot_r == pytest.approx(res.avg_read_latency * max(n_r, 1))
 
 
+def test_window_deltas_sum_to_totals_fig18_workload():
+    """On a fig18-style point (banded trace, coded scheme, telemetry on)
+    the per-window series partitions every run total exactly: served
+    counts, latency sums, and — with the planes enabled — the per-window
+    log2 latency-histogram deltas, whose mass equals each window's count
+    and whose sum equals the final histogram."""
+    from repro.obs.planes import HIST_BINS, snapshot
+    from repro.sweep.engine import system_for
+    from repro.sweep.workloads import build_trace
+    from repro.sweep import SweepPoint
+    pt = SweepPoint(scheme="scheme_i", trace="banded", alpha=0.25, r=0.05,
+                    n_rows=64, length=32, select_period=16, telemetry=True)
+    sys_ = system_for(pt)
+    res = stream_replay(sys_, build_trace(pt), chunk_len=8,
+                        tn=sys_.tunables)
+    assert len(res.window_read_latency) > 1, "need multiple windows"
+    for series, total, avg in (
+            (res.window_read_latency, res.served_reads,
+             res.avg_read_latency),
+            (res.window_write_latency, res.served_writes,
+             res.avg_write_latency)):
+        assert sum(w[0] for w in series) == total
+        assert sum(w[0] * w[1] for w in series) \
+            == pytest.approx(avg * max(total, 1))
+        # telemetry windows carry the histogram delta as a 3rd element
+        hists = np.array([w[2] for w in series])
+        assert hists.shape[1] == HIST_BINS
+        assert (hists >= 0).all()
+        np.testing.assert_array_equal(hists.sum(axis=1),
+                                      [w[0] for w in series])
+    # ... and the window deltas reassemble the final device-side planes
+    trace = build_trace(pt)
+    st, _ = sys_._run(sys_.init(), trace,
+                      drain_bound(sys_.n_cores, trace.bank.shape[1]))
+    snap = snapshot(st)
+    np.testing.assert_array_equal(
+        np.array([w[2] for w in res.window_read_latency]).sum(axis=0),
+        snap.lat_hist_read)
+    np.testing.assert_array_equal(
+        np.array([w[2] for w in res.window_write_latency]).sum(axis=0),
+        snap.lat_hist_write)
+
+
 def test_stream_replay_batched_matches_engine():
     """The chunk axis composes with the engine's point axis: a whole
     shape-compatible batch streams as one vmapped program, per-point
