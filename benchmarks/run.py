@@ -17,13 +17,14 @@ def main():
 
     from benchmarks import (bench_cycles, bench_embedding, bench_kvbank,
                             bench_stream, bench_sweep, fig18_dedup,
-                            fig19_split, fig20_ramp, roofline_report,
-                            tab_schemes)
+                            fig19_split, fig20_ramp, fig_faults,
+                            roofline_report, tab_schemes)
 
     tab_schemes.run()
     fig18_dedup.run(length=48 if args.fast else 96)
     fig19_split.run(length=48 if args.fast else 96)
     fig20_ramp.run(length=48 if args.fast else 96)
+    fig_faults.run(smoke=args.fast)
     bench_sweep.run(length=32 if args.fast else 48)
     bench_cycles.run(smoke=args.fast)
     bench_stream.run(smoke=args.fast)

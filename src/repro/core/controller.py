@@ -292,6 +292,7 @@ def build_write_pattern(
     rc_row: jnp.ndarray,
     rc_valid: jnp.ndarray,
     rs_active=None,
+    down=None,
 ) -> WritePlan:
     import jax
 
@@ -316,6 +317,24 @@ def build_write_pattern(
     park_possible = cand_valid[:, None] & (optj >= 0) & coded[:, None]
     need_rc_dir = coded & (t.opt_n[b] > 0)
     park_base = 2 + jnp.arange(MAX_OPTS, dtype=jnp.int32)
+    # ---- degraded-write mode (``down`` = currently-down data banks).
+    # A candidate is *sticky* when its own bank is down or any parity
+    # option covering it has a down member: its park stays parked (no
+    # recode request) until the rebuild sweep drains it — retiring the park
+    # early would rewrite a member bank and strand the down-covering
+    # parities invalid, killing the down bank's degraded readability. The
+    # scoring shift prefers (a) normal parks, (b) parks into parities
+    # whose members are all alive, (c) parks into down-covering parities,
+    # (d) a direct write (which invalidates EVERY covering parity row) —
+    # strictly last for a sticky-but-alive bank. Sticky parks also waive
+    # the recode-queue-space requirement (they don't enqueue).
+    if down is not None:
+        opt_down = jnp.any((mem >= 0) & (mem != b[:, None, None])
+                           & down[memc], axis=2)             # (N, K)
+        sticky = down[b] | jnp.any((optj >= 0) & coded[:, None] & opt_down,
+                                   axis=1)
+        dir_score = jnp.where(sticky, 2 + 2 * MAX_OPTS + 2, 1)
+        park_shift = jnp.where(opt_down, MAX_OPTS + 2, 0)
 
     served0 = jnp.zeros((n,), bool)
     mode0 = jnp.full((n,), WMODE_UNSERVED, jnp.int32)
@@ -337,12 +356,20 @@ def build_write_pattern(
         occ = jnp.any(
             (mem[c] >= 0) & (mem[c] != bc)
             & (fresh_loc[memc[c], ic] == optjj[c][:, None] + 1), axis=1)
-        park_feas = (park_possible[c] & ~port_busy[opt_pport[c]] & ~occ
-                     & rc_space)
-        scores = jnp.concatenate([
-            jnp.where(f_dir, 1, INF_SCORE)[None],
-            jnp.where(park_feas, park_base, INF_SCORE),
-        ])
+        if down is None:
+            park_feas = (park_possible[c] & ~port_busy[opt_pport[c]] & ~occ
+                         & rc_space)
+            scores = jnp.concatenate([
+                jnp.where(f_dir, 1, INF_SCORE)[None],
+                jnp.where(park_feas, park_base, INF_SCORE),
+            ])
+        else:
+            park_feas = (park_possible[c] & ~port_busy[opt_pport[c]] & ~occ
+                         & (rc_space | sticky[c]))
+            scores = jnp.concatenate([
+                jnp.where(f_dir, dir_score[c], INF_SCORE)[None],
+                jnp.where(park_feas, park_base + park_shift[c], INF_SCORE),
+            ])
         act = jnp.argmin(scores).astype(jnp.int32)
         found = scores[act] < INF_SCORE
         is_dir = found & (act == 0)
@@ -369,8 +396,13 @@ def build_write_pattern(
         parity_valid = parity_valid.at[
             jnp.where(inv, optjj[c], parity_valid.shape[0]), pr[c]].set(
                 False, mode="drop")
-        # recode request so freshness is eventually restored
-        need_rc = (is_dir & need_rc_dir[c]) | is_park
+        # recode request so freshness is eventually restored (a sticky park
+        # stays parked — the rebuild sweep enqueues it once its down
+        # parity-group member is recovering, see repro.faults.inject)
+        if down is None:
+            need_rc = (is_dir & need_rc_dir[c]) | is_park
+        else:
+            need_rc = (is_dir & need_rc_dir[c]) | (is_park & ~sticky[c])
         rc_bank, rc_row, rc_valid, ok = _rc_push(
             rc_bank, rc_row, rc_valid, bc, ic, need_rc)
         dropped = dropped + (need_rc & ~ok).astype(jnp.int32)

@@ -53,6 +53,7 @@ def recode_step(
     banks_data: jnp.ndarray,
     parity_data: jnp.ndarray,
     rs_active=None,
+    down=None,
 ) -> RecodeOut:
     """Retire up to ``recode_budget`` ring entries whose ports are all idle.
 
@@ -67,6 +68,16 @@ def recode_step(
     left behind are bit-identical to a sequential scan — enforced against
     the golden model's (``repro.oracle.recode_step``) by
     tests/test_conformance.py; an empty or workless ring costs one trip.
+
+    ``down`` (fault injection, repro.faults): hard-down data banks. A
+    parity recompute that would read a hard-down member is *blocked* (the
+    bank's stored rows are unreadable) — on a parked retire the blocked
+    parity is invalidated rather than recomputed, exactly like the
+    member-parked blocking above, so a dead bank's covering parities never
+    re-validate with unreadable inputs. Entries whose OWN bank is
+    hard-down become moot and are dropped — they could otherwise pin the
+    ring forever; the rebuild sweep re-enqueues their cells once the bank
+    recovers.
     """
     rs = p.region_size
     rs_a = rs if rs_active is None else rs_active
@@ -85,6 +96,12 @@ def recode_step(
     epos = jnp.arange(cap, dtype=jnp.int32)
     nsink = jnp.int32(p.n_ports)     # masked-index slot: never busy/claimed
     oob_j = jnp.int32(parity_valid.shape[0])
+    if down is not None:
+        # fault-blocking is loop-invariant: down membership doesn't change
+        # within a cycle
+        blocked_f = jnp.any((mem >= 0) & (mem != b[:, None, None])
+                            & down[memc], axis=2)            # (E, K)
+        self_down = down[b]                                  # (E,)
 
     def cond(carry):
         cursor, budget = carry[0], carry[1]
@@ -101,11 +118,15 @@ def recode_step(
             (mem >= 0) & (mem != b[:, None, None])
             & (fresh_loc[memc, i[:, None, None]] == optjj[:, :, None] + 1),
             axis=2)                                              # (E, K)
+        if down is not None:
+            blocked = blocked | blocked_f
         need = (optj >= 0) & coded[:, None] & (
             ~parity_valid[optjj, pr[:, None]] | parked[:, None])
         recompute = need & ~blocked
         blocked_l = need & blocked
         has_work = parked | jnp.any(recompute, axis=1)
+        if down is not None:
+            has_work = has_work & ~self_down
         pending = rc_valid & (epos > cursor)
         work = pending & coded & has_work
         moot = pending & ~(coded & has_work)

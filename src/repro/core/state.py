@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codes import CodeTables
+from repro.faults.plan import FaultPlan, FaultState, init_fault_state
 from repro.obs.planes import Telemetry, init_telemetry
 
 NOP_PORT_PAD = 1  # port_busy has one trailing dummy slot used as a no-op sink
@@ -85,6 +86,14 @@ class MemParams(NamedTuple):
                                      # program is bit-identical to one built
                                      # before the flag existed (same gating
                                      # style as ``traced_geometry``)
+    faults: bool = False             # True: carry a repro.faults.FaultState
+                                     # leaf (bank-erasure schedule, rebuild
+                                     # progress, availability counters) and
+                                     # weave the fault hooks into cycle_fn.
+                                     # False: the ``fault`` leaf is None and
+                                     # the program is bit-identical to the
+                                     # pre-fault one (same gating style as
+                                     # ``telemetry``)
 
 
 class TunableParams(NamedTuple):
@@ -207,6 +216,7 @@ def make_params(
     n_regions_alloc: Optional[int] = None,
     traced_geometry: bool = False,
     telemetry: bool = False,
+    faults: bool = False,
 ) -> MemParams:
     if max_syms < tables.n_ports:
         # the builders' O(1) symbol bit-matrix has true set semantics; the
@@ -266,6 +276,7 @@ def make_params(
         encode_rows_per_cycle=encode_rows_per_cycle,
         traced_geometry=traced_geometry,
         telemetry=telemetry,
+        faults=faults,
     )
 
 
@@ -314,12 +325,15 @@ class MemState(NamedTuple):
     write_latency_sum: jnp.ndarray  # (2,) uint32 wide accumulator
     stall_cycles: jnp.ndarray   # (2,) uint32 wide (core-stall events)
     rc_dropped: jnp.ndarray     # () int32 (recode requests lost to a full ring)
-    # opt-in telemetry planes (repro.obs): None unless MemParams.telemetry —
-    # a None leaf is an empty pytree node, so the telemetry-off carry has
-    # exactly the pre-telemetry tree structure and the compiled program is
-    # unchanged. MUST stay the last field (older pickled/positional states
-    # keep their layout).
+    # opt-in leaves: None unless the matching MemParams flag is set — a None
+    # leaf is an empty pytree node, so the flags-off carry has exactly the
+    # pre-flag tree structure and the compiled program is unchanged. These
+    # MUST stay the trailing fields, in this order (older pickled/positional
+    # states keep their layout; new opt-in leaves append after ``fault``).
     tele: Optional[Telemetry] = None
+    # fault-injection schedule + progress (repro.faults): None unless
+    # MemParams.faults
+    fault: Optional[FaultState] = None
 
 
 def _concrete_int(x) -> Optional[int]:
@@ -331,7 +345,8 @@ def _concrete_int(x) -> Optional[int]:
 
 
 def init_state(p: MemParams, tn: Optional[TunableParams] = None,
-               region_priors=None, n_cores: int = 8) -> MemState:
+               region_priors=None, n_cores: int = 8,
+               fault_plan: Optional[FaultPlan] = None) -> MemState:
     """Initial controller state.
 
     With ``tn`` (the batched-sweep path), the point's *active* geometry
@@ -349,7 +364,22 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None,
 
     ``n_cores`` only sizes the telemetry provenance planes; the
     telemetry-off state does not depend on it.
+
+    ``fault_plan`` (a ``repro.faults.FaultPlan``) installs a bank-erasure /
+    port-stutter schedule; requires ``MemParams.faults``. With the flag on
+    but no plan, the no-fault schedule is carried (nothing ever fails) —
+    same compiled program, schedule-only difference.
     """
+    if fault_plan is not None and not p.faults:
+        raise ValueError("init_state got a fault_plan but the system was "
+                         "built without make_params(faults=True) — the "
+                         "schedule would be silently ignored")
+    if fault_plan is not None and (fault_plan.n_data != p.n_data
+                                   or fault_plan.n_ports != p.n_ports):
+        raise ValueError(
+            f"FaultPlan geometry ({fault_plan.n_data} data banks, "
+            f"{fault_plan.n_ports} ports) does not match MemParams "
+            f"({p.n_data}, {p.n_ports})")
     if tn is not None and not p.traced_geometry:
         # a non-traced system ignores the geometry actives entirely — reject
         # explicit values that disagree with the allocation instead of
@@ -430,4 +460,7 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None,
         rc_dropped=z,
         tele=(init_telemetry(p.n_data, n_cores, p.queue_depth)
               if p.telemetry else None),
+        fault=((fault_plan.state() if fault_plan is not None
+                else init_fault_state(p.n_data, p.n_ports))
+               if p.faults else None),
     )

@@ -36,6 +36,8 @@ from repro.core.recoding import recode_step
 from repro.core.state import (MemParams, MemState, TunableParams,
                               active_geometry, init_state, make_tunables,
                               wide_add, wide_total)
+from repro.faults import inject as finject
+from repro.faults import plan as fplan
 from repro.obs import planes as obs
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
@@ -93,10 +95,18 @@ def quiescent(st: "SimState") -> jnp.ndarray:
     shared by the sweep engine's batched early exit, ``run_chunk``'s
     chunk-exit, and the streaming drivers — new drain conditions must land
     here, not in per-caller copies. Works on single and batched states
-    (trailing-axis reduction over the ring)."""
+    (trailing-axis reduction over the ring).
+
+    With fault injection on, a point also isn't quiescent while a
+    scheduled fault event (a pending failure, or a failure with a recovery
+    whose rebuild hasn't completed) can still change observable state —
+    see ``repro.faults.inject.quiescent_fault_pending``."""
     m = st.mem
-    return ((st.done_cycle >= 0) & (m.enc_region < 0)
-            & ~jnp.any(m.rc_valid, axis=-1))
+    q = ((st.done_cycle >= 0) & (m.enc_region < 0)
+         & ~jnp.any(m.rc_valid, axis=-1))
+    if m.fault is not None:
+        q = q & ~finject.quiescent_fault_pending(m.fault, m.cycle)
+    return q
 
 
 class CycleOut(NamedTuple):
@@ -130,6 +140,14 @@ class SimResult(NamedTuple):
     # single-shot results.
     window_read_latency: tuple = ()
     window_write_latency: tuple = ()
+    # fault-injection availability stats (repro.faults); all 0 when the
+    # ``faults`` flag is off, so pre-fault result comparisons are unaffected
+    unserved_reads: int = 0      # reads fail-fast-dropped (unservable)
+    lost_writes: int = 0         # writes dropped with no parity coverage
+    fault_degraded_reads: int = 0  # reads served degraded because their
+                                   # bank was down (subset of degraded_reads)
+    dead_bank_cycles: int = 0    # sum over banks of cycles spent down
+                                 # (counted until the workload drains)
 
 
 def result_from_host(m: MemState, done_cycle) -> SimResult:
@@ -139,6 +157,7 @@ def result_from_host(m: MemState, done_cycle) -> SimResult:
     dc = int(done_cycle)
     sr = int(m.served_reads)
     sw = int(m.served_writes)
+    f = m.fault
     return SimResult(
         cycles=dc if dc >= 0 else int(m.cycle),
         completed=dc >= 0,
@@ -152,6 +171,10 @@ def result_from_host(m: MemState, done_cycle) -> SimResult:
         avg_read_latency=wide_total(m.read_latency_sum) / max(sr, 1),
         avg_write_latency=wide_total(m.write_latency_sum) / max(sw, 1),
         rc_dropped=int(m.rc_dropped),
+        unserved_reads=int(f.unserved_reads) if f is not None else 0,
+        lost_writes=int(f.lost_writes) if f is not None else 0,
+        fault_degraded_reads=int(f.fault_degraded) if f is not None else 0,
+        dead_bank_cycles=int(np.sum(f.dead_cycles)) if f is not None else 0,
     )
 
 
@@ -175,15 +198,17 @@ class CodedMemorySystem:
 
     # ------------------------------------------------------------------ init
     def init(self, tn: Optional[TunableParams] = None,
-             region_priors=None) -> SimState:
+             region_priors=None, fault_plan=None) -> SimState:
         """Initial state; ``tn`` masks a padded group allocation down to the
         point's active geometry (see ``init_state``). ``region_priors`` is a
         ranked array of hot region ids (e.g. from
         ``repro.traces.profiler``) pre-mapped into parity slots so the
-        dynamic coding unit starts warm instead of cold."""
+        dynamic coding unit starts warm instead of cold. ``fault_plan``
+        installs a ``repro.faults.FaultPlan`` erasure/stutter schedule
+        (requires ``make_params(faults=True)``)."""
         return SimState(
             mem=init_state(self.p, tn, region_priors=region_priors,
-                           n_cores=self.n_cores),
+                           n_cores=self.n_cores, fault_plan=fault_plan),
             core_ptr=jnp.zeros((self.n_cores,), jnp.int32),
             done_cycle=jnp.int32(-1),
         )
@@ -367,7 +392,7 @@ class CodedMemorySystem:
             tn = self.tunables
         # the point's own region geometry (== the allocation unless this
         # program serves a padded sweep group, see state.active_geometry)
-        rs_a, _ = active_geometry(p, tn)
+        rs_a, nr_a = active_geometry(p, tn)
         # once the workload has drained there is no traffic to react to: the
         # dynamic unit stops starting encodes, so the system reaches a
         # quiescent fixed point (done + recode empty + encoder idle) that
@@ -388,6 +413,38 @@ class CodedMemorySystem:
         n_cand = p.n_data * p.queue_depth
         port_busy0 = jnp.zeros((p.n_ports + 1,), bool)
         bank_ids = jnp.repeat(jnp.arange(p.n_data, dtype=jnp.int32), p.queue_depth)
+
+        # ---- fault injection (repro.faults): derive this cycle's fault
+        # predicates, count dead cycles, fail-fast-drop unservable queue
+        # entries, and seed the builders' port mask so a down bank's port
+        # reads permanently busy (and stuttering ports transiently busy).
+        # Ordering matters and is mirrored exactly by the oracle: drops land
+        # after the arbiter (the request was accepted and counted) and
+        # before the write-drain hysteresis reads queue occupancy.
+        if p.faults:
+            fs = m.fault
+            down = fplan.bank_down(fs, m.cycle)
+            rebuilding = fplan.bank_rebuilding(fs, m.cycle)
+            down_hard = down & ~rebuilding
+            stut = fplan.stutter_busy(fs, m.cycle)
+            # dead cycles are counted until the workload drains (afterwards
+            # a permanently-dead bank would count forever, breaking the
+            # quiescent fixed point the early-exit paths rely on)
+            dead_inc = (down & ~was_done).astype(jnp.uint32)
+            rq_v2, wq_v2, n_uns, n_lost = finject.drop_unservable(
+                p, t, down_hard, m.rq_row, m.rq_valid, m.wq_row, m.wq_valid,
+                m.fresh_loc, m.parity_valid, m.region_slot, rs_a)
+            fs = fs._replace(
+                dead_cycles=fs.dead_cycles + dead_inc,
+                unserved_reads=fs.unserved_reads + n_uns,
+                lost_writes=fs.lost_writes + n_lost)
+            m = m._replace(rq_valid=rq_v2, wq_valid=wq_v2, fault=fs)
+            if p.telemetry:
+                m = m._replace(tele=m.tele._replace(
+                    dead_cycles=m.tele.dead_cycles + dead_inc))
+            port_busy0 = port_busy0.at[: p.n_data].set(down)
+            port_busy0 = port_busy0.at[: p.n_ports].set(
+                port_busy0[: p.n_ports] | stut)
 
         # write-drain hysteresis
         wq_occ = jnp.max(jnp.sum(m.wq_valid, axis=1))
@@ -419,6 +476,12 @@ class CodedMemorySystem:
                     plan.mode == ctl.MODE_DIRECT, 0,
                     jnp.where(plan.mode == ctl.MODE_FROM_SYM, 1,
                               jnp.where(plan.mode >= ctl.MODE_REDIRECT, 3, 2)))
+                if p.faults:
+                    # degraded serves whose cause is a down bank get their
+                    # own provenance class (redirects to a parked copy are
+                    # a freshness artifact, not a fault symptom — class 3)
+                    cls = jnp.where(down[cb] & ((cls == 1) | (cls == 2)),
+                                    4, cls)
                 core = jnp.where(plan.served, tele.rq_core.reshape(-1),
                                  jnp.int32(self.n_cores))
                 tele = tele._replace(
@@ -431,12 +494,22 @@ class CodedMemorySystem:
                         jnp.where(cv & ~plan.served, cb, jnp.int32(p.n_data)),
                         obs.WAIT_READ].add(1, mode="drop"),
                 )
+            fault = m.fault
+            if p.faults:
+                deg_f = plan.served & down[cb] & (
+                    (plan.mode == ctl.MODE_FROM_SYM)
+                    | ((plan.mode >= ctl.MODE_OPT0)
+                       & (plan.mode < ctl.MODE_REDIRECT)))
+                fault = fault._replace(
+                    fault_degraded=fault.fault_degraded
+                    + jnp.sum(deg_f).astype(jnp.int32))
             m = m._replace(
                 rq_valid=m.rq_valid & ~plan.served.reshape(p.n_data, p.queue_depth),
                 served_reads=m.served_reads + plan.n_served,
                 degraded_reads=m.degraded_reads + plan.n_degraded,
                 read_latency_sum=wide_add(m.read_latency_sum, lat),
                 tele=tele,
+                fault=fault,
             )
             out = CycleOut(plan.served, cb, ci_, vals, plan.n_served)
             return m, plan.port_busy, out
@@ -450,7 +523,7 @@ class CodedMemorySystem:
             plan = ctl.build_write_pattern(
                 p, t, cb, ci_, ca, cv, port_busy0, m.fresh_loc, m.parity_valid,
                 m.region_slot, m.parked_count, m.rc_bank, m.rc_row, m.rc_valid,
-                rs_a,
+                rs_a, down=down if p.faults else None,
             )
             banks_data, parity_data, golden = self._commit_writes(
                 m, plan, cb, ci_, ca, cv, cd, rs_a)
@@ -503,11 +576,20 @@ class CodedMemorySystem:
         m, port_busy, out = pick(m_w, m_r), pick(pb_w, pb_r), pick(out_w, out_r)
         m = m._replace(write_mode=wm)
 
-        # recoding unit uses leftover ports
+        # recoding unit uses leftover ports. A REBUILDING bank's port is
+        # granted back to it here (and only here): the builders saw it
+        # busy, so the rebuild's restores/recomputes get the port the bank
+        # cannot yet use for service. Stutter still applies.
+        if p.faults:
+            rc_pb = port_busy.at[: p.n_data].set(
+                jnp.where(rebuilding, stut[: p.n_data],
+                          port_busy[: p.n_data]))
+        else:
+            rc_pb = port_busy
         rc = recode_step(
-            p, t, port_busy, m.fresh_loc, m.parity_valid, m.parked_count,
+            p, t, rc_pb, m.fresh_loc, m.parity_valid, m.parked_count,
             m.rc_bank, m.rc_row, m.rc_valid, m.region_slot, m.banks_data,
-            m.parity_data, rs_a,
+            m.parity_data, rs_a, down=down_hard if p.faults else None,
         )
         m = m._replace(
             fresh_loc=rc.fresh_loc, parity_valid=rc.parity_valid,
@@ -526,6 +608,15 @@ class CodedMemorySystem:
                               jnp.int32(p.n_data)),
                     obs.WAIT_RECODE].add(1, mode="drop"),
             ))
+        # online rebuild: sweep cells into the recode ring while any bank
+        # is rebuilding; latch ``rebuilt`` (the bank rejoins) on completion
+        if p.faults:
+            rb_bank, rb_row, rb_valid, fs2 = finject.rebuild_scan(
+                p, t, m.fault, m.cycle, rebuilding, down_hard, m.fresh_loc,
+                m.parity_valid, m.region_slot, m.rc_bank, m.rc_row,
+                m.rc_valid, rs_a, nr_a)
+            m = m._replace(rc_bank=rb_bank, rc_row=rb_row,
+                           rc_valid=rb_valid, fault=fs2)
         # dynamic coding unit
         dy = dynamic_step(
             p, t, tn, m.cycle, m.region_slot, m.slot_region, m.access_count,
@@ -565,12 +656,17 @@ class CodedMemorySystem:
 
     def run(self, trace: Trace, n_cycles: int,
             tn: Optional[TunableParams] = None,
-            st: Optional[SimState] = None) -> SimResult:
+            st: Optional[SimState] = None,
+            fault_plan=None) -> SimResult:
         """Single-shot replay; ``st`` carries in an explicit initial state
-        (the chunked-replay driver threads states the same way)."""
+        (the chunked-replay driver threads states the same way).
+        ``fault_plan`` installs an erasure/stutter schedule on the fresh
+        initial state (ignored when ``st`` is given — put the plan in the
+        state you pass)."""
         tn = tn if tn is not None else self.tunables
-        st, _ = self._run(st if st is not None else self.init(tn),
-                          trace, n_cycles, tn)
+        st, _ = self._run(
+            st if st is not None else self.init(tn, fault_plan=fault_plan),
+            trace, n_cycles, tn)
         return self.summarize(st)
 
     # ----------------------------------------------------------- chunked run

@@ -1,0 +1,9 @@
+"""Bank-fault injection, erasure-degraded serving, and online rebuild."""
+from repro.faults.plan import (NEVER, FaultPlan, FaultState, bank_down,
+                               bank_rebuilding, init_fault_state,
+                               plan_from_spec, stutter_busy)
+
+__all__ = [
+    "NEVER", "FaultPlan", "FaultState", "bank_down", "bank_rebuilding",
+    "init_fault_state", "plan_from_spec", "stutter_busy",
+]

@@ -1,0 +1,191 @@
+"""Fault model: per-bank erasure schedules and transient port stutters.
+
+A *fault plan* is a static schedule attached to one simulation run:
+
+* **Bank erasure** — data bank ``b`` fails at ``fail_at[b]`` (its single
+  port becomes permanently busy; its stored rows become unreadable) and
+  optionally begins recovery at ``recover_at[b]``. A recovering bank's rows
+  are rebuilt through the ReCoding ring (see ``repro.faults.inject`` and
+  ``repro.core.recoding``); the bank rejoins normal service only once the
+  rebuild sweep completes (``rebuilt[b]`` latches). Only data banks fail —
+  parity banks are the redundancy the paper's schemes spend area on, and a
+  lost parity is silent (never read unless degraded) rather than
+  availability-relevant.
+* **Port stutter** — port ``q`` (data or parity) is transiently busy one
+  cycle out of every ``stutter_period[q]`` (at phase ``stutter_phase[q]``),
+  modelling refresh/calibration hiccups. Stutters never lose data.
+
+The schedule and the mutable progress/counters ride the scan carry as a
+``FaultState`` leaf of ``MemState`` behind the static ``MemParams.faults``
+flag: faults off ⇒ the leaf is ``None`` (an empty pytree node) and the
+compiled program is bit-identical to one built before faults existed — the
+exact gating trick ``telemetry`` and ``traced_geometry`` use. Carrying the
+(constant) schedule arrays in the state is what lets a vmapped sweep batch
+*different* fault plans through one compiled program.
+
+This module must stay importable by ``repro.core.state`` (the leaf type),
+so it imports **nothing from repro** — only jax/numpy. The NumPy golden
+model re-derives every rule independently in ``repro.oracle.model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+INT32_MAX = np.iinfo(np.int32).max
+NEVER = INT32_MAX   # fail_at / recover_at sentinel: the event never happens
+
+
+class FaultState(NamedTuple):
+    """Per-point fault schedule + progress (jnp arrays; a scan-carry leaf).
+
+    The schedule half (``fail_at`` … ``stutter_phase``) is constant over a
+    run; the rest mutates each cycle. All derived per-cycle predicates
+    (down / rebuilding / stutter) are pure functions of this leaf and the
+    cycle counter — see ``bank_down`` etc. below.
+    """
+
+    fail_at: jnp.ndarray         # (n_data,) int32; NEVER = no failure
+    recover_at: jnp.ndarray      # (n_data,) int32; NEVER = no recovery
+    stutter_period: jnp.ndarray  # (n_ports,) int32; 0 = no stutter
+    stutter_phase: jnp.ndarray   # (n_ports,) int32
+    rebuilt: jnp.ndarray         # (n_data,) bool — rebuild-complete latch
+    rebuild_ptr: jnp.ndarray     # () int32 — flat (bank*n_rows+row) sweep
+                                 # cursor of the online rebuild scanner
+    unserved_reads: jnp.ndarray  # () int32 — reads failed fast (no serving
+                                 # option exists under the current faults)
+    lost_writes: jnp.ndarray     # () int32 — writes to a down bank with no
+                                 # parity coverage to park into (data loss)
+    fault_degraded: jnp.ndarray  # () int32 — reads degraded *because* their
+                                 # bank is down (subset of degraded_reads)
+    dead_cycles: jnp.ndarray     # (n_data,) uint32 — cycles spent down
+
+
+def init_fault_state(n_data: int, n_ports: int) -> FaultState:
+    """The no-fault schedule (nothing ever fails or stutters)."""
+    return FaultState(
+        fail_at=jnp.full((n_data,), NEVER, jnp.int32),
+        recover_at=jnp.full((n_data,), NEVER, jnp.int32),
+        stutter_period=jnp.zeros((n_ports,), jnp.int32),
+        stutter_phase=jnp.zeros((n_ports,), jnp.int32),
+        rebuilt=jnp.zeros((n_data,), bool),
+        rebuild_ptr=jnp.int32(0),
+        unserved_reads=jnp.int32(0),
+        lost_writes=jnp.int32(0),
+        fault_degraded=jnp.int32(0),
+        dead_cycles=jnp.zeros((n_data,), jnp.uint32),
+    )
+
+
+# --------------------------------------------------- per-cycle predicates
+def bank_down(f: FaultState, cycle) -> jnp.ndarray:
+    """(n_data,) — failed and not yet fully rebuilt (dead OR rebuilding);
+    the pattern builders treat a down bank's port as permanently busy."""
+    return (f.fail_at <= cycle) & ~f.rebuilt
+
+
+def bank_rebuilding(f: FaultState, cycle) -> jnp.ndarray:
+    """(n_data,) — recovery has begun but the rebuild sweep hasn't finished.
+    The bank stays down for the builders; only the ReCoding unit may use
+    its port (restoring parked rows / recomputing stale parities)."""
+    return bank_down(f, cycle) & (f.recover_at <= cycle)
+
+
+def stutter_busy(f: FaultState, cycle) -> jnp.ndarray:
+    """(n_ports,) — transiently busy ports this cycle."""
+    per = f.stutter_period
+    return (per > 0) & (cycle % jnp.maximum(per, 1) == f.stutter_phase)
+
+
+# ------------------------------------------------------- host-side plans
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Hashable host-side fault schedule (the sweep-axis value).
+
+    ``bank_faults`` — ``(bank, fail_at, recover_at)`` triples; ``recover_at
+    < 0`` means the bank never recovers. ``stutters`` — ``(port, period,
+    phase)`` triples. Build from a flat spec tuple (the ``SweepPoint.faults``
+    grammar) with ``from_spec``; lower to the device leaf with ``state()``.
+    """
+
+    n_data: int
+    n_ports: int
+    bank_faults: Tuple[Tuple[int, int, int], ...] = ()
+    stutters: Tuple[Tuple[int, int, int], ...] = ()
+
+    def __post_init__(self):
+        for b, fail, rec in self.bank_faults:
+            if not 0 <= b < self.n_data:
+                raise ValueError(f"fault bank {b} out of range "
+                                 f"[0, {self.n_data})")
+            if fail < 0:
+                raise ValueError(f"bank {b}: fail_at={fail} < 0")
+            if 0 <= rec <= fail:
+                raise ValueError(
+                    f"bank {b}: recover_at={rec} <= fail_at={fail}")
+        seen = set()
+        for b, _, _ in self.bank_faults:
+            if b in seen:
+                raise ValueError(f"bank {b} listed twice in bank_faults")
+            seen.add(b)
+        for q, per, ph in self.stutters:
+            if not 0 <= q < self.n_ports:
+                raise ValueError(f"stutter port {q} out of range "
+                                 f"[0, {self.n_ports})")
+            if per <= 0 or not 0 <= ph < per:
+                raise ValueError(
+                    f"port {q}: need period > 0 and 0 <= phase < period "
+                    f"(got period={per}, phase={ph})")
+
+    @staticmethod
+    def from_spec(spec: Tuple, n_data: int, n_ports: int) -> "FaultPlan":
+        """Parse the flat ``SweepPoint.faults`` grammar:
+        ``("bank", b, fail_at[, recover_at])`` and
+        ``("stutter", port, period[, phase])`` entries."""
+        banks, stutters = [], []
+        for entry in spec:
+            kind, rest = entry[0], entry[1:]
+            if kind == "bank":
+                b, fail = int(rest[0]), int(rest[1])
+                rec = int(rest[2]) if len(rest) > 2 else -1
+                banks.append((b, fail, rec))
+            elif kind == "stutter":
+                q, per = int(rest[0]), int(rest[1])
+                ph = int(rest[2]) if len(rest) > 2 else 0
+                stutters.append((q, per, ph))
+            else:
+                raise ValueError(f"unknown fault spec entry kind {kind!r} "
+                                 "(want 'bank' or 'stutter')")
+        return FaultPlan(n_data=n_data, n_ports=n_ports,
+                         bank_faults=tuple(banks), stutters=tuple(stutters))
+
+    # ---- numpy schedule arrays (shared with the oracle's mirror)
+    def schedule_arrays(self):
+        fail = np.full(self.n_data, NEVER, np.int32)
+        rec = np.full(self.n_data, NEVER, np.int32)
+        per = np.zeros(self.n_ports, np.int32)
+        ph = np.zeros(self.n_ports, np.int32)
+        for b, f_at, r_at in self.bank_faults:
+            fail[b] = f_at
+            rec[b] = r_at if r_at >= 0 else NEVER
+        for q, p_, ph_ in self.stutters:
+            per[q] = p_
+            ph[q] = ph_
+        return fail, rec, per, ph
+
+    def state(self) -> FaultState:
+        fail, rec, per, ph = self.schedule_arrays()
+        return init_fault_state(self.n_data, self.n_ports)._replace(
+            fail_at=jnp.asarray(fail), recover_at=jnp.asarray(rec),
+            stutter_period=jnp.asarray(per), stutter_phase=jnp.asarray(ph))
+
+
+def plan_from_spec(spec: Optional[Tuple], n_data: int,
+                   n_ports: int) -> Optional[FaultPlan]:
+    """None/() → None (no plan); otherwise ``FaultPlan.from_spec``."""
+    if not spec:
+        return None
+    return FaultPlan.from_spec(tuple(spec), n_data, n_ports)

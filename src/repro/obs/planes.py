@@ -53,7 +53,10 @@ import numpy as np
 
 STALL_CAUSES = ("read_queue_full", "write_queue_full")
 WAIT_CAUSES = ("read_conflict", "write_conflict", "recode_pending")
-READ_CLASSES = ("direct", "from_sym", "parity_decode", "redirect")
+# ``degraded_fault``: a from_sym/parity-decode serve whose cause is a DOWN
+# bank (fault injection, repro.faults) rather than ordinary port contention
+READ_CLASSES = ("direct", "from_sym", "parity_decode", "redirect",
+                "degraded_fault")
 WRITE_CLASSES = ("direct", "parked")
 WAIT_READ, WAIT_WRITE, WAIT_RECODE = range(len(WAIT_CAUSES))
 HIST_BINS = 16
@@ -64,7 +67,7 @@ class Telemetry(NamedTuple):
 
     stall_cause: jnp.ndarray      # (n_data, 2) uint32
     wait_cause: jnp.ndarray       # (n_data, 3) uint32
-    read_mode_core: jnp.ndarray   # (n_cores, 4) uint32
+    read_mode_core: jnp.ndarray   # (n_cores, 5) uint32
     write_mode_core: jnp.ndarray  # (n_cores, 2) uint32
     rq_hwm: jnp.ndarray           # (n_data,) int32
     wq_hwm: jnp.ndarray           # (n_data,) int32
@@ -73,6 +76,9 @@ class Telemetry(NamedTuple):
     recode_retired: jnp.ndarray   # () uint32
     rq_core: jnp.ndarray          # (n_data, queue_depth) int32 provenance
     wq_core: jnp.ndarray          # (n_data, queue_depth) int32 provenance
+    # per-bank cycles spent down (fault injection; mirrors
+    # FaultState.dead_cycles exactly — all-zero when faults are off)
+    dead_cycles: jnp.ndarray      # (n_data,) uint32
 
 
 def init_telemetry(n_data: int, n_cores: int, queue_depth: int) -> Telemetry:
@@ -88,6 +94,7 @@ def init_telemetry(n_data: int, n_cores: int, queue_depth: int) -> Telemetry:
         recode_retired=jnp.zeros((), jnp.uint32),
         rq_core=jnp.full((n_data, queue_depth), -1, jnp.int32),
         wq_core=jnp.full((n_data, queue_depth), -1, jnp.int32),
+        dead_cycles=jnp.zeros((n_data,), jnp.uint32),
     )
 
 
@@ -144,7 +151,13 @@ class TelemetrySnapshot:
 
     def degraded_reads(self) -> int:
         by = self.reads_by_class()
-        return by["from_sym"] + by["parity_decode"]
+        return by["from_sym"] + by["parity_decode"] + by["degraded_fault"]
+
+    def fault_degraded_reads(self) -> int:
+        return self.reads_by_class()["degraded_fault"]
+
+    def dead_bank_cycles(self) -> int:
+        return int(self.dead_cycles.sum())
 
     def parked_writes(self) -> int:
         return self.writes_by_class()["parked"]
@@ -166,6 +179,8 @@ class TelemetrySnapshot:
             "wait_by_cause": self.wait_by_cause(),
             "reads_by_class": self.reads_by_class(),
             "writes_by_class": self.writes_by_class(),
+            "fault_degraded_reads": self.fault_degraded_reads(),
+            "dead_bank_cycles": self.dead_bank_cycles(),
         }
         return out
 

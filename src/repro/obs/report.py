@@ -63,6 +63,9 @@ def _check_against_result(pt, res, snap) -> None:
         ("served_writes", snap.served_writes(), res.served_writes),
         ("degraded_reads", snap.degraded_reads(), res.degraded_reads),
         ("parked_writes", snap.parked_writes(), res.parked_writes),
+        ("fault_degraded_reads", snap.fault_degraded_reads(),
+         res.fault_degraded_reads),
+        ("dead_bank_cycles", snap.dead_bank_cycles(), res.dead_bank_cycles),
     ]
     for name, plane, agg in pairs:
         if int(plane) != int(agg):
@@ -216,6 +219,102 @@ def stall_report(suite_name: str = "paper_fig18", *,
             "results": results, "snapshots": snaps}
 
 
+def availability_report(suite_name: str = "paper_fig18", *,
+                        faults=(("bank", 0, 0),), base=None,
+                        out_dir: str = "experiments/obs",
+                        smoke: bool = False, **suite_kw) -> Dict:
+    """Degraded-serving report: run ``suite_name`` with a fault plan
+    installed on every point (default: data bank 0 dead from cycle 0) and
+    telemetry on, and render the availability view — reads served vs
+    failed fast, writes lost, the fault-degraded share, and per-bank
+    dead-cycle counters. The planes are cross-checked against the
+    ``SimResult`` aggregates exactly like ``stall_report``. Returns the
+    same ``{"md_path", "json_path", "points", "results", "snapshots"}``."""
+    from repro.obs.runlog import run_manifest
+    from repro.sweep.engine import run_points
+    from repro.sweep.grid import SweepPoint
+    from repro.sweep.workloads import build_trace, suite
+
+    if base is None:
+        base = SweepPoint(length=32, n_rows=64) if smoke else \
+            SweepPoint(length=96, n_rows=128)
+    kw = dict(_SMOKE_KW.get(suite_name, {})) if smoke else {}
+    kw.update(suite_kw)
+    pts = [pt.replace(telemetry=True, faults=tuple(faults))
+           for pt in suite(suite_name, base, **kw)]
+    traces = [build_trace(pt, index=i) for i, pt in enumerate(pts)]
+    results, snaps = run_points(pts, traces=traces, collect_telemetry=True)
+    for pt, res, snap in zip(pts, results, snaps):
+        if snap is None:
+            raise AssertionError(f"telemetry-on point returned no snapshot: "
+                                 f"{pt.scheme} alpha={pt.alpha}")
+        _check_against_result(pt, res, snap)
+
+    manifest = run_manifest(config={"suite": suite_name, "smoke": smoke,
+                                    "faults": list(map(list, faults)),
+                                    "n_points": len(pts)})
+    lines = [f"# Fault availability — {suite_name}", "",
+             f"git `{manifest['git_sha'][:12]}` · "
+             f"{manifest['created_iso']} · "
+             f"{manifest['devices']['backend']} backend · "
+             f"{len(pts)} points · fault plan `{tuple(faults)}`"
+             + (" · smoke" if smoke else ""), "",
+             "A read is *unserved* when the fail-fast drop found no serving "
+             "option under the failures; a write is *lost* when its bank is "
+             "down with no parity coverage to park into. *Fault-degraded* "
+             "reads were served through parity because their bank was down "
+             "— availability the coding bought.", "",
+             "## Per-point availability", ""]
+    rows = []
+    for pt, res, snap in zip(pts, results, snaps):
+        issued_r = res.served_reads + res.unserved_reads
+        issued_w = res.served_writes + res.lost_writes
+        rows.append([
+            pt.scheme, f"{pt.alpha:g}", f"{pt.r:g}", str(res.cycles),
+            _pct(res.served_reads, issued_r), str(res.unserved_reads),
+            str(res.lost_writes),
+            _pct(snap.fault_degraded_reads(), res.served_reads),
+            str(res.dead_bank_cycles),
+        ])
+    lines += _md_table(
+        ["scheme", "alpha", "r", "cycles", "reads served", "unserved",
+         "lost wr", "fault-degraded", "dead cycles"], rows)
+
+    # per-bank dead-cycle heat for the point with the most dead cycles
+    ex = max(range(len(pts)),
+             key=lambda i: int(snaps[i].dead_cycles.sum()))
+    expt, snap = pts[ex], snaps[ex]
+    lines += ["", f"## Per-bank dead cycles — `{expt.scheme}` "
+              f"alpha={expt.alpha:g} r={expt.r:g}", ""]
+    vmax = int(max(snap.dead_cycles.max(), 1))
+    lines += _md_table(
+        ["bank", "dead cycles", ""],
+        [[str(b), str(int(snap.dead_cycles[b])),
+          _bar(int(snap.dead_cycles[b]), vmax)]
+         for b in range(snap.dead_cycles.shape[0])])
+    lines.append("")
+
+    os.makedirs(out_dir, exist_ok=True)
+    md_path = os.path.join(out_dir, f"availability_{suite_name}.md")
+    with open(md_path, "w") as f:
+        f.write("\n".join(lines))
+    json_path = os.path.join(out_dir, f"availability_{suite_name}.json")
+    blob = {"suite": suite_name, "manifest": manifest,
+            "points": [{"scheme": pt.scheme, "alpha": pt.alpha, "r": pt.r,
+                        "seed": pt.seed, "label": pt.label,
+                        "cycles": int(res.cycles),
+                        "unserved_reads": int(res.unserved_reads),
+                        "lost_writes": int(res.lost_writes),
+                        "fault_degraded_reads": int(res.fault_degraded_reads),
+                        "dead_bank_cycles": int(res.dead_bank_cycles),
+                        "telemetry": snap.as_dict()}
+                       for pt, res, snap in zip(pts, results, snaps)]}
+    with open(json_path, "w") as f:
+        json.dump(blob, f, default=float)
+    return {"md_path": md_path, "json_path": json_path, "points": pts,
+            "results": results, "snapshots": snaps}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--suite", default="paper_fig18",
@@ -223,8 +322,12 @@ def main(argv=None) -> int:
     ap.add_argument("--out-dir", default="experiments/obs")
     ap.add_argument("--smoke", action="store_true",
                     help="trimmed axes + tiny trace (CI artifact smoke)")
+    ap.add_argument("--availability", action="store_true",
+                    help="fault-availability report (repro.faults) instead "
+                         "of stall attribution")
     args = ap.parse_args(argv)
-    out = stall_report(args.suite, out_dir=args.out_dir, smoke=args.smoke)
+    fn = availability_report if args.availability else stall_report
+    out = fn(args.suite, out_dir=args.out_dir, smoke=args.smoke)
     n = len(out["points"])
     print(f"wrote {out['md_path']} and {out['json_path']} ({n} points, "
           f"planes == aggregates verified)")

@@ -99,6 +99,11 @@ class OracleParams:
     # planes (OracleTelemetry) so the conformance suite can assert the
     # production planes against a second implementation
     telemetry: bool = False
+    # mirror of MemParams.faults: carry an independently-derived fault
+    # schedule/progress leaf (OracleFaultState) re-deriving every rule of
+    # repro.faults sequentially — erasure-degraded serving, fail-fast
+    # drops, port stutters and the online rebuild sweep
+    faults: bool = False
 
     @property
     def rs_active(self) -> int:
@@ -188,6 +193,11 @@ class OracleResult(NamedTuple):
     rc_dropped: int = 0
     window_read_latency: tuple = ()
     window_write_latency: tuple = ()
+    # fault-injection availability stats (mirrors SimResult; 0 = faults off)
+    unserved_reads: int = 0
+    lost_writes: int = 0
+    fault_degraded_reads: int = 0
+    dead_bank_cycles: int = 0
 
 
 # telemetry histogram geometry — independently fixed here (NOT imported from
@@ -209,8 +219,8 @@ class OracleTelemetry:
 
     stall_cause: np.ndarray       # (n_data, 2) {read,write}-queue-full
     wait_cause: np.ndarray        # (n_data, 3) {read,write,recode} waits
-    read_mode_core: np.ndarray    # (n_cores, 4) {direct,from_sym,parity,
-                                  #               redirect}
+    read_mode_core: np.ndarray    # (n_cores, 5) {direct,from_sym,parity,
+                                  #               redirect,degraded_fault}
     write_mode_core: np.ndarray   # (n_cores, 2) {direct, parked}
     rq_hwm: np.ndarray            # (n_data,) post-arbiter high-water marks
     wq_hwm: np.ndarray
@@ -219,6 +229,7 @@ class OracleTelemetry:
     recode_retired: int
     rq_core: np.ndarray           # (n_data, D) issuing-core provenance
     wq_core: np.ndarray
+    dead_cycles: np.ndarray       # (n_data,) per-bank cycles spent down
 
 
 def _init_oracle_telemetry(n_data: int, n_cores: int,
@@ -226,12 +237,55 @@ def _init_oracle_telemetry(n_data: int, n_cores: int,
     z = lambda *s: np.zeros(s, np.int64)                      # noqa: E731
     return OracleTelemetry(
         stall_cause=z(n_data, 2), wait_cause=z(n_data, 3),
-        read_mode_core=z(n_cores, 4), write_mode_core=z(n_cores, 2),
+        read_mode_core=z(n_cores, 5), write_mode_core=z(n_cores, 2),
         rq_hwm=z(n_data), wq_hwm=z(n_data),
         lat_hist_read=z(ORACLE_HIST_BINS), lat_hist_write=z(ORACLE_HIST_BINS),
         recode_retired=0,
         rq_core=np.full((n_data, queue_depth), -1, np.int64),
         wq_core=np.full((n_data, queue_depth), -1, np.int64),
+        dead_cycles=z(n_data),
+    )
+
+
+@dataclasses.dataclass
+class OracleFaultState:
+    """Golden-model fault schedule + progress (fields named like the
+    production ``repro.faults.plan.FaultState`` leaf, so conformance
+    compares by name). The schedule half is constant over a run; the rest
+    mutates each cycle. Semantics are re-derived sequentially in
+    ``OracleMemorySystem.cycle`` — only the *schedule arrays* come from the
+    host-side plan (input data, like the trace), never the rules."""
+
+    fail_at: np.ndarray          # (n_data,) int32; INT32_MAX = never
+    recover_at: np.ndarray       # (n_data,) int32; INT32_MAX = never
+    stutter_period: np.ndarray   # (n_ports,) int32; 0 = no stutter
+    stutter_phase: np.ndarray    # (n_ports,) int32
+    rebuilt: np.ndarray          # (n_data,) bool — rebuild-complete latch
+    rebuild_ptr: int             # flat (bank*n_rows+row) sweep cursor
+    unserved_reads: int          # reads failed fast (no serving option)
+    lost_writes: int             # writes dropped with no parity coverage
+    fault_degraded: int          # reads degraded *because* bank down
+    dead_cycles: np.ndarray      # (n_data,) cycles spent down
+
+
+def _init_oracle_fault(n_data: int, n_ports: int,
+                       fault_plan=None) -> OracleFaultState:
+    """No-fault schedule, or the one in ``fault_plan`` (duck-typed: any
+    object with a numpy ``schedule_arrays()`` — the production
+    ``repro.faults.FaultPlan``; the oracle imports nothing from it)."""
+    if fault_plan is not None:
+        fail, rec, per, ph = (np.array(a, np.int32)
+                              for a in fault_plan.schedule_arrays())
+    else:
+        fail = np.full(n_data, INT32_MAX, np.int32)
+        rec = np.full(n_data, INT32_MAX, np.int32)
+        per = np.zeros(n_ports, np.int32)
+        ph = np.zeros(n_ports, np.int32)
+    return OracleFaultState(
+        fail_at=fail, recover_at=rec, stutter_period=per, stutter_phase=ph,
+        rebuilt=np.zeros(n_data, bool), rebuild_ptr=0,
+        unserved_reads=0, lost_writes=0, fault_degraded=0,
+        dead_cycles=np.zeros(n_data, np.int64),
     )
 
 
@@ -276,6 +330,7 @@ class OracleState:
     core_ptr: np.ndarray
     done_cycle: int
     tele: Optional[OracleTelemetry] = None
+    fault: Optional[OracleFaultState] = None
 
 
 class OracleCycleOut(NamedTuple):
@@ -380,8 +435,18 @@ def _rc_push(rc_bank, rc_row, rc_valid, b: int, i: int) -> bool:
 def build_write_plan(sys: "OracleMemorySystem", cand_bank, cand_row, cand_age,
                      cand_valid, port_busy, fresh_loc, parity_valid,
                      region_slot, parked_count, rc_bank, rc_row, rc_valid,
-                     rs_active: Optional[int] = None) -> OracleWritePlan:
-    """Greedy oldest-first write matcher (paper Fig 14 / §IV-C)."""
+                     rs_active: Optional[int] = None,
+                     down=None) -> OracleWritePlan:
+    """Greedy oldest-first write matcher (paper Fig 14 / §IV-C).
+
+    ``down`` (fault injection): currently-down data banks. A candidate is
+    *sticky* when its own bank is down or a covering parity has a down
+    member — its park stays parked (no recode request) until the rebuild
+    sweep drains it, and scoring prefers (a) normal parks, (b) parks into
+    all-alive parities, (c) parks into down-covering parities, (d) a direct
+    write, strictly last for a sticky-but-alive bank. Sticky parks waive
+    the recode-space requirement. Mirrors the production builder's
+    degraded-write mode (``repro.core.controller``)."""
     p, sch = sys.p, sys.scheme
     rs = p.region_size
     rs_a = rs if rs_active is None else int(rs_active)
@@ -407,19 +472,32 @@ def build_write_plan(sys: "OracleMemorySystem", cand_bank, cand_row, cand_age,
         pr = max(slot, 0) * rs + i % rs_a
         fl = int(fresh_loc[b, i])
         rc_space = bool((~rc_valid).any())
+        sticky = False
+        if down is not None:
+            sticky = bool(down[b]) or (coded and any(
+                any(down[m] for m in sch.members[j] if m != b)
+                for j, _s in sys.options[b]))
         acts: List[Tuple[int, int, int]] = []
         if not port_busy[b]:
-            acts.append((1, WMODE_DIRECT, -1))
+            acts.append((2 + 2 * MAX_OPTS + 2 if sticky else 1,
+                         WMODE_DIRECT, -1))
         for k, (j, _sibs) in enumerate(sys.options[b]):
             # park the raw value into parity j's row: region coded, parity
             # port free, the row slot not held by ANOTHER member's parked
-            # value, and recode space so it can always drain back
-            if not coded or port_busy[sch.par_port(j)] or not rc_space:
+            # value, and recode space so it can always drain back (sticky
+            # parks don't enqueue, so they waive the space requirement)
+            if not coded or port_busy[sch.par_port(j)]:
+                continue
+            if not (rc_space or sticky):
                 continue
             if any(fresh_loc[m, i] == j + 1
                    for m in sch.members[j] if m != b):
                 continue
-            acts.append((2 + k, WMODE_PARK0 + k, j))
+            shift = 0
+            if down is not None and any(down[m] for m in sch.members[j]
+                                        if m != b):
+                shift = MAX_OPTS + 2
+            acts.append((2 + k + shift, WMODE_PARK0 + k, j))
         if not acts:
             continue
         _, act, j_sel = min(acts, key=lambda a: (a[0], a[1]))
@@ -441,7 +519,9 @@ def build_write_plan(sys: "OracleMemorySystem", cand_bank, cand_row, cand_age,
             if not was_parked:
                 parked_count[region] += 1
             parity_valid[j_sel, pr] = False
-            need_rc = True
+            # a sticky park stays parked: the rebuild sweep enqueues it
+            # once its down parity-group member is recovering
+            need_rc = not sticky
         if need_rc and not _rc_push(rc_bank, rc_row, rc_valid, b, i):
             dropped += 1
     port_busy[sch.n_ports] = True
@@ -455,8 +535,15 @@ def build_write_plan(sys: "OracleMemorySystem", cand_bank, cand_row, cand_age,
 def recode_step(sys: "OracleMemorySystem", port_busy, fresh_loc, parity_valid,
                 parked_count, rc_bank, rc_row, rc_valid, region_slot,
                 banks_data, parity_data,
-                rs_active: Optional[int] = None) -> OracleRecodeOut:
-    """Sequential ring scan retiring ≤ ``recode_budget`` entries (§IV-D)."""
+                rs_active: Optional[int] = None,
+                down=None) -> OracleRecodeOut:
+    """Sequential ring scan retiring ≤ ``recode_budget`` entries (§IV-D).
+
+    ``down`` (fault injection): *hard-down* data banks. A recompute that
+    would read a hard-down member is blocked (invalidated instead of
+    recomputed on a parked retire); entries whose own bank is hard-down
+    are moot and dropped — the rebuild sweep re-enqueues them on recovery.
+    Mirrors ``repro.core.recoding``."""
     p, sch = sys.p, sys.scheme
     rs = p.region_size
     rs_a = rs if rs_active is None else int(rs_active)
@@ -493,9 +580,13 @@ def recode_step(sys: "OracleMemorySystem", port_busy, fresh_loc, parity_valid,
             for j, _sibs in sys.options[b]:
                 blocked = any(fresh_loc[m, i] == j + 1
                               for m in sch.members[j] if m != b)
+                if down is not None:
+                    blocked = blocked or any(down[m] for m in sch.members[j]
+                                             if m != b)
                 if not parity_valid[j, pr] or parked:
                     (blocked_l if blocked else recompute).append(j)
-        if not coded or not (parked or recompute):
+        self_down = down is not None and bool(down[b])
+        if not coded or not (parked or recompute) or self_down:
             rc_valid[e] = False                       # moot: nothing to do
             continue
         needed = {b}
@@ -549,8 +640,10 @@ class OracleMemorySystem:
         self.options = [self.scheme.options(b) for b in range(params.n_data)]
 
     # ------------------------------------------------------------------ init
-    def init_state(self, region_priors=None) -> OracleState:
+    def init_state(self, region_priors=None, fault_plan=None) -> OracleState:
         p = self.p
+        if fault_plan is not None and not p.faults:
+            raise ValueError("fault_plan given but OracleParams.faults off")
         n_par = max(self.scheme.n_parities, 1)
         n_slot_rows = p.n_slots * p.region_size
         rs_a, nr_a = p.rs_active, p.nr_active
@@ -601,6 +694,9 @@ class OracleMemorySystem:
             tele=(_init_oracle_telemetry(p.n_data, self.n_cores,
                                          p.queue_depth)
                   if p.telemetry else None),
+            fault=(_init_oracle_fault(p.n_data, self.scheme.n_ports,
+                                      fault_plan)
+                   if p.faults else None),
         )
 
     def _priors_layout(self, priors, n_par: int, n_slot_rows: int):
@@ -774,6 +870,45 @@ class OracleMemorySystem:
             np.maximum(st.tele.wq_hwm, st.wq_valid.sum(axis=1),
                        out=st.tele.wq_hwm)
 
+        # ---- fault injection: this cycle's predicates, dead-cycle counts,
+        # fail-fast drops of unservable queue entries (mirrors the
+        # production hook order exactly: after the arbiter + HWM, before
+        # the hysteresis reads queue occupancy — repro.faults.inject)
+        down = rebuilding = down_hard = stut = None
+        fs = st.fault
+        if p.faults:
+            cyc = st.cycle
+            down = (fs.fail_at <= cyc) & ~fs.rebuilt
+            rebuilding = down & (fs.recover_at <= cyc)
+            down_hard = down & ~rebuilding
+            per = fs.stutter_period
+            stut = (per > 0) & (cyc % np.maximum(per, 1) == fs.stutter_phase)
+            if not was_done:   # counted until the workload drains
+                fs.dead_cycles += down.astype(np.int64)
+                if st.tele is not None:
+                    st.tele.dead_cycles += down.astype(np.int64)
+            for b in range(p.n_data):
+                if not down_hard[b]:
+                    continue
+                for s in range(p.queue_depth):
+                    if st.rq_valid[b, s]:
+                        i = max(int(st.rq_row[b, s]), 0)
+                        slot = int(st.region_slot[i // rs_a])
+                        pr = max(slot, 0) * p.region_size + i % rs_a
+                        viable = slot >= 0 and any(
+                            st.parity_valid[j, pr]
+                            and not any(down_hard[x] for x in sibs)
+                            for j, sibs in self.options[b])
+                        if int(st.fresh_loc[b, i]) == 0 and not viable:
+                            st.rq_valid[b, s] = False
+                            fs.unserved_reads += 1
+                    if st.wq_valid[b, s]:
+                        i = max(int(st.wq_row[b, s]), 0)
+                        coded = int(st.region_slot[i // rs_a]) >= 0
+                        if not coded or not self.options[b]:
+                            st.wq_valid[b, s] = False
+                            fs.lost_writes += 1
+
         # write-drain hysteresis
         wq_occ = int(st.wq_valid.sum(axis=1).max())
         any_r = bool(st.rq_valid.any())
@@ -785,6 +920,11 @@ class OracleMemorySystem:
         bank_ids = np.repeat(np.arange(p.n_data, dtype=np.int32),
                              p.queue_depth)
         port_busy0 = np.zeros(self.scheme.n_ports + 1, bool)
+        if p.faults:
+            # a down bank's port reads permanently busy to both builders;
+            # stuttering ports transiently so
+            port_busy0[: p.n_data] |= down
+            port_busy0[: self.scheme.n_ports] |= stut
         if serve_writes:
             cb, ci = bank_ids, st.wq_row.reshape(-1)
             ca, cv = st.wq_age.reshape(-1), st.wq_valid.reshape(-1)
@@ -792,7 +932,7 @@ class OracleMemorySystem:
             plan = build_write_plan(
                 self, cb, ci, ca, cv, port_busy0, st.fresh_loc,
                 st.parity_valid, st.region_slot, st.parked_count,
-                st.rc_bank, st.rc_row, st.rc_valid, rs_a)
+                st.rc_bank, st.rc_row, st.rc_valid, rs_a, down=down)
             self._commit_writes(st, plan, cb, ci, ca, cv, cd)
             lat = int(np.where(plan.served, st.cycle - ca, 0).sum())
             if st.tele is not None:
@@ -831,6 +971,16 @@ class OracleMemorySystem:
                                            max(int(ci[c]), 0),
                                            int(plan.mode[c]))
             lat = int(np.where(plan.served, st.cycle - ca, 0).sum())
+            if p.faults:
+                # reads served degraded *because* their bank is down (a
+                # redirect to a parked copy is a freshness artifact, not a
+                # fault symptom)
+                for c in np.flatnonzero(plan.served):
+                    m = int(plan.mode[c])
+                    if down[max(int(cb[c]), 0)] and (
+                            m == MODE_FROM_SYM
+                            or MODE_OPT0 <= m < MODE_REDIRECT):
+                        fs.fault_degraded += 1
             if st.tele is not None:
                 te = st.tele
                 for c in range(n):
@@ -841,6 +991,9 @@ class OracleMemorySystem:
                         cls = (0 if m == MODE_DIRECT else
                                1 if m == MODE_FROM_SYM else
                                3 if m >= MODE_REDIRECT else 2)
+                        if (p.faults and cls in (1, 2)
+                                and down[max(int(cb[c]), 0)]):
+                            cls = 4
                         te.read_mode_core[core, cls] += 1
                         te.lat_hist_read[_lat_bin(st.cycle - int(ca[c]))] += 1
                     elif cv[c]:
@@ -853,10 +1006,19 @@ class OracleMemorySystem:
             out = OracleCycleOut(plan.served, cb, ci, vals, plan.n_served)
         st.write_mode = wm
 
-        # recoding unit uses the cycle's leftover ports
-        rc = recode_step(self, port_busy, st.fresh_loc, st.parity_valid,
+        # recoding unit uses the cycle's leftover ports. A REBUILDING
+        # bank's port is granted back to it here (and only here); stutter
+        # still applies.
+        if p.faults:
+            rc_pb = np.array(port_busy, bool)
+            rc_pb[: p.n_data] = np.where(rebuilding, stut[: p.n_data],
+                                         port_busy[: p.n_data])
+        else:
+            rc_pb = port_busy
+        rc = recode_step(self, rc_pb, st.fresh_loc, st.parity_valid,
                          st.parked_count, st.rc_bank, st.rc_row, st.rc_valid,
-                         st.region_slot, st.banks_data, st.parity_data, rs_a)
+                         st.region_slot, st.banks_data, st.parity_data, rs_a,
+                         down=down_hard)
         st.fresh_loc, st.parity_valid = rc.fresh_loc, rc.parity_valid
         st.parked_count, st.rc_valid = rc.parked_count, rc.rc_valid
         st.banks_data, st.parity_data = rc.banks_data, rc.parity_data
@@ -864,6 +1026,42 @@ class OracleMemorySystem:
             st.tele.recode_retired += rc.n_recoded
             for e in np.flatnonzero(st.rc_valid):     # still pending: waits
                 st.tele.wait_cause[max(int(st.rc_bank[e]), 0), 2] += 1
+
+        # online rebuild: a flat cursor sweeps every (bank, row) cell at
+        # recode_budget cells per cycle while any bank is rebuilding,
+        # pushing cells parked elsewhere or with a stale covering parity
+        # into the recode ring; ``rebuilt`` latches — the bank rejoins —
+        # when the sweep is done, the ring drained, and no parked cell
+        # remains on a bank that is not still hard-down. Mirrors
+        # ``repro.faults.inject.rebuild_scan``.
+        if p.faults:
+            total = p.n_data * p.n_rows
+            any_rb = bool(rebuilding.any())
+            newly = bool(((fs.recover_at == st.cycle)
+                          & (fs.fail_at <= st.cycle) & ~fs.rebuilt).any())
+            ptr = 0 if newly else int(fs.rebuild_ptr)
+            for _ in range(p.recode_budget):
+                cell = min(ptr, total - 1)
+                x, i = cell // p.n_rows, cell % p.n_rows
+                in_range = any_rb and ptr < total
+                region = i // rs_a
+                in_geom = region < p.nr_active
+                slot = int(st.region_slot[min(region, p.n_regions - 1)])
+                pr = max(slot, 0) * p.region_size + i % rs_a
+                stale = slot >= 0 and any(not st.parity_valid[j, pr]
+                                          for j, _s in self.options[x])
+                need = in_range and in_geom and (
+                    int(st.fresh_loc[x, i]) > 0 or stale)
+                ok = True
+                if need:
+                    ok = _rc_push(st.rc_bank, st.rc_row, st.rc_valid, x, i)
+                if in_range and (not need or ok):
+                    ptr += 1
+            fs.rebuild_ptr = ptr
+            pending_park = bool(((st.fresh_loc > 0).any(axis=1)
+                                 & ~down_hard).any())
+            if ptr >= total and not st.rc_valid.any() and not pending_park:
+                fs.rebuilt |= rebuilding
 
         # dynamic coding unit
         self._dynamic_step(st, quiesce=was_done)
@@ -882,9 +1080,19 @@ class OracleMemorySystem:
     # ------------------------------------------------------------------- run
     def quiescent(self, st: OracleState) -> bool:
         """Observable fixed point: workload drained, encoder idle, recode
-        ring empty — every further cycle is an observable no-op."""
-        return (st.done_cycle >= 0 and st.enc_region < 0
-                and not st.rc_valid.any())
+        ring empty — every further cycle is an observable no-op. With
+        faults on, also no scheduled fault event (a pending failure, or a
+        failure with a recovery whose rebuild hasn't completed) that could
+        still change observable state."""
+        q = (st.done_cycle >= 0 and st.enc_region < 0
+             and not st.rc_valid.any())
+        if q and st.fault is not None:
+            fs, cyc = st.fault, st.cycle
+            down = (fs.fail_at <= cyc) & ~fs.rebuilt
+            pending = (((fs.fail_at > cyc) & (fs.fail_at < INT32_MAX))
+                       | (down & (fs.recover_at < INT32_MAX)))
+            q = not bool(pending.any())
+        return q
 
     def run(self, trace, n_cycles: int, st: Optional[OracleState] = None,
             stream_end=None, stop_when_quiescent: bool = False
@@ -919,4 +1127,12 @@ class OracleMemorySystem:
             avg_read_latency=st.read_latency_sum / max(sr, 1),
             avg_write_latency=st.write_latency_sum / max(sw, 1),
             rc_dropped=st.rc_dropped,
+            unserved_reads=(st.fault.unserved_reads
+                            if st.fault is not None else 0),
+            lost_writes=(st.fault.lost_writes
+                         if st.fault is not None else 0),
+            fault_degraded_reads=(st.fault.fault_degraded
+                                  if st.fault is not None else 0),
+            dead_bank_cycles=(int(st.fault.dead_cycles.sum())
+                              if st.fault is not None else 0),
         )

@@ -70,7 +70,8 @@ def system_for(pt: SweepPoint,
                              region_size_alloc=rs_alloc,
                              n_regions_alloc=nr_alloc,
                              traced_geometry=traced_geometry,
-                             telemetry=pt.telemetry)
+                             telemetry=pt.telemetry,
+                             faults=bool(pt.faults))
         sys = CodedMemorySystem(tables, params, n_cores=pt.n_cores)
         _SYSTEMS[sig] = sys
     return sys
@@ -99,6 +100,20 @@ def _batched_init(sys: CodedMemorySystem, tn_b: TunableParams,
     if priors_b is None:
         return jax.vmap(sys.init)(tn_b)
     return jax.vmap(sys.init)(tn_b, priors_b)
+
+
+def _stack_faults(points: Sequence[SweepPoint], p):
+    """Per-point fault schedules → one batched FaultState (the schedule is
+    carry data, so points with *different* plans batch through one compiled
+    program — same trick as the tunables)."""
+    from repro.faults.plan import init_fault_state, plan_from_spec
+
+    states = []
+    for pt in points:
+        plan = plan_from_spec(pt.faults, p.n_data, p.n_ports)
+        states.append(plan.state() if plan is not None
+                      else init_fault_state(p.n_data, p.n_ports))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
 def _pad_points(n_points: int) -> int:
@@ -213,13 +228,20 @@ def run_batch(batch: GridBatch, traces: Optional[Sequence[Trace]] = None,
     tn_b = stack_tunables(pts, sys.p.queue_depth)
     priors_b = (_stack_priors(region_priors, len(pts))
                 if region_priors is not None else None)
+    fault_b = _stack_faults(pts, sys.p) if sys.p.faults else None
     pad = _pad_points(len(pts)) if shard else 0
     if pad:
         trace_b = _replicate_tail(trace_b, pad)
         tn_b = _replicate_tail(tn_b, pad)
         if priors_b is not None:
             priors_b = _replicate_tail(priors_b, pad)
+        if fault_b is not None:
+            fault_b = _replicate_tail(fault_b, pad)
     st_b = _batched_init(sys, tn_b, priors_b)
+    if fault_b is not None:
+        # install the per-point schedules over the vmapped init's no-fault
+        # default (vmap can't thread the host-side plans themselves)
+        st_b = st_b._replace(mem=st_b.mem._replace(fault=fault_b))
     if shard:
         st_b, trace_b, tn_b = _maybe_shard((st_b, trace_b, tn_b),
                                            len(pts) + pad)

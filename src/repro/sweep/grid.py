@@ -62,6 +62,13 @@ class SweepPoint:
     # repro.obs metric planes through its scan carry — a different compiled
     # program from the telemetry-off one, see MemParams.telemetry)
     telemetry: bool = False
+    # ---- fault injection (repro.faults): flat spec tuple in the
+    # ``FaultPlan.from_spec`` grammar — ("bank", b, fail_at[, recover_at])
+    # and ("stutter", port, period[, phase]) entries; () = no faults. The
+    # *presence* of a plan is static (the fault hooks compile in, a
+    # different program); the schedule values ride the carry and batch, so
+    # points differing only in schedules share one compiled program.
+    faults: Tuple[Tuple, ...] = ()
     # ---- batchable: trace contents
     trace: str = "banded"            # name in repro.sim.trace.TRACES, or
                                      # "file:<path>" for an ingested on-disk
@@ -116,7 +123,7 @@ def static_signature(pt: SweepPoint) -> Tuple:
             pt.queue_depth, pt.coalesce, pt.recode_cap, pt.max_syms,
             pt.encode_rows_per_cycle, pt.recode_budget,
             pt.n_cores, pt.n_banks, pt.length, pt.resolved_cycles(),
-            pt.telemetry)
+            pt.telemetry, bool(pt.faults))
 
 
 def batch_geometry_alloc(points: Sequence[SweepPoint]) -> Tuple[int, int, int]:

@@ -25,6 +25,7 @@ Quickstart (see docs/traces.md):
     priors = prof.region_priors(system.p.region_size, system.p.n_regions)
 """
 from repro.traces.formats import (  # noqa: F401
+    TraceFormatError,
     count_requests,
     load_npz,
     load_trace,

@@ -35,6 +35,22 @@ _READS = {"r", "rd", "read"}
 _WRITES = {"w", "wr", "write"}
 
 
+class TraceFormatError(ValueError):
+    """A malformed on-disk trace. Every ingestion failure — truncated line,
+    garbage token, wrong column count, corrupt/incomplete ``.npz`` — raises
+    this single type, naming the file and (for text formats) the 1-based
+    line, so replay harnesses can catch ingestion problems distinctly from
+    programming errors. Subclasses ``ValueError`` for callers that predate
+    it."""
+
+    def __init__(self, path: str, line: Optional[int] = None,
+                 detail: str = ""):
+        loc = f"{path}:{line}" if line is not None else str(path)
+        super().__init__(f"{loc}: {detail}")
+        self.path = path
+        self.line = line
+
+
 def _parse_int(tok: str) -> Optional[int]:
     try:
         return int(tok, 16) if tok.lower().startswith("0x") else int(tok)
@@ -65,8 +81,8 @@ def iter_ramulator(path: str) -> Iterator[Tuple[int, bool]]:
                 elif addr is None and (v := _parse_int(tok)) is not None:
                     addr = v
             if addr is None or op is None:
-                raise ValueError(
-                    f"{path}:{ln}: expected '<addr> <R|W>', got {line!r}")
+                raise TraceFormatError(
+                    path, ln, f"expected '<addr> <R|W>', got {line!r}")
             yield addr, op
 
 
@@ -80,13 +96,13 @@ def iter_gem5(path: str) -> Iterator[Tuple[int, bool]]:
                 continue
             toks = [t for t in body.replace(",", " ").split() if t]
             if len(toks) < 3:
-                raise ValueError(
-                    f"{path}:{ln}: expected 'tick,cmd,addr[,size]', got {line!r}")
+                raise TraceFormatError(
+                    path, ln, f"expected 'tick,cmd,addr[,size]', got {line!r}")
             tick, op, addr = (_parse_int(toks[0]), _parse_op(toks[1]),
                               _parse_int(toks[2]))
             if tick is None or op is None or addr is None:
-                raise ValueError(
-                    f"{path}:{ln}: expected 'tick,cmd,addr[,size]', got {line!r}")
+                raise TraceFormatError(
+                    path, ln, f"expected 'tick,cmd,addr[,size]', got {line!r}")
             yield addr, op
 
 
@@ -173,12 +189,23 @@ def save_npz(path: str, trace: Trace) -> str:
 
 
 def load_npz(path: str) -> Trace:
-    with np.load(path) as z:
+    try:
+        z = np.load(path)
+    except OSError:
+        raise
+    except Exception as e:       # truncated zip, corrupt member, bad pickle
+        raise TraceFormatError(path, None,
+                               f"not a readable trace .npz ({e})") from e
+    with z:
         missing = [k for k in Trace._fields if k not in z]
         if missing:
-            raise ValueError(f"{path}: not a canonical trace .npz "
-                             f"(missing {missing})")
-        return Trace(*(jnp.asarray(z[k]) for k in Trace._fields))
+            raise TraceFormatError(path, None, "not a canonical trace .npz "
+                                   f"(missing {missing})")
+        try:
+            return Trace(*(jnp.asarray(z[k]) for k in Trace._fields))
+        except Exception as e:   # member present but corrupt/undecodable
+            raise TraceFormatError(path, None,
+                                   f"corrupt trace .npz ({e})") from e
 
 
 def probe(path: str) -> Tuple[int, int]:

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import types
 from typing import Iterable, Iterator, Optional, Tuple, Union
 
 import jax
@@ -33,25 +35,58 @@ from repro.core.system import Trace
 INT32_MAX = np.iinfo(np.int32).max
 
 
+def _pull_retry(it: Iterator[Trace], retries: int,
+                backoff: float) -> Optional[Trace]:
+    """``next(it, None)`` with bounded retry on transient read errors.
+
+    A flaky source (NFS hiccup, racing writer, transient decode failure)
+    gets ``retries`` extra attempts with exponential backoff before the
+    exception propagates. Only ``Exception`` retries — ``KeyboardInterrupt``
+    and friends surface immediately — and generators are excluded by
+    construction (a generator is dead after raising; retrying ``next()`` on
+    one just yields ``StopIteration``, which would silently truncate the
+    stream instead of failing it). The attempt budget is per pull, so a
+    source that recovers resets its budget for the next chunk.
+    """
+    delay = backoff
+    for attempt in range(retries + 1):
+        try:
+            return next(it, None)
+        except Exception:
+            if attempt == retries or isinstance(it, types.GeneratorType):
+                raise
+            time.sleep(delay)
+            delay *= 2
+    raise AssertionError("unreachable")
+
+
 class _ChunkPrefetcher:
     """Pull Trace chunks from an iterator on a background thread (depth 2).
 
     An exception inside the iterator (parse error, I/O failure) is captured
     and re-raised from ``next()`` on the consumer thread — a failed ingest
-    must fail the replay, not masquerade as a short stream."""
+    must fail the replay, not masquerade as a short stream. Transient
+    errors optionally retry with bounded exponential backoff
+    (``retries``/``backoff``) before the relay fires."""
 
     _SENTINEL = object()
 
-    def __init__(self, it: Iterator[Trace], depth: int = 2):
+    def __init__(self, it: Iterator[Trace], depth: int = 2,
+                 retries: int = 0, backoff: float = 0.05):
         self._q: "queue.Queue" = queue.Queue(depth)
         self._err: Optional[BaseException] = None
+        self._retries = int(retries)
+        self._backoff = float(backoff)
         self._thread = threading.Thread(
             target=self._worker, args=(it,), daemon=True)
         self._thread.start()
 
     def _worker(self, it: Iterator[Trace]):
         try:
-            for chunk in it:
+            while True:
+                chunk = _pull_retry(it, self._retries, self._backoff)
+                if chunk is None:
+                    break
                 self._q.put(chunk)
         except BaseException as e:              # noqa: BLE001 — relayed
             self._err = e
@@ -75,10 +110,15 @@ class TraceSource:
     """
 
     def __init__(self, chunks: Iterator[Trace], n_cores: Optional[int] = None,
-                 prefetch: bool = True):
+                 prefetch: bool = True, retries: int = 0,
+                 backoff: float = 0.05):
         self._fetch: Union[_ChunkPrefetcher, Iterator[Trace], None]
         it = iter(chunks)
-        self._fetch = _ChunkPrefetcher(it) if prefetch else it
+        self._retries = int(retries)
+        self._backoff = float(backoff)
+        self._fetch = (_ChunkPrefetcher(it, retries=self._retries,
+                                        backoff=self._backoff)
+                       if prefetch else it)
         self.n_cores = n_cores
         self._buf: Optional[list] = None   # list of 5 (n_cores, W) np arrays
         self.base = 0                      # global index of buffer column 0
@@ -94,9 +134,16 @@ class TraceSource:
         return src
 
     @classmethod
-    def from_chunks(cls, chunks: Iterable[Trace],
-                    prefetch: bool = True) -> "TraceSource":
-        return cls(iter(chunks), prefetch=prefetch)
+    def from_chunks(cls, chunks: Iterable[Trace], prefetch: bool = True,
+                    retries: int = 0, backoff: float = 0.05) -> "TraceSource":
+        """Lazy source over an iterator of ``Trace`` chunks.
+
+        ``retries``/``backoff`` give each chunk pull a bounded
+        exponential-backoff retry budget against transient read errors
+        (see ``_pull_retry``); the default keeps the historical
+        fail-on-first-error behavior."""
+        return cls(iter(chunks), prefetch=prefetch, retries=retries,
+                   backoff=backoff)
 
     # -------------------------------------------------------------- ingestion
     def _append(self, chunk: Trace):
@@ -119,7 +166,7 @@ class TraceSource:
         if self._fetch is None:
             return False
         chunk = (self._fetch.next() if isinstance(self._fetch, _ChunkPrefetcher)
-                 else next(self._fetch, None))
+                 else _pull_retry(self._fetch, self._retries, self._backoff))
         if chunk is None:
             self._fetch = None
             self.total = self._buffered_end()

@@ -27,6 +27,7 @@ scalar sums in ``MemState`` stay the only device-side accumulators).
 from __future__ import annotations
 
 import functools
+import json
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -174,11 +175,35 @@ def _run_chunk_batch(system: CodedMemorySystem, st_b: SimState, trace_b,
     return st
 
 
+# -------------------------------------------------------- checkpointed carry
+# The whole replay carry is three leaves: the batched SimState, the per-core
+# stream positions, and the accumulated window series (encoded as a JSON
+# byte array — ragged python tuples don't checkpoint as fixed-shape leaves).
+# ``prev``/``prev_cycle`` are NOT saved: at a chunk boundary they are exactly
+# ``_snapshot``/``mem.cycle`` of the carried state, so resume re-derives them.
+
+def _wins_blob(win_r, win_w) -> np.ndarray:
+    return np.frombuffer(json.dumps([win_r, win_w]).encode("utf-8"),
+                         np.uint8).copy()
+
+
+def _wins_unblob(arr) -> Tuple[List[List[tuple]], List[List[tuple]]]:
+    def tup(x):
+        return tuple(tup(e) for e in x) if isinstance(x, list) else x
+
+    wr, ww = json.loads(bytes(np.asarray(arr, np.uint8).tobytes()).decode())
+    return ([[tup(w) for w in pt] for pt in wr],
+            [[tup(w) for w in pt] for pt in ww])
+
+
 def stream_replay_points(points: Sequence, sources: Sequence,
                          chunk_len: int = DEFAULT_CHUNK_LEN,
                          region_priors: Optional[Sequence] = None,
                          max_cycles: Optional[int] = None,
-                         shard: bool = True) -> List[SimResult]:
+                         shard: bool = True,
+                         checkpoint_dir: Optional[str] = None,
+                         checkpoint_every: int = 0,
+                         resume: bool = False) -> List[SimResult]:
     """Chunked batched replay: one shape-compatible batch of sweep points,
     each with its own (arbitrarily long) trace source, as ONE device program.
 
@@ -194,6 +219,18 @@ def stream_replay_points(points: Sequence, sources: Sequence,
     buffer at the same position as its original, so it starves and quiesces
     exactly when the original does and never changes the lock-step exits;
     its rows are stripped from the results.
+
+    With ``checkpoint_dir`` and ``checkpoint_every=N``, the replay carry
+    (batched state + stream positions + window series) is checkpointed
+    atomically every N chunks via ``repro.checkpoint`` (async writer; a
+    killed run never leaves a readable half-checkpoint). ``resume=True``
+    restores the latest committed checkpoint and continues — the final
+    ``SimResult`` per point is bit-identical to the uninterrupted run
+    (tests/test_traces.py kills a replay mid-stream and proves it). The
+    caller re-supplies equivalent ``sources``; a lazy source only needs to
+    replay forward to the restored positions. Resuming assumes the same
+    point batch and device count (the padded point axis is part of the
+    saved state).
     """
     from repro.sweep.engine import (_maybe_shard, _pad_points,
                                     _replicate_tail, stack_tunables,
@@ -228,10 +265,36 @@ def stream_replay_points(points: Sequence, sources: Sequence,
             pri_b = _replicate_tail(pri_b, pad)
     st_b = (jax.vmap(system.init)(tn_b) if pri_b is None
             else jax.vmap(system.init)(tn_b, pri_b))
+    if system.p.faults:
+        # per-point fault schedules over the vmapped init's no-fault default
+        # (vmap can't thread the host-side plans — same as engine.run_batch)
+        from repro.sweep.engine import _stack_faults
+        fault_b = _stack_faults(points, system.p)
+        if pad:
+            fault_b = _replicate_tail(fault_b, pad)
+        st_b = st_b._replace(mem=st_b.mem._replace(fault=fault_b))
     pos = np.zeros((n_pts, system.n_cores), np.int64)
     bound = chunk_bound(system, chunk_len)
     win_r: List[List[tuple]] = [[] for _ in range(n_pts)]
     win_w: List[List[tuple]] = [[] for _ in range(n_pts)]
+    ckpt = None
+    step = 0
+    if checkpoint_dir is not None and checkpoint_every > 0:
+        from repro.checkpoint import (CheckpointManager, latest_step,
+                                      restore)
+        ckpt = CheckpointManager(checkpoint_dir, keep=2)
+        last = latest_step(checkpoint_dir) if resume else None
+        if last is not None:
+            like = {"state": st_b, "pos": pos,
+                    "wins": np.zeros(0, np.uint8)}
+            tree = restore(checkpoint_dir, like, step=last)
+            st_b = tree["state"]
+            pos = np.asarray(tree["pos"], np.int64)
+            win_r, win_w = _wins_unblob(tree["wins"])
+            step = last
+    elif resume:
+        raise ValueError("resume=True needs checkpoint_dir and "
+                         "checkpoint_every")
     prev = jax.device_get(_snapshot(st_b))
     prev_cycle = np.asarray(st_b.mem.cycle).copy()[:n_pts]
     while True:
@@ -258,6 +321,10 @@ def stream_replay_points(points: Sequence, sources: Sequence,
         prev = snap
         moved = np.asarray(ptr, np.int64)[:n_pts]
         pos += moved
+        step += 1
+        if ckpt is not None and step % checkpoint_every == 0:
+            ckpt.save_async(step, {"state": st_b, "pos": pos.copy(),
+                                   "wins": _wins_blob(win_r, win_w)})
         if all(src.exhausted(pos[b]) for b, src in enumerate(srcs)) \
                 and quiet.all():
             break
@@ -267,6 +334,8 @@ def stream_replay_points(points: Sequence, sources: Sequence,
         if max_cycles is not None and int(cycles.max()) >= max_cycles:
             break
         prev_cycle = cycles.copy()
+    if ckpt is not None:
+        ckpt.wait()
     host = jax.device_get(st_b)
     out = []
     for b in range(n_pts):

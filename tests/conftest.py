@@ -79,7 +79,7 @@ def oracle_twin(system):
         n_regions_active=active(tn.n_regions_active, p.n_regions),
         n_slots_active=active(tn.n_slots_active, p.n_active),
         select_period=int(tn.select_period), wq_hi=int(tn.wq_hi),
-        wq_lo=int(tn.wq_lo), telemetry=p.telemetry)
+        wq_lo=int(tn.wq_lo), telemetry=p.telemetry, faults=p.faults)
     return OracleMemorySystem(system.tables.scheme.name, op,
                               n_cores=system.n_cores)
 
@@ -131,6 +131,18 @@ def assert_state_matches_oracle(st, ost, label=""):
                 np.asarray(getattr(m.tele, name)).astype(np.int64),
                 np.asarray(getattr(ost.tele, name)),
                 err_msg=f"{label}: tele.{name}")
+    # fault leaf (repro.faults): schedule + progress, compared field by
+    # field against the oracle's independent re-derivation
+    assert (m.fault is None) == (ost.fault is None), \
+        f"{label}: fault presence mismatch"
+    if m.fault is not None:
+        from repro.faults.plan import FaultState
+
+        for name in FaultState._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(m.fault, name)).astype(np.int64),
+                np.asarray(getattr(ost.fault, name)).astype(np.int64),
+                err_msg=f"{label}: fault.{name}")
 
 
 @pytest.fixture(scope="session")

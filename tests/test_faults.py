@@ -1,0 +1,375 @@
+"""repro.faults: compile gating, plan grammar, chaos conformance against
+the NumPy golden model, the erasure-tolerance matrix, online rebuild, and
+the degraded-availability gate.
+
+The contract mirrors the telemetry one (docs/observability.md): with
+``MemParams.faults`` off the ``MemState.fault`` leaf is ``None`` and the
+compiled program is bit-identical to one built before faults existed; with
+it on, every fault rule (fail-fast drops, degraded serving, sticky parked
+writes, rebuild sweep) is re-derived independently by ``repro.oracle`` and
+checked for bit equality on every state leaf under randomized fault storms.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import assert_state_matches_oracle, oracle_twin, rand_trace
+from repro.core.codes import get_tables
+from repro.core.state import make_params, make_tunables
+from repro.core.system import CodedMemorySystem, drain_bound
+from repro.faults import FaultPlan, FaultState, plan_from_spec
+from repro.traces.stream import strip_windows
+
+SCHEMES = ["scheme_i", "scheme_ii", "scheme_iii", "replication_2", "uncoded"]
+
+
+def _system(scheme="scheme_i", n_rows=32, alpha=1.0, r=0.25, n_cores=3,
+            faults=True, **kw):
+    t = get_tables(scheme)
+    p = make_params(t, n_rows=n_rows, alpha=alpha, r=r, recode_cap=8,
+                    faults=faults, **kw)
+    return CodedMemorySystem(t, p, n_cores=n_cores,
+                             tunables=make_tunables(select_period=16))
+
+
+# one compiled faulted system per scheme under chaos (shared jit caches)
+_CHAOS_SYS = {
+    "scheme_i": _system("scheme_i", telemetry=True),
+    "scheme_iii": _system("scheme_iii", alpha=0.25, r=0.125, telemetry=True),
+}
+
+
+# ------------------------------------------------------------- plan grammar
+def test_plan_grammar():
+    plan = plan_from_spec((("bank", 2, 5, 60), ("bank", 0, 3),
+                           ("stutter", 1, 7, 3), ("stutter", 9, 5)),
+                          n_data=8, n_ports=20)
+    assert plan.bank_faults == ((2, 5, 60), (0, 3, -1))
+    assert plan.stutters == ((1, 7, 3), (9, 5, 0))
+    fail, rec, per, ph = plan.schedule_arrays()
+    NEVER = np.iinfo(np.int32).max
+    assert fail[2] == 5 and rec[2] == 60
+    assert fail[0] == 3 and rec[0] == NEVER
+    assert (fail[[1, 3, 4, 5, 6, 7]] == NEVER).all()
+    assert per[1] == 7 and ph[1] == 3 and per[9] == 5 and ph[9] == 0
+    assert plan_from_spec((), 8, 20) is None
+    assert plan_from_spec(None, 8, 20) is None
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        FaultPlan(8, 20, bank_faults=((8, 0, -1),))
+    with pytest.raises(ValueError, match="recover_at"):
+        FaultPlan(8, 20, bank_faults=((1, 10, 5),))
+    with pytest.raises(ValueError, match="twice"):
+        FaultPlan(8, 20, bank_faults=((1, 0, -1), (1, 4, -1)))
+    with pytest.raises(ValueError, match="phase"):
+        FaultPlan(8, 20, stutters=((0, 4, 4),))
+    with pytest.raises(ValueError, match="unknown fault spec"):
+        plan_from_spec((("flood", 1, 2),), 8, 20)
+    with pytest.raises(ValueError, match="faults"):
+        _system(faults=False).init(
+            fault_plan=FaultPlan(8, 20, bank_faults=((0, 0, -1),)))
+
+
+# -------------------------------------------------------- compile gating
+def test_faults_off_state_has_no_fault_leaf():
+    """Faults off ⇒ ``MemState.fault`` is None: the pytree flattens to the
+    same leaves as before the subsystem existed, so every pre-fault
+    compiled program (and checkpoint) stays valid bit for bit."""
+    sys_off = _system(faults=False)
+    st = sys_off.init()
+    assert st.mem.fault is None
+    assert not any("fault" in jax.tree_util.keystr(path)
+                   for path, _ in
+                   jax.tree_util.tree_flatten_with_path(st)[0])
+    # faults on with no plan: the leaf carries the never-fails schedule
+    st_on = _system(faults=True).init()
+    assert isinstance(st_on.mem.fault, FaultState)
+
+
+def test_faults_compiled_in_but_quiet_is_inert():
+    """A faults-on program running the no-fault schedule produces exactly
+    the faults-off results — the hooks are value-transparent when nothing
+    fails, not just absent when compiled out."""
+    rng = np.random.default_rng(21)
+    trace = rand_trace(rng, 3, 12, 8, 32)
+    cycles = drain_bound(3, 12)
+    res_off = _system(faults=False).run(trace, cycles)
+    res_on = _system(faults=True).run(trace, cycles)
+    assert res_off == res_on
+    assert res_on.unserved_reads == 0 and res_on.lost_writes == 0
+    assert res_on.fault_degraded_reads == 0 and res_on.dead_bank_cycles == 0
+
+
+def test_faults_off_sweep_partitioning(sweep_compile_count):
+    """``faults=()`` points batch exactly as before (one program per static
+    signature; the empty spec adds no partition), and a faulted point is a
+    genuinely different program."""
+    from repro.sweep import SweepPoint, grid, partition, run_points
+
+    base = SweepPoint(scheme="scheme_i", alpha=1.0, r=0.25, n_rows=32,
+                      n_cores=3, n_banks=8, length=10, select_period=16,
+                      recode_cap=8)
+    pts = grid(base, seed=(0, 1, 2))
+    assert len(partition(pts)) == 1
+    faulted = base.replace(faults=(("bank", 0, 0),))
+    assert len(partition(pts + [faulted])) == 2
+    before = sweep_compile_count()
+    run_points(pts)
+    assert sweep_compile_count() - before == 1
+
+
+def test_faults_off_stream_replay_identity():
+    """fig18-style point, faults off: chunked stream replay still equals
+    the single-shot engine bit for bit (the fault plumbing in the chunk
+    driver is inert without a plan)."""
+    from repro.sweep import SweepPoint, run_points
+    from repro.sweep.workloads import build_trace
+    from repro.traces.stream import stream_replay_points
+
+    pts = [SweepPoint(scheme="scheme_i", alpha=0.25, r=0.05, n_rows=32,
+                      n_cores=3, n_banks=8, length=10, select_period=16,
+                      recode_cap=8, seed=s) for s in (0, 1)]
+    traces = [build_trace(pt) for pt in pts]
+    want = run_points(pts, traces=traces)
+    got = stream_replay_points(pts, traces, chunk_len=4)
+    assert [strip_windows(g) for g in got] == want
+
+
+# ------------------------------------------------------- chaos conformance
+def _storm_plan(rng, sys_):
+    """A randomized fault storm: 1-2 bank erasures (possibly recovering),
+    0-2 port stutters."""
+    n_data, n_ports = sys_.p.n_data, sys_.tables.n_ports
+    banks = rng.permutation(n_data)[: rng.integers(1, 3)]
+    spec = []
+    for b in banks:
+        fail = int(rng.integers(0, 40))
+        rec = int(rng.integers(fail + 1, fail + 60)) \
+            if rng.random() < 0.6 else -1
+        spec.append(("bank", int(b), fail, rec))
+    for q in rng.permutation(n_ports)[: rng.integers(0, 3)]:
+        per = int(rng.integers(2, 9))
+        spec.append(("stutter", int(q), per, int(rng.integers(0, per))))
+    return tuple(spec)
+
+
+def check_storm_conformance(seed, scheme):
+    """Lockstep production vs oracle under a random fault storm: every
+    array/scalar/telemetry/fault leaf bit-equal at several horizons, and
+    the SimResult availability aggregates equal both the fault leaf and
+    the telemetry planes."""
+    from repro.obs.planes import snapshot
+
+    sys_ = _CHAOS_SYS[scheme]
+    om = oracle_twin(sys_)
+    rng = np.random.default_rng(seed)
+    spec = _storm_plan(rng, sys_)
+    plan = plan_from_spec(spec, sys_.p.n_data, sys_.tables.n_ports)
+    trace = rand_trace(rng, sys_.n_cores, 12, sys_.p.n_data, sys_.p.n_rows,
+                       write_frac=0.45)
+    st = sys_.init(fault_plan=plan)
+    ost = om.init_state(fault_plan=plan)
+    tr_np = tuple(np.asarray(x) for x in trace)
+    label = f"{scheme} seed={seed} spec={spec}"
+    for cyc in range(120):
+        st, _ = sys_.cycle_fn(st, trace)
+        om.cycle(ost, tr_np)
+        if cyc in (20, 60):
+            assert_state_matches_oracle(st, ost, f"{label} @{cyc}")
+    assert_state_matches_oracle(st, ost, label)
+
+    res = sys_.summarize(st)
+    assert strip_windows(res) == om.result(ost), label
+    # aggregates: SimResult == fault leaf == telemetry planes
+    f = jax.device_get(st.mem.fault)
+    assert res.unserved_reads == int(f.unserved_reads)
+    assert res.lost_writes == int(f.lost_writes)
+    assert res.fault_degraded_reads == int(f.fault_degraded)
+    assert res.dead_bank_cycles == int(np.asarray(f.dead_cycles,
+                                                  np.int64).sum())
+    snap = snapshot(st)
+    assert snap.fault_degraded_reads() == res.fault_degraded_reads
+    assert snap.dead_bank_cycles() == res.dead_bank_cycles
+    assert snap.degraded_reads() == res.degraded_reads
+
+
+@pytest.mark.parametrize("scheme", ["scheme_i", "scheme_iii"])
+def test_fault_storm_conformance_seeded(scheme):
+    """Deterministic chaos anchor (runs with or without hypothesis)."""
+    check_storm_conformance(101, scheme)
+    check_storm_conformance(102, scheme)
+
+
+try:
+    from hypothesis import given, settings, strategies as hst
+
+    @settings(max_examples=6, deadline=None)
+    @given(hst.integers(0, 2**31 - 1),
+           hst.sampled_from(["scheme_i", "scheme_iii"]))
+    def test_fault_storm_conformance_hypothesis(seed, scheme):
+        """Property: for ANY fault storm the production scheduler equals
+        the golden model on every state leaf, bit for bit."""
+        check_storm_conformance(seed, scheme)
+except ImportError:                                       # pragma: no cover
+    pass  # the seeded anchor above still runs
+
+
+# -------------------------------------------------- erasure-tolerance matrix
+def _brute_force_recoverable(scheme, lost, rng):
+    """Independent value-level check: materialize random bank values and
+    the scheme's parity values, then try to reconstruct every lost bank
+    from surviving banks + parities under the controller's single-decode
+    serving rule. Returns True iff every lost bank's value comes back
+    exactly."""
+    lost = set(lost)
+    vals = rng.integers(1, 1 << 30, scheme.n_data)
+    parities = [int(np.bitwise_xor.reduce(vals[list(ms)]))
+                for ms in scheme.members]
+    for b in lost:
+        ok = False
+        for j, ms in enumerate(scheme.members):
+            if b not in ms or (set(ms) - {b}) & lost:
+                continue
+            sibs = [m for m in ms if m != b]
+            decoded = parities[j]
+            for s in sibs:
+                decoded ^= int(vals[s])
+            if decoded == int(vals[b]):
+                ok = True
+                break
+        if not ok:
+            return False
+    return True
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_erasure_tolerance_matrix(scheme):
+    """Exhaustive single- and double-bank-loss matrix per scheme:
+    ``CodeScheme.erasure_tolerance`` must agree loss-set by loss-set with a
+    brute-force value-level XOR decoder that shares none of its code."""
+    import itertools
+
+    s = get_tables(scheme).scheme
+    rng = np.random.default_rng(33)
+    tol = s.erasure_tolerance(max_losses=2)
+    for k in (1, 2):
+        want = tuple(
+            lost for lost in itertools.combinations(range(s.n_data), k)
+            if _brute_force_recoverable(s, lost, rng))
+        assert tol[k] == want, (scheme, k)
+
+
+def test_erasure_tolerance_expected_shapes():
+    """Spot-checks from the paper's structure: every pairwise-parity scheme
+    survives any single data-bank loss; uncoded survives none."""
+    import math
+
+    for name in ("scheme_i", "scheme_ii", "scheme_iii", "replication_2"):
+        s = get_tables(name).scheme
+        tol = s.erasure_tolerance(1)
+        assert len(tol[1]) == s.n_data, name
+    s1 = get_tables("scheme_i").scheme
+    assert len(s1.erasure_tolerance(2)[2]) == math.comb(s1.n_data, 2)
+    un = get_tables("uncoded").scheme
+    assert un.erasure_tolerance(2) == {1: (), 2: ()}
+
+
+# ------------------------------------------------------------ online rebuild
+def test_online_rebuild_relatches_bank():
+    """A failed bank that recovers is rebuilt through the recode ring and
+    rejoins: the ``rebuilt`` latch sets, dead-cycle accrual stops, and no
+    read is ever lost (scheme_i, full coverage)."""
+    sys_ = _CHAOS_SYS["scheme_i"]
+    plan = plan_from_spec((("bank", 2, 5, 30),), sys_.p.n_data,
+                          sys_.tables.n_ports)
+    rng = np.random.default_rng(5)
+    trace = rand_trace(rng, sys_.n_cores, 12, sys_.p.n_data, sys_.p.n_rows)
+    st = sys_.init(fault_plan=plan)
+    for _ in range(400):
+        st, _ = sys_.cycle_fn(st, trace)
+    f = jax.device_get(st.mem.fault)
+    assert bool(np.asarray(f.rebuilt)[2]), "rebuild latch never set"
+    res = sys_.summarize(st)
+    assert res.unserved_reads == 0 and res.lost_writes == 0
+    dead = int(np.asarray(f.dead_cycles, np.int64).sum())
+    assert 0 < dead < 400, dead   # down for a while, then back
+
+
+def test_permanent_failure_still_quiesces():
+    """A never-recovering bank must not wedge the run: with full coverage
+    every request still completes (served degraded or dropped counted) and
+    the system reaches its quiescent fixed point."""
+    sys_ = _CHAOS_SYS["scheme_i"]
+    plan = plan_from_spec((("bank", 0, 0),), sys_.p.n_data,
+                          sys_.tables.n_ports)
+    rng = np.random.default_rng(6)
+    trace = rand_trace(rng, sys_.n_cores, 12, sys_.p.n_data, sys_.p.n_rows)
+    res = sys_.run(trace, drain_bound(sys_.n_cores, 12), fault_plan=plan)
+    assert res.completed
+    assert res.unserved_reads == 0        # scheme_i serves through parity
+    assert res.dead_bank_cycles > 0
+
+
+# ----------------------------------------------- degraded-availability gate
+@pytest.mark.parametrize("scheme", ["scheme_i", "scheme_iii"])
+def test_degraded_availability_gate_coded(scheme):
+    """One dead bank per parity group, full coverage: the coded schemes
+    serve 100% of reads (zero unserved, zero lost writes) on a fig18-style
+    suite — the paper's availability claim, enforced."""
+    from repro.sweep import SweepPoint, run_points
+
+    t = get_tables(scheme)
+    pts = [SweepPoint(scheme=scheme, alpha=1.0, r=0.25, n_rows=32,
+                      n_cores=3, n_banks=t.n_data, n_data=t.n_data,
+                      length=12, select_period=16, recode_cap=8, seed=s,
+                      faults=(("bank", 0, 0),)) for s in (0, 1)]
+    for res in run_points(pts):
+        assert res.unserved_reads == 0, scheme
+        assert res.lost_writes == 0, scheme
+        assert res.dead_bank_cycles > 0
+        assert res.served_reads > 0
+
+
+def test_degraded_availability_gate_uncoded():
+    """The same dead bank with no redundancy permanently drops that bank's
+    requests — the contrast row the fig_faults gate renders."""
+    from repro.sweep import SweepPoint, run_points
+
+    pts = [SweepPoint(scheme="uncoded", alpha=1.0, r=0.25, n_rows=32,
+                      n_cores=3, n_banks=8, length=12, select_period=16,
+                      recode_cap=8, seed=s, faults=(("bank", 0, 0),))
+           for s in (0, 1)]
+    rs = run_points(pts)
+    assert sum(r.unserved_reads for r in rs) > 0
+    assert all(r.fault_degraded_reads == 0 for r in rs)   # nothing to decode
+
+
+# ------------------------------------------------------------ batched plans
+def test_sweep_batches_different_fault_plans():
+    """Different fault *schedules* share one compiled program (the schedule
+    is carry data); each point's batched result equals its single-shot
+    faulted run."""
+    from repro.sweep import SweepPoint, partition, run_points
+
+    specs = [(("bank", 0, 0),), (("bank", 3, 8, 40),),
+             (("bank", 1, 2), ("stutter", 2, 5, 1))]
+    pts = [SweepPoint(scheme="scheme_i", alpha=1.0, r=0.25, n_rows=32,
+                      n_cores=3, n_banks=8, length=10, select_period=16,
+                      recode_cap=8, seed=i, faults=sp)
+           for i, sp in enumerate(specs)]
+    assert len(partition(pts)) == 1
+    got = run_points(pts)
+    from repro.sweep.workloads import build_trace
+    for pt, res in zip(pts, got):
+        sys_ = _system("scheme_i", faults=True)
+        plan = plan_from_spec(pt.faults, sys_.p.n_data, sys_.tables.n_ports)
+        tn = make_tunables(queue_depth=sys_.p.queue_depth,
+                           select_period=pt.select_period,
+                           wq_hi=pt.wq_hi, wq_lo=pt.wq_lo)
+        want = sys_.run(build_trace(pt), pt.resolved_cycles(), tn=tn,
+                        fault_plan=plan)
+        assert strip_windows(res) == strip_windows(want), pt.faults

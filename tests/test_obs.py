@@ -63,14 +63,17 @@ def test_field_layout_frozen():
     positional construction of the legacy prefix keeps meaning what it
     meant), and the legacy prefix itself is locked — a rename or reorder
     here silently breaks checkpoint/pytree compatibility."""
-    assert MemParams._fields[-1] == "telemetry"
-    assert MemState._fields[-1] == "tele"
+    assert MemParams._fields[-2:] == ("telemetry", "faults")
+    assert MemState._fields[-2:] == ("tele", "fault")
     assert MemParams._field_defaults["telemetry"] is False
+    assert MemParams._field_defaults["faults"] is False
     assert MemState._field_defaults["tele"] is None
+    assert MemState._field_defaults["fault"] is None
     # telemetry forces a distinct compiled program via the sweep static key
+    # (its slot sits just before the trailing faults flag)
     pt = SweepPoint(n_rows=SMALL_N_ROWS, length=SMALL_TRACE_LEN)
     on, off = static_signature(pt.replace(telemetry=True)), static_signature(pt)
-    assert on != off and on[:-1] == off[:-1]
+    assert on != off and on[:-2] == off[:-2] and on[-1] == off[-1]
 
 
 def test_on_off_results_identical():

@@ -596,3 +596,217 @@ def test_stream_million_requests():
     assert res.completed
     assert res.served_reads + res.served_writes == total
     assert len(res.window_read_latency) >= n_chunks
+
+
+# ------------------------------------------- flaky sources & retry/backoff
+class _FlakyChunks:
+    """Re-pullable iterator (NOT a generator) that fails transiently:
+    ``fail_on[i] = n`` makes the pull of chunk ``i`` raise n times before
+    succeeding — the shape of an NFS hiccup or racing writer."""
+
+    def __init__(self, chunks, fail_on):
+        self.chunks, self.i, self.fails = list(chunks), 0, dict(fail_on)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self.fails.get(self.i, 0) > 0:
+            self.fails[self.i] -= 1
+            raise OSError(f"transient read error at chunk {self.i}")
+        if self.i >= len(self.chunks):
+            raise StopIteration
+        c = self.chunks[self.i]
+        self.i += 1
+        return c
+
+
+def _drain_source(src, n_cores, chunk_len=4):
+    """Stage a source to exhaustion, returning the staged bank columns."""
+    pos = np.zeros(n_cores, np.int64)
+    out = []
+    while not src.exhausted(pos):
+        chunk, _ = src.stage(pos, chunk_len)
+        out.append(np.asarray(chunk.bank))
+        pos += chunk_len
+    return out
+
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_flaky_source_retries_then_streams_identically(prefetch):
+    """Transient read errors inside the retry budget are invisible: the
+    staged stream equals the in-memory trace, chunk for chunk."""
+    rng = np.random.default_rng(11)
+    trace = rand_trace(rng, N_CORES, 20, 8, N_ROWS)
+    chunks = list(chunk_iter(trace, 4))
+    src = TraceSource.from_chunks(
+        _FlakyChunks(chunks, fail_on={1: 2, 3: 1}), prefetch=prefetch,
+        retries=3, backoff=0.001)
+    got = _drain_source(src, N_CORES)
+    want = _drain_source(TraceSource.from_chunks(iter(chunks),
+                                                 prefetch=False), N_CORES)
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_flaky_source_exhausted_retries_raises(prefetch):
+    """Once the bounded retry budget is spent the original exception
+    surfaces (on the consumer thread) — never a silently short stream."""
+    rng = np.random.default_rng(12)
+    chunks = list(chunk_iter(rand_trace(rng, 2, 12, 4, 16), 4))
+    src = TraceSource.from_chunks(_FlakyChunks(chunks, fail_on={1: 99}),
+                                  prefetch=prefetch, retries=2,
+                                  backoff=0.001)
+    with pytest.raises(OSError, match="transient read error at chunk 1"):
+        _drain_source(src, 2)
+
+
+def test_generator_sources_never_retry():
+    """A generator is dead after raising — retrying ``next()`` on one
+    yields StopIteration, i.e. a silently truncated stream. The retry
+    helper must therefore re-raise generator errors immediately even with
+    budget left."""
+    from repro.traces.source import _pull_retry
+
+    rng = np.random.default_rng(13)
+    chunk = rand_trace(rng, 2, 4, 4, 16)
+
+    def gen():
+        yield chunk
+        raise OSError("boom")
+
+    it = gen()
+    assert _pull_retry(it, 5, 0.001) is chunk
+    with pytest.raises(OSError, match="boom"):
+        _pull_retry(it, 5, 0.001)
+
+
+# --------------------------------------------- malformed on-disk traces
+def test_trace_format_error_names_file_and_line(tmp_path):
+    from repro.traces import TraceFormatError
+
+    p = tmp_path / "bad.trace"
+    p.write_text("0x100 R\n0x200\n")
+    with pytest.raises(TraceFormatError, match=r"bad\.trace:2"):
+        list(iter_ramulator(str(p)))
+    g = tmp_path / "bad.gem5"
+    g.write_text("100,r,0x40\n101,w\n")
+    with pytest.raises(TraceFormatError, match=r"bad\.gem5:2"):
+        list(iter_gem5(str(g)))
+    # TraceFormatError subclasses ValueError: pre-existing handlers keep
+    # catching ingestion failures
+    assert issubclass(TraceFormatError, ValueError)
+
+
+_GARBAGE_LINES = {
+    "ramulator": [
+        "0x",                  # truncated address
+        "R",                   # op with no address
+        "deadbeef Q",          # neither token parses
+        "0x10 0x20",           # two addresses, no op
+        "\x00\x01\x02",        # binary junk
+        "W W W",               # ops with no address
+        "12 34",               # two addresses (decimal), no op
+    ],
+    "gem5": [
+        "0x",                  # one column
+        "R",                   # one column
+        "1,r",                 # missing the address column
+        "tick r 0x40",         # non-numeric tick
+        "deadbeef Q",          # two columns, neither parses
+        "\x00\x01\x02",        # binary junk
+        "W W W",               # non-numeric tick and address
+        "1,z,0x40",            # unknown command token
+    ],
+}
+
+
+def test_malformed_text_traces_fuzz(tmp_path):
+    """Truncated / garbage / wrong-arity lines spliced into otherwise-valid
+    Ramulator and gem5 traces always raise TraceFormatError pointing at the
+    exact file:line — never a different exception type, never silent
+    acceptance."""
+    from repro.traces import TraceFormatError
+
+    rng = np.random.default_rng(7)
+    good = {"ramulator": [f"0x{rng.integers(0, 1 << 20):x} "
+                          f"{'R' if rng.random() < 0.5 else 'W'}"
+                          for _ in range(8)],
+            "gem5": [f"{i},{'r' if rng.random() < 0.5 else 'w'},"
+                     f"0x{rng.integers(0, 1 << 20):x}" for i in range(8)]}
+    parsers = {"ramulator": iter_ramulator, "gem5": iter_gem5}
+    ext = {"ramulator": ".trace", "gem5": ".gem5"}
+    for fmt in ("ramulator", "gem5"):
+        for trial, bad in enumerate(_GARBAGE_LINES[fmt]):
+            lines = list(good[fmt])
+            at = int(rng.integers(0, len(lines) + 1))
+            lines.insert(at, bad)
+            path = tmp_path / f"{fmt}_{trial}{ext[fmt]}"
+            path.write_text("\n".join(lines) + "\n")
+            with pytest.raises(TraceFormatError) as ei:
+                list(parsers[fmt](str(path)))
+            assert ei.value.path == str(path), (fmt, bad)
+            assert ei.value.line == at + 1, (fmt, bad)
+
+
+def test_malformed_npz_traces_fuzz(tmp_path):
+    """The third format: corrupt, truncated, and wrong-keyed .npz files all
+    raise TraceFormatError naming the file."""
+    from repro.traces import TraceFormatError
+
+    garbage = tmp_path / "garbage.npz"
+    garbage.write_bytes(b"\x13\x37 not a zip archive")
+    with pytest.raises(TraceFormatError, match="garbage"):
+        load_npz(str(garbage))
+
+    wrong = tmp_path / "wrong.npz"
+    np.savez(str(wrong), bank=np.zeros((2, 2), np.int32))
+    with pytest.raises(TraceFormatError, match="missing"):
+        load_npz(str(wrong))
+
+    rng = np.random.default_rng(8)
+    whole = tmp_path / "ok.npz"
+    save_npz(str(whole), rand_trace(rng, 2, 6, 4, 16))
+    blob = whole.read_bytes()
+    for frac in (0.2, 0.6, 0.95):          # truncate at several depths
+        cut = tmp_path / f"cut_{frac}.npz"
+        cut.write_bytes(blob[: int(len(blob) * frac)])
+        with pytest.raises(TraceFormatError):
+            load_npz(str(cut))
+    # and load_trace routes .npz through the same guarded loader
+    with pytest.raises(TraceFormatError):
+        load_trace(str(garbage))
+
+
+# --------------------------------------------- checkpointed stream replay
+def test_stream_replay_points_kill_and_resume(tmp_path):
+    """A replay killed mid-stream resumes from its last committed
+    checkpoint bit-identically: the final per-point SimResults (window
+    series included) equal the uninterrupted run's."""
+    from repro.checkpoint import latest_step
+    from repro.sweep import SweepPoint
+    from repro.sweep.workloads import build_trace
+
+    base = SweepPoint(scheme="scheme_i", alpha=0.25, r=0.125, n_rows=N_ROWS,
+                      n_cores=N_CORES, n_banks=8, length=TLEN,
+                      select_period=16)
+    pts = [base.replace(seed=s) for s in (0, 1)]
+    traces = [build_trace(pt) for pt in pts]
+    ckdir = str(tmp_path / "ck")
+
+    want = stream_replay_points(pts, traces, chunk_len=4)
+
+    # "kill": stop mid-stream after checkpoints have committed
+    stream_replay_points(pts, traces, chunk_len=4, checkpoint_dir=ckdir,
+                         checkpoint_every=1, max_cycles=8)
+    assert latest_step(ckdir) is not None   # at least one committed step
+    got = stream_replay_points(pts, traces, chunk_len=4,
+                               checkpoint_dir=ckdir, checkpoint_every=1,
+                               resume=True)
+    assert got == want
+
+    # resume without a checkpoint directory is a configuration error
+    with pytest.raises(ValueError, match="resume"):
+        stream_replay_points(pts, traces, chunk_len=4, resume=True)
