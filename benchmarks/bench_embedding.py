@@ -7,7 +7,6 @@ concentrate on one bank serializes on that bank's port; the parity path
 serves every second conflicting lookup from the pair sibling + parity."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -6,7 +6,6 @@ pages striped over single-ported banks; a coded cache serves a decode
 step's page reads in fewer serialized bank cycles."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

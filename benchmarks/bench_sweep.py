@@ -18,7 +18,6 @@ verifies the per-point results are numerically identical.
 from __future__ import annotations
 
 import argparse
-import time
 
 from benchmarks.common import Timer, emit, table
 from repro.sim.ramulator import simulate

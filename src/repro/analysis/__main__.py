@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.analysis [--strict] [--layers ...]``.
+
+Runs the three analysis layers and prints findings one per line
+(``[rule] location: message``). Exit status is 0 when clean; with
+``--strict`` any finding exits 1 — that is the CI gate.
+
+``--write-certificates`` regenerates ``certificates.json`` from the live
+scheme tables (required after any deliberate change to
+``repro.core.codes``; the schemes layer fails while the checked-in
+certificate disagrees with the code).
+
+The jaxpr layer traces real programs (abstract eval only, no device
+execution) and takes ~1–2 minutes; ``--layers schemes rules`` gives the
+sub-second source-only subset (what the pre-commit hook runs).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+from repro.analysis.base import Finding, format_findings
+
+LAYERS = ("schemes", "jaxpr", "rules")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant verification (see docs/analysis.md)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding (the CI gate)")
+    ap.add_argument("--layers", nargs="+", choices=LAYERS, default=None,
+                    help="subset of layers to run (default: all)")
+    ap.add_argument("--write-certificates", action="store_true",
+                    help="regenerate repro/analysis/certificates.json from "
+                         "the live scheme tables, then verify")
+    args = ap.parse_args(argv)
+
+    if args.write_certificates:
+        from repro.analysis import schemes
+        doc = schemes.write_certificates()
+        print(f"wrote {schemes.CERT_PATH} "
+              f"({len(doc['schemes'])} schemes, k<={doc['max_k']})")
+
+    layers = args.layers or list(LAYERS)
+    findings: List[Finding] = []
+    for layer in layers:
+        t0 = time.time()
+        if layer == "schemes":
+            from repro.analysis import schemes as mod
+        elif layer == "jaxpr":
+            from repro.analysis import jaxpr as mod      # type: ignore
+        else:
+            from repro.analysis import rules as mod      # type: ignore
+        got = mod.run(strict=args.strict)
+        findings.extend(got)
+        print(f"-- {layer}: {len(got)} finding(s) "
+              f"[{time.time() - t0:.1f}s]", file=sys.stderr)
+
+    if findings:
+        print(format_findings(findings))
+    else:
+        print(f"analysis clean ({', '.join(layers)})")
+    return 1 if (args.strict and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,7 @@ import json
 import os
 import re
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

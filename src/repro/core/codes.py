@@ -126,14 +126,19 @@ def scheme_ii(n_data: int = 8) -> CodeScheme:
         base = 4 * g
         pairs = list(itertools.combinations(range(base, base + 4), 2))  # 6
         dups = [(base + k,) for k in range(4)]  # 4
-        # Pack 10 logical halves into 5 physical banks of 2αL rows each:
-        #   phys k (k<4): [pair_k, dup_k]; phys 4: [pair_4, pair_5].
+        # Pack 10 logical halves into 5 physical banks of 2αL rows each.
+        # The two halves sharing a physical bank share its single port, so
+        # the packing must keep each half-pair *member-disjoint* or some
+        # data bank loses one of its 5 simultaneous reads (paper §III-B2)
+        # to a port conflict: pair each pairwise parity with its complement
+        # and the duplicates with each other. The GF(2) scheme verifier
+        # (repro.analysis.schemes) proves read_degree_min == 5 holds.
         packing = [
-            (pairs[0], dups[0]),
-            (pairs[1], dups[1]),
-            (pairs[2], dups[2]),
-            (pairs[3], dups[3]),
-            (pairs[4], pairs[5]),
+            (pairs[0], pairs[5]),   # (0,1) + (2,3)
+            (pairs[1], pairs[4]),   # (0,2) + (1,3)
+            (pairs[2], pairs[3]),   # (0,3) + (1,2)
+            (dups[0], dups[1]),
+            (dups[2], dups[3]),
         ]
         for k, (h0, h1) in enumerate(packing):
             members.append(h0)

@@ -111,7 +111,9 @@ def priors_layout(p: MemParams, tn, priors):
         jnp.where(ok, cand, p.n_regions)].set(
         sid.astype(jnp.int32), mode="drop")
     row = jnp.arange(p.n_slots * rs)
-    active = ok[row // rs] & (row % rs < rs_a)
+    # parity rows are *stored* at the allocated stride (slot * rs_alloc +
+    # i % rs_active); this walks that storage layout, not a region id
+    active = ok[row // rs] & (row % rs < rs_a)  # analysis: static-geometry
     parity_valid = jnp.broadcast_to(active, (p.n_parities, p.n_slots * rs))
     return region_slot, slot_region, parity_valid
 

@@ -392,6 +392,8 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None,
                                (tn.n_regions_active, p.n_regions,
                                 "n_regions_active")):
             cv = _concrete_int(v)
+            # host-only: _concrete_int returns None for tracers, so the
+            # second clause never sees one  # analysis: tracer-branch
             if cv is not None and cv not in (alloc, sentinel):
                 raise ValueError(
                     f"TunableParams.{name}={cv} differs from the allocation "
@@ -413,6 +415,8 @@ def init_state(p: MemParams, tn: Optional[TunableParams] = None,
             sid = jnp.arange(p.n_slots, dtype=jnp.int32)
             slot_region = jnp.where(sid < nr_a, sid, -1)
             row = jnp.arange(n_slot_rows, dtype=jnp.int32)
+            # storage-layout walk at the allocated parity-row stride, not a
+            # data-row region lookup  # analysis: static-geometry
             active = (row // p.region_size < nr_a) & (row % p.region_size < rs_a)
             parity_valid = jnp.broadcast_to(active, (p.n_parities, n_slot_rows))
     elif region_priors is not None:

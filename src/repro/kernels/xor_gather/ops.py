@@ -5,7 +5,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.codes import MAX_OPTS, CodeTables
 from repro.core.controller import MODE_OPT0, MODE_REDIRECT, ReadPlan

@@ -37,17 +37,16 @@ import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.axes import use_mesh
 from repro.configs.base import ModelConfig, all_configs, get_config
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_production_mesh
-from repro.launch.shapes import (SHAPES, ShapeSpec, applicable, cache_specs,
+from repro.launch.shapes import (SHAPES, ShapeSpec, applicable,
                                  default_q_chunk, input_specs)
 from repro.models import lm
-from repro.optim.adamw import OptConfig, OptState, abstract_opt
+from repro.optim.adamw import OptConfig, abstract_opt
 from repro.runtime import steps as steps_mod
 
 # --------------------------------------------------------------- HW constants

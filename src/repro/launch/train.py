@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs.base import get_config
 from repro.launch.mesh import make_debug_mesh

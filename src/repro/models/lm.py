@@ -19,7 +19,6 @@ accurate dry-run cost analysis) and per-layer ``jax.checkpoint`` for train.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -253,7 +252,6 @@ def backbone(cfg: ModelConfig, params: Params, x: jnp.ndarray,
         x, _ = jax.lax.scan(f, x, params["blocks"], unroll=unroll)
     elif cfg.family == "hybrid":
         n_super, n_rem_rec, n_attn = hybrid_layout(cfg)
-        n_rec = cfg.n_layers - n_attn
         rec = params["rec_blocks"]
         rec_main = jax.tree.map(lambda a: a[: 2 * n_super].reshape(n_super, 2, *a.shape[1:]), rec)
         rec_rem = jax.tree.map(lambda a: a[2 * n_super:], rec)

@@ -23,7 +23,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
@@ -268,7 +268,6 @@ def availability_report(suite_name: str = "paper_fig18", *,
     rows = []
     for pt, res, snap in zip(pts, results, snaps):
         issued_r = res.served_reads + res.unserved_reads
-        issued_w = res.served_writes + res.lost_writes
         rows.append([
             pt.scheme, f"{pt.alpha:g}", f"{pt.r:g}", str(res.cycles),
             _pct(res.served_reads, issued_r), str(res.unserved_reads),

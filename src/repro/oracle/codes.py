@@ -17,8 +17,9 @@ Schemes (paper §III-B):
 * **Scheme I** — data banks in groups of 4; all 6 pairwise XOR parities per
   group, one shallow physical bank each.
 * **Scheme II** — Scheme I's pairs plus one duplicate per data bank, packed
-  two halves per physical bank: physical ``k<4`` of a group holds
-  ``[pair_k, dup_k]``, physical 4 holds ``[pair_4, pair_5]``.
+  two *member-disjoint* halves per physical bank (complementary pairs
+  share a bank, duplicates share a bank) so no data bank's serving options
+  collide on one port.
 * **Scheme III** — 9 data banks on a 3×3 grid; parities are the 3 row XORs,
   3 column XORs and 3 broken-diagonal XORs. With 8 data banks the 9th bank
   is simply omitted from every parity (paper Remark 5).
@@ -34,7 +35,7 @@ numbering of the golden model (direct / option-k / redirect).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 MAX_SIBS = 2
 MAX_OPTS = 4
@@ -103,9 +104,13 @@ def _scheme_ii(n_data: int) -> OracleScheme:
     for g in range(0, n_data, 4):
         pairs = _pairs(g)
         dups = [(g + k,) for k in range(4)]
-        halves = [(pairs[0], dups[0]), (pairs[1], dups[1]),
-                  (pairs[2], dups[2]), (pairs[3], dups[3]),
-                  (pairs[4], pairs[5])]
+        # Each physical bank's two halves must cover disjoint data banks,
+        # or the shared port costs some bank one of its 5 simultaneous
+        # reads (§III-B2): complementary pairs together, duplicates
+        # together.
+        halves = [(pairs[0], pairs[5]), (pairs[1], pairs[4]),
+                  (pairs[2], pairs[3]),
+                  (dups[0], dups[1]), (dups[2], dups[3])]
         for k, (h0, h1) in enumerate(halves):
             members.extend([h0, h1])
             phys.extend([pbase + k, pbase + k])

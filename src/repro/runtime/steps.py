@@ -9,8 +9,7 @@ EXPERIMENTS.md is exactly what runs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

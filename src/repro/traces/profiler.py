@@ -24,7 +24,7 @@ streaming (chunk at a time, O(n_rows) state, never materializing the trace):
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Tuple
+from typing import Iterable, List, Optional
 
 import numpy as np
 

@@ -26,7 +26,6 @@ import time
 import types
 from typing import Iterable, Iterator, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

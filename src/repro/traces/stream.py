@@ -37,7 +37,7 @@ import numpy as np
 from repro.core.state import TunableParams, wide_total
 from repro.core.system import (CodedMemorySystem, SimResult, SimState,
                                drain_bound, quiescent, result_from_host)
-from repro.traces.source import TraceSource, as_source
+from repro.traces.source import as_source
 
 DEFAULT_CHUNK_LEN = 256
 

@@ -161,9 +161,26 @@ def sweep_compile_count():
     """Callable returning how many device programs the sweep engine has
     compiled so far (the jit cache size of its batched scan). Take a delta
     around ``run_points`` to assert the compile count of a grid."""
-    from repro.sweep import engine
+    from repro.analysis import guard
 
-    if not hasattr(engine._scan_batch, "_cache_size"):
+    if not guard.available("sweep"):
         # private jax API; don't fail unrelated tests on a jax upgrade
         pytest.skip("jit._cache_size() not available in this jax version")
-    return lambda: engine._scan_batch._cache_size()
+    return lambda: guard.cache_size("sweep")
+
+
+@pytest.fixture
+def compile_guard():
+    """The generalized recompile guard (``repro.analysis.recompile_guard``)
+    with the availability skip applied: yields the context-manager factory.
+
+        with compile_guard("kernels.xor_encode", max_compiles=1):
+            ...   # region may compile at most one new program
+
+    Targets are ``repro.analysis.guard.GUARDED`` names or jitted
+    callables; ``g.compiles()``/``g.deltas()`` give exact counts."""
+    from repro.analysis import guard
+
+    if not guard.available("sweep"):
+        pytest.skip("jit._cache_size() not available in this jax version")
+    return guard.recompile_guard

@@ -1,0 +1,15 @@
+"""Known-bad fixture for the ``oracle-purity`` rule (AST-parsed only,
+never imported): a golden-model module that leans on jax and on the very
+core code it is supposed to check. Each offending import below must be
+flagged; the numpy/stdlib imports must not."""
+import math                                   # allowed: stdlib
+import numpy as np                            # allowed: numpy
+
+import jax.numpy as jnp                       # MUST FLAG: jax in the oracle
+from repro.core.codes import get_tables       # MUST FLAG: shared core code
+from repro.obs import planes                  # MUST FLAG: shared repro code
+
+
+def tainted_tables(name):
+    t = get_tables(name)
+    return jnp.asarray(t.par_members), np.int32(math.log2(8)), planes

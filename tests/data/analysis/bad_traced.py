@@ -1,0 +1,52 @@
+"""Known-bad fixture for the traced-code AST rules (parsed, never
+imported — the free names are deliberate). Each function demonstrates one
+rule; ``tests/test_analysis.py`` lints this file with an explicit
+classification override and asserts every marked line is flagged.
+
+Rules exercised: tracer-branch (branch + cast), static-geometry (direct
+attribute and via alias), narrow-counter (binop, augassign, kwarg),
+rule-classification (``unclassified_helper``), and the waiver comment
+(``clean_traced`` must produce no findings)."""
+
+
+def branch_on_traced(p, served, row):
+    if served > 0:                       # BAD: python If on a traced value
+        served = served + 1
+    n = int(served)                      # BAD: int() concretizes a tracer
+    clipped = served if served < 4 else 4   # BAD: IfExp on a traced value
+    return n, clipped
+
+
+def static_geometry_index(p, row):
+    region = row // p.region_size        # BAD: divides by allocated geometry
+    offset = row % p.region_size         # BAD: mod by allocated geometry
+    rs = p.region_size                   # alias picks up allocated-ness
+    r2 = row // rs                       # BAD: same leak through the alias
+    return region, offset, r2
+
+
+def narrow_counters(m, dt):
+    stall = m.stall_cycles + dt          # BAD: plain + on a wide counter
+    m.read_latency_sum += dt             # BAD: augmented assign on wide
+    return m._replace(
+        write_latency_sum=m.write_latency_sum + 1)   # BAD: kwarg built with +
+
+
+def unclassified_helper(x):
+    # BAD: not listed as TRACED or HOST -> rule-classification
+    return x
+
+
+def clean_traced(p, x, extra):
+    # static tests are fine: param attributes, shapes, `is None`
+    if p.telemetry:
+        x = x + 1
+    if extra is not None:
+        x = x + extra
+    if x.shape[0] > 2:
+        x = x + 2
+    # analysis: tracer-branch  (waiver must silence the line below)
+    if x > 0:
+        x = x - 1
+    rs = p.region_size if p.n_regions > 1 else 4   # IfExp bind: not a leak
+    return x // rs

@@ -50,11 +50,28 @@ def test_oracle_tables_match_core(scheme):
     """The oracle's independently derived scheme tables agree with the
     production ones — members, physical packing, port ids and per-bank
     serving options. (Divergence here would invalidate every other layer.)"""
+    from repro.analysis import schemes as anl
+
     t = get_tables(scheme)
     o = oracle_scheme(scheme, t.n_data)
     assert o.n_data == t.n_data
     assert o.n_parities == len(t.scheme.members)
     assert o.n_ports == t.n_ports
+    # hash both derivations against the checked-in certificate; on
+    # divergence, name the scheme and the first differing parity instead
+    # of failing with a bare tuple assert
+    cert_hash = anl.load_certificates()["schemes"][scheme]["table_sha256"]
+    core_hash = anl.table_hash(t.scheme.members, t.scheme.phys)
+    oracle_hash = anl.table_hash(o.members, o.phys)
+    if not (core_hash == oracle_hash == cert_hash):
+        diff = anl.diff_tables(scheme, t.scheme.members, t.scheme.phys,
+                               o.members, o.phys)
+        raise AssertionError(
+            f"{scheme}: table derivations diverge (core={core_hash[:12]} "
+            f"oracle={oracle_hash[:12]} certificate={cert_hash[:12]}):\n"
+            + "\n".join(diff or ["(tables equal — certificate is stale: run "
+                                 "python -m repro.analysis "
+                                 "--write-certificates)"]))
     assert tuple(o.members) == tuple(t.scheme.members)
     assert tuple(o.phys) == tuple(t.scheme.phys)
     for j in range(o.n_parities):

@@ -1,8 +1,6 @@
 """Pattern-builder unit tests: the paper's worked examples (§III-B, Fig 3,
 Fig 12, Fig 14) plus structural invariants (port exclusivity)."""
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import controller as ctl
 from repro.core.codes import get_tables

@@ -6,15 +6,11 @@ The full 40-cell × 2-mesh dry-run runs via
 ``python -m repro.launch.dryrun --all --both-meshes`` (EXPERIMENTS.md §Dry-run);
 a single reduced-scale multi-device cell is exercised here in a subprocess
 (so the forced device count cannot leak into this process's jax)."""
-import json
 import os
-import re
 import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -13,7 +13,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from conftest import assert_state_matches_oracle, oracle_twin, rand_trace
 from repro.core.codes import get_tables
@@ -248,19 +247,30 @@ def _brute_force_recoverable(scheme, lost, rng):
 
 @pytest.mark.parametrize("scheme", SCHEMES)
 def test_erasure_tolerance_matrix(scheme):
-    """Exhaustive single- and double-bank-loss matrix per scheme:
-    ``CodeScheme.erasure_tolerance`` must agree loss-set by loss-set with a
-    brute-force value-level XOR decoder that shares none of its code."""
+    """Exhaustive single- and double-bank-loss matrix per scheme, three
+    ways: ``CodeScheme.erasure_tolerance`` must agree loss-set by loss-set
+    with (a) the GF(2) analysis certificate proved from the members matrix
+    alone (``repro.analysis.schemes``) and (b) a brute-force value-level
+    XOR decoder that shares no code with either. The certificate carries
+    the full servable-set lists, so it replaces the old second brute-force
+    sweep — one value-level decode per loss set remains as the independent
+    ground truth."""
     import itertools
+
+    from repro.analysis import schemes as anl
 
     s = get_tables(scheme).scheme
     rng = np.random.default_rng(33)
     tol = s.erasure_tolerance(max_losses=2)
+    cert = anl.load_certificates()["schemes"][scheme]
     for k in (1, 2):
         want = tuple(
             lost for lost in itertools.combinations(range(s.n_data), k)
             if _brute_force_recoverable(s, lost, rng))
         assert tol[k] == want, (scheme, k)
+        certified = tuple(tuple(lost)
+                          for lost in cert["serving_tolerance"][str(k)])
+        assert certified == want, (scheme, k)
 
 
 def test_erasure_tolerance_expected_shapes():

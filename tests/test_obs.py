@@ -25,9 +25,9 @@ from conftest import (assert_state_matches_oracle, oracle_twin, rand_trace,
 
 from repro.core.codes import get_tables
 from repro.core.state import MemParams, MemState, make_params, make_tunables
-from repro.core.system import CodedMemorySystem, drain_bound
+from repro.core.system import CodedMemorySystem
 from repro.obs import planes
-from repro.obs.planes import Telemetry, TelemetrySnapshot, snapshot
+from repro.obs.planes import TelemetrySnapshot, snapshot
 from repro.sweep.engine import run_points
 from repro.sweep.grid import SweepPoint, static_signature
 

@@ -1,6 +1,5 @@
 """Runtime tests: fault-tolerant trainer (bit-deterministic recovery),
 continuous-batching server, coded KV bank serving path."""
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
                                          restore, save)
 from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
 from repro.optim.adamw import (OptConfig, adamw_init, adamw_update,
-                               cosine_schedule, global_norm)
+                               cosine_schedule)
 
 
 # ---------------------------------------------------------------- optimizer

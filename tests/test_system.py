@@ -1,8 +1,6 @@
 """End-to-end coded-memory-system tests: memory-order correctness (every
 served read returns the currently committed value), throughput vs the
 uncoded baseline, and paper-claim regressions on small traces."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,7 +10,7 @@ from repro.core.codes import get_tables
 from repro.core.state import make_params
 from repro.core.system import CodedMemorySystem
 from repro.sim.ramulator import compare_schemes, simulate
-from repro.sim.trace import TraceSpec, banded_trace, uniform_trace
+from repro.sim.trace import TraceSpec, banded_trace
 
 
 def _mk_system(scheme="scheme_i", n_rows=64, alpha=1.0, r=0.25, n_cores=4):

@@ -6,7 +6,6 @@ import os
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from conftest import rand_trace
@@ -60,16 +59,24 @@ def test_stream_replay_bit_identical(chunk_len):
     assert strip_windows(got) == single
 
 
-def test_stream_replay_source_splits_invisible():
+def test_stream_replay_source_splits_invisible(compile_guard):
     """The rolling-window source normalizes arbitrary ingest chunking: the
-    same staging length over differently-split sources is identical."""
+    same staging length over differently-split sources is identical — and
+    shares one compiled chunk program (ingest chunking must never reach
+    the compile key)."""
     sys_ = _SYS
     rng = np.random.default_rng(9)
     trace = rand_trace(rng, N_CORES, TLEN, sys_.p.n_data, N_ROWS)
     single = sys_.run(trace, drain_bound(N_CORES, TLEN))
-    for cuts in ([2], [1, 2, 3, 4, 9], [5], []):
-        got = stream_replay(sys_, _split(trace, cuts), chunk_len=4)
-        assert strip_windows(got) == single, cuts
+    splits = ([2], [1, 2, 3, 4, 9], [5], [])
+    with compile_guard("stream", max_compiles=None) as g:
+        got = stream_replay(sys_, _split(trace, splits[0]), chunk_len=4)
+        assert strip_windows(got) == single, splits[0]
+        first = g.compiles()
+        for cuts in splits[1:]:
+            got = stream_replay(sys_, _split(trace, cuts), chunk_len=4)
+            assert strip_windows(got) == single, cuts
+    assert g.compiles() == first, "ingest split leaked into the compile key"
 
 
 def test_stream_replay_window_stats_account_for_all_latency():
@@ -781,10 +788,12 @@ def test_malformed_npz_traces_fuzz(tmp_path):
 
 
 # --------------------------------------------- checkpointed stream replay
-def test_stream_replay_points_kill_and_resume(tmp_path):
+def test_stream_replay_points_kill_and_resume(tmp_path, compile_guard):
     """A replay killed mid-stream resumes from its last committed
     checkpoint bit-identically: the final per-point SimResults (window
-    series included) equal the uninterrupted run's."""
+    series included) equal the uninterrupted run's. Checkpointing and
+    resuming must also reuse the uninterrupted run's compiled chunk
+    program — restored carries may not drift in structure or dtype."""
     from repro.checkpoint import latest_step
     from repro.sweep import SweepPoint
     from repro.sweep.workloads import build_trace
@@ -796,16 +805,20 @@ def test_stream_replay_points_kill_and_resume(tmp_path):
     traces = [build_trace(pt) for pt in pts]
     ckdir = str(tmp_path / "ck")
 
-    want = stream_replay_points(pts, traces, chunk_len=4)
+    with compile_guard("stream", max_compiles=None) as g:
+        want = stream_replay_points(pts, traces, chunk_len=4)
+        first = g.compiles()
 
-    # "kill": stop mid-stream after checkpoints have committed
-    stream_replay_points(pts, traces, chunk_len=4, checkpoint_dir=ckdir,
-                         checkpoint_every=1, max_cycles=8)
-    assert latest_step(ckdir) is not None   # at least one committed step
-    got = stream_replay_points(pts, traces, chunk_len=4,
-                               checkpoint_dir=ckdir, checkpoint_every=1,
-                               resume=True)
+        # "kill": stop mid-stream after checkpoints have committed
+        stream_replay_points(pts, traces, chunk_len=4, checkpoint_dir=ckdir,
+                             checkpoint_every=1, max_cycles=8)
+        assert latest_step(ckdir) is not None   # a committed step exists
+        got = stream_replay_points(pts, traces, chunk_len=4,
+                                   checkpoint_dir=ckdir, checkpoint_every=1,
+                                   resume=True)
     assert got == want
+    assert g.compiles() == first, \
+        "checkpoint/resume recompiled the chunk program (carry drift)"
 
     # resume without a checkpoint directory is a configuration error
     with pytest.raises(ValueError, match="resume"):
