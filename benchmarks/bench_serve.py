@@ -1,0 +1,246 @@
+"""End-to-end serving benchmark: coded vs uncoded KV pool under churn.
+
+Drives the full request path — ``runtime.server.Server`` continuous
+batching over the coded KV page pool — with a churned-placement workload
+(seeded physical-page permutations mid-run, the free-list steady state
+where bank conflicts appear) and reports:
+
+* **steady-state decode throughput** (tokens/s, warmup wave compiles
+  prefill + decode before the timed wave) for the coded and uncoded pool;
+* **critical-word read latency** p50/p99/mean in port cycles, coded vs
+  uncoded *on identical placement* — every latency is recomputed host-side
+  by the ``repro.oracle.kvpool`` golden model (never read back from the
+  device), and the device serve planes are cross-checked against the same
+  oracle totals exactly before any number is reported;
+* **telemetry overhead** (full runs): the metrics-on decode wall time must
+  stay within 1.05x of metrics-off (the planes are a carry leaf, not a
+  second program).
+
+Gates: coded must serve the churned suite in strictly fewer summed port
+cycles and strictly lower mean latency than uncoded (p99 no worse), and —
+like ``bench_cycles`` — the steady-state throughput is regressed against
+the checked-in ``BENCH_serve_throughput.json`` trajectory (``--min-frac``
+floor, only a passing full run refreshes the repo-root baseline).
+``--smoke`` shrinks the workload and skips the overhead gate (CI).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import REPO_ROOT, Timer, emit, table
+
+BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_serve_throughput.json")
+CHURN_EVERY = 2
+
+
+def load_baseline():
+    """Coded steady-state tokens/s from the checked-in trajectory blob, or
+    None when absent. Like bench_cycles, deliberately not keyed on tier:
+    the loose --min-frac floor absorbs the smoke/full workload gap."""
+    if not os.path.exists(BASELINE_PATH):
+        return None
+    try:
+        with open(BASELINE_PATH) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return None
+    v = blob.get("headline", {}).get("tokens_per_s")
+    return float(v) if v else None
+
+
+def _requests(vocab: int, n: int, seed: int):
+    from repro.runtime.server import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=[int(x) for x in
+                            rng.integers(1, max(vocab // 2, 2),
+                                         size=4 + i % 9)])
+            for i in range(n)]
+
+
+def _metrics_run(cfg, sc, params, reqs, seed):
+    """Untimed oracle-instrumented run over the coded pool: collects every
+    page read's critical-word latency (host recompute) for the coded plan
+    AND for an uncoded plan on the identical churned placement, and proves
+    the device serve planes equal the oracle totals exactly."""
+    from repro.oracle import kvpool
+    from repro.runtime.server import Server
+
+    srv = Server(cfg, sc, params)
+    assert srv.pooled and sc.coded and sc.telemetry
+    churn_rng = np.random.default_rng(seed)
+    totals = kvpool.plane_totals(srv.kvcfg.n_banks)
+    lat_coded: list = []
+    lat_uncoded: list = []
+    for r in reqs:
+        srv.submit(r)
+    step = 0
+    while True:
+        srv._admit()
+        if not any(s is not None for s in srv.slots):
+            break
+        if step and step % CHURN_EVERY == 0:
+            srv.permute_pool(churn_rng.permutation(srv.kvcfg.pool_pages))
+        pool = srv.cache["pool"]
+        pt = np.asarray(pool.page_table)
+        ln = np.asarray(pool.length)
+        fresh = np.asarray(pool.parity_fresh)
+        active = (pt[:, 0] >= 0) & (ln > 0)
+        exp = kvpool.expected_step(srv.kvcfg.n_banks, srv.kvcfg.page, pt,
+                                   ln, fresh, active, sc.recode_budget)
+        totals.add(exp)
+        lat_coded.extend(exp.latencies[exp.latencies > 0].tolist())
+        len_eff = ln + active.astype(ln.dtype)
+        lat_u = kvpool.read_latencies(srv.kvcfg.n_banks, srv.kvcfg.page,
+                                      pt, len_eff,
+                                      np.zeros_like(exp.use_parity))
+        lat_uncoded.extend(lat_u[lat_u > 0].tolist())
+        srv.step_decode()
+        step += 1
+    snap = srv.serve_snapshot()
+    snap.check_against(totals)          # exact or AssertionError
+    return totals, np.asarray(lat_coded), np.asarray(lat_uncoded)
+
+
+def _timed_run(cfg, sc, params, reqs, seed):
+    """Steady-state wall-clock tokens/s: a warmup wave triggers every
+    compile (prefill, decode, install, permute), then the measured wave
+    runs the same churn schedule as the metrics run."""
+    from repro.runtime.server import Request, Server
+
+    srv = Server(cfg, sc, params)
+    warm = [Request(rid=10_000 + i, prompt=[3, 1, 4, 1, 5])
+            for i in range(2)]
+    for r in warm:
+        srv.submit(r)
+    srv.run_until_drained()
+    srv.permute_pool(np.arange(srv.kvcfg.pool_pages))   # compile permute
+
+    churn_rng = np.random.default_rng(seed)
+    for r in reqs:
+        srv.submit(r)
+    step = 0
+    t0 = time.perf_counter()
+    while True:
+        srv._admit()
+        if not any(s is not None for s in srv.slots):
+            break
+        if step and step % CHURN_EVERY == 0:
+            srv.permute_pool(churn_rng.permutation(srv.kvcfg.pool_pages))
+        srv.step_decode()
+        step += 1
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.out) for r in reqs)
+    return n_tok, dt
+
+
+def run(smoke: bool = False, min_frac: float = 0.3, seed: int = 0):
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.runtime.server import ServeConfig
+
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(), kv_page=4)
+    n_req = 6 if smoke else 16
+    base = dict(n_slots=4, max_prompt=16, max_seq=64,
+                max_new_tokens=6 if smoke else 16)
+    params = lm.init_params(cfg, jax.random.key(seed), max_seq=base["max_seq"])
+    reqs = lambda: _requests(cfg.vocab, n_req, seed)  # noqa: E731
+
+    totals, lat_c, lat_u = _metrics_run(
+        cfg, ServeConfig(**base, coded=True, telemetry=True), params,
+        reqs(), seed)
+    p50_c, p99_c = np.percentile(lat_c, [50, 99])
+    p50_u, p99_u = np.percentile(lat_u, [50, 99])
+
+    with Timer() as t_coded:
+        tok_c, dt_c = _timed_run(cfg, ServeConfig(**base, coded=True),
+                                 params, reqs(), seed)
+    with Timer() as t_unc:
+        tok_u, dt_u = _timed_run(cfg, ServeConfig(**base, coded=False),
+                                 params, reqs(), seed)
+    tput_c = tok_c / dt_c
+    tput_u = tok_u / dt_u
+
+    overhead = None
+    if not smoke:
+        _, dt_tele = _timed_run(
+            cfg, ServeConfig(**base, coded=True, telemetry=True), params,
+            reqs(), seed)
+        overhead = dt_tele / dt_c
+
+    rows = [
+        {"backend": "coded", "tokens": tok_c, "wall_s": round(dt_c, 3),
+         "tokens_per_s": round(tput_c, 1),
+         "lat_p50": float(p50_c), "lat_p99": float(p99_c),
+         "lat_mean": round(float(lat_c.mean()), 3),
+         "port_cycles": totals.coded_cycles,
+         "degraded_reads": int(totals.read_mode_bank[:, 1].sum())},
+        {"backend": "uncoded", "tokens": tok_u, "wall_s": round(dt_u, 3),
+         "tokens_per_s": round(tput_u, 1),
+         "lat_p50": float(p50_u), "lat_p99": float(p99_u),
+         "lat_mean": round(float(lat_u.mean()), 3),
+         "port_cycles": totals.uncoded_cycles, "degraded_reads": 0},
+    ]
+    print(f"\n== bench_serve: {n_req} requests, "
+          f"{base['max_new_tokens']} new tokens, churn every "
+          f"{CHURN_EVERY} steps{' [smoke]' if smoke else ''} ==")
+    print(table(rows, list(rows[0].keys())))
+
+    coded_wins = (totals.coded_cycles < totals.uncoded_cycles
+                  and float(lat_c.mean()) < float(lat_u.mean())
+                  and p99_c <= p99_u)
+    print(f"coded vs uncoded on churned placement: "
+          f"{totals.coded_cycles} vs {totals.uncoded_cycles} port cycles, "
+          f"mean lat {lat_c.mean():.3f} vs {lat_u.mean():.3f} "
+          f"-> {'PASS' if coded_wins else 'FAIL'}")
+    ok = coded_wins
+    if overhead is not None:
+        tele_ok = overhead <= 1.05
+        print(f"telemetry-on overhead {overhead:.3f}x (gate 1.05x) "
+              f"-> {'PASS' if tele_ok else 'FAIL'}")
+        ok = ok and tele_ok
+
+    baseline = load_baseline()
+    regressed = False
+    if baseline is None:
+        print("no checked-in throughput baseline — recording trajectory "
+              "only")
+    else:
+        frac = tput_c / baseline
+        regressed = frac < min_frac
+        print(f"coded steady-state {tput_c:.1f} tok/s vs checked-in "
+              f"baseline {baseline:.1f} ({frac:.2f}x, floor {min_frac:g}x)"
+              f" -> {'FAIL' if regressed else 'PASS'}")
+    ok = ok and not regressed
+    emit("BENCH_serve_throughput", rows, {
+        "n_requests": n_req, "max_new_tokens": base["max_new_tokens"],
+        "n_slots": base["n_slots"], "page": 4, "n_banks": cfg.kv_banks,
+        "churn_every": CHURN_EVERY, "smoke": smoke,
+        "baseline_tokens_per_s": baseline, "min_frac": min_frac,
+        "coded_wins": coded_wins, "regressed": regressed,
+        "telemetry_overhead": overhead,
+    }, root=not smoke and ok,
+        headline={"tokens_per_s": round(tput_c, 1),
+                  "lat_p99_coded": float(p99_c),
+                  "lat_p99_uncoded": float(p99_u)},
+        timings={"coded_s": t_coded.s, "uncoded_s": t_unc.s})
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload, no overhead gate (CI)")
+    ap.add_argument("--min-frac", type=float, default=0.3,
+                    help="fail below this fraction of the checked-in "
+                         "steady-state tokens/s baseline")
+    args = ap.parse_args()
+    raise SystemExit(0 if run(smoke=args.smoke, min_frac=args.min_frac)
+                     else 1)

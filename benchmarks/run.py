@@ -16,9 +16,9 @@ def main():
     t0 = time.time()
 
     from benchmarks import (bench_cycles, bench_embedding, bench_kvbank,
-                            bench_stream, bench_sweep, fig18_dedup,
-                            fig19_split, fig20_ramp, fig_faults,
-                            roofline_report, tab_schemes)
+                            bench_serve, bench_stream, bench_sweep,
+                            fig18_dedup, fig19_split, fig20_ramp,
+                            fig_faults, roofline_report, tab_schemes)
 
     tab_schemes.run()
     fig18_dedup.run(length=48 if args.fast else 96)
@@ -29,6 +29,7 @@ def main():
     bench_cycles.run(smoke=args.fast)
     bench_stream.run(smoke=args.fast)
     bench_kvbank.run()
+    bench_serve.run(smoke=args.fast)
     bench_embedding.run()
     roofline_report.run("pod16x16")
     roofline_report.run("pod2x16x16")

@@ -281,6 +281,75 @@ def lint_flag_identity(pt=None) -> List[Finding]:
     return out
 
 
+# ------------------------------------------------- pooled serve-step lints
+def lint_serve_step() -> List[Finding]:
+    """The pooled decode step's observability contract, proved statically:
+
+    * **tele-off absence** — with ``tele=None`` the cache carries an absent
+      leaf (not a zeroed plane) and the step is a structural fixed point of
+      its carry; the telemetry plane must never change the pool avals.
+    * **tele is load-bearing** — turning the plane on must change the
+      traced program (otherwise the metrics cost nothing because they
+      measure nothing).
+    * **coded is a compile switch** — the uncoded pool (zero-size parity
+      arrays) must trace a genuinely different program, not a masked
+      branch of the coded one; same for disabling the ReCoding unit
+      (``recode_budget=-1``)."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.obs.serve import init_serve_telemetry
+    from repro.runtime import kvbank as kb
+    from repro.runtime.steps import make_pooled_serve_step
+
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(), kv_page=4)
+    kvcfg = kb.KVBankConfig(n_banks=cfg.kv_banks, page=4,
+                            pool_pages=4 * cfg.kv_banks, max_pages=4)
+    b = 2
+    params_a = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.key(0), max_seq=16))
+    tok_a = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def pool_aval(coded):
+        return jax.eval_shape(lambda: kb.pool_init(
+            kvcfg, cfg.n_layers, b, cfg.n_kv, cfg.head_dim,
+            jnp.dtype(cfg.compute_dtype), coded=coded))
+
+    tele_a = jax.eval_shape(
+        lambda: init_serve_telemetry(kvcfg.n_banks))
+    step = make_pooled_serve_step(cfg, kvcfg)
+    variants = {
+        "off": (step, {"pool": pool_aval(True), "tele": None}),
+        "tele-on": (step, {"pool": pool_aval(True), "tele": tele_a}),
+        "uncoded": (step, {"pool": pool_aval(False), "tele": None}),
+        "no-recode": (make_pooled_serve_step(cfg, kvcfg, recode_budget=-1),
+                      {"pool": pool_aval(True), "tele": None}),
+    }
+    out: List[Finding] = []
+    hashes: Dict[str, str] = {}
+    for label, (fn, cache_a) in variants.items():
+        out.extend(lint_carry(
+            f"pooled_serve_step[{label}]",
+            lambda carry, p, _fn=fn: _fn(p, *carry),
+            (tok_a, cache_a), params_a, pick=lambda o: o))
+        hashes[label] = jaxpr_hash(fn, params_a, tok_a, cache_a)
+    for label, why in (
+            ("tele-on", "the serve metric planes no longer measure "
+                        "anything"),
+            ("uncoded", "the coded/uncoded pool switch no longer selects "
+                        "a different compiled program"),
+            ("no-recode", "recode_budget=-1 no longer disables the "
+                          "ReCoding unit")):
+        if hashes[label] == hashes["off"]:
+            out.append(Finding(
+                "jaxpr-flag-leak", f"pooled_serve_step[{label}]",
+                f"traces the same jaxpr as the baseline step — {why}"))
+    return out
+
+
 # ------------------------------------------------------------- layer entry
 def default_lint_points() -> List:
     """The representative grid the CLI lints: an α×r×scheme×tunable spread
@@ -306,4 +375,5 @@ def run(strict: bool = False,
     out = lint_signature_classes(pts)
     out += lint_carry_stability()
     out += lint_flag_identity()
+    out += lint_serve_step()
     return out

@@ -52,7 +52,8 @@ from repro.analysis.base import Finding, REPO_ROOT, python_files, rel
 # --------------------------------------------------------------- rule scope
 # traced-code rules apply to the cycle-engine surface: everything the
 # compiled programs are built from
-TRACED_SCOPE = ("src/repro/core", "src/repro/faults", "src/repro/obs/planes.py")
+TRACED_SCOPE = ("src/repro/core", "src/repro/faults", "src/repro/obs/planes.py",
+                "src/repro/obs/serve.py", "src/repro/runtime/kvbank.py")
 ORACLE_SCOPE = "src/repro/oracle"
 
 # modules the oracle may import: stdlib + numpy, and its own package
@@ -98,6 +99,13 @@ TRACED_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/faults/inject.py": {
         "drop_unservable", "rebuild_scan", "quiescent_fault_pending"},
     "src/repro/obs/planes.py": {"init_telemetry", "lat_bin"},
+    "src/repro/obs/serve.py": {
+        "init_serve_telemetry", "update_serve_telemetry"},
+    "src/repro/runtime/kvbank.py": {
+        "init_state", "append_token", "recode", "pool_read_sets",
+        "plan_reads", "_plan_from_tables", "gather_kv", "read_latencies",
+        "pool_write_index", "pool_mark_stale", "pool_write_layer",
+        "pool_plan", "pool_install", "pool_recode", "pool_permute"},
 }
 HOST_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/core/__init__.py": {"*"},
@@ -114,6 +122,11 @@ HOST_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/faults/plan.py": {"FaultPlan.*", "plan_from_spec"},
     "src/repro/obs/planes.py": {
         "TelemetrySnapshot.*", "_find_tele", "snapshot"},
+    "src/repro/obs/serve.py": {
+        "ServeSnapshot.*", "ServeLog.*", "_Req.*", "snapshot",
+        "format_summary"},
+    "src/repro/runtime/kvbank.py": {
+        "pool_init", "pool_coded", "parity_members"},
 }
 
 _WAIVER_RE = re.compile(r"#\s*analysis:\s*([\w-]+)")

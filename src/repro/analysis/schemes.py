@@ -60,6 +60,10 @@ MAX_K = 2
 DECLARED: Dict[str, Dict[str, int]] = {
     "uncoded": {"full_k": 0, "read_degree": 1, "locality": 1},
     "scheme_i": {"full_k": 2, "read_degree": 4, "locality": 2},
+    # serving KV pool (runtime/kvbank.PooledKV): pairwise parities, one per
+    # bank pair — a subcode of scheme_i (cross-checked by
+    # ``check_pool_subcode``), so one degraded read per group per cycle.
+    "kv_pool": {"full_k": 1, "read_degree": 2, "locality": 2},
     "scheme_ii": {"full_k": 2, "read_degree": 5, "locality": 2},
     "scheme_iii": {"full_k": 2, "read_degree": 4, "locality": 3},
     "replication_2": {"full_k": 2, "read_degree": 2, "locality": 1},
@@ -301,14 +305,66 @@ def verify_scheme_claims(name: str, entry: Dict,
     return out
 
 
+KV_POOL_BANKS = 8
+
+
+def pool_tables(n_banks: int = KV_POOL_BANKS):
+    """(members, phys, n_data) of the serving KV pool's pairwise-parity
+    layout, taken from the production table builder
+    (``runtime.kvbank.parity_members``) so the certificate proves the code
+    the server actually runs."""
+    from repro.runtime.kvbank import parity_members
+    members, phys = parity_members(n_banks)
+    return members, phys, n_banks
+
+
+def check_pool_subcode(n_banks: int = KV_POOL_BANKS,
+                       parent: str = "scheme_i") -> List[Finding]:
+    """The KV pool's parity layout must be a subcode of the core parent
+    scheme: every pool parity group appears verbatim in the parent's
+    members table (so the pool inherits the parent's certified claims
+    restricted to those rows), and the groups partition the data banks."""
+    out: List[Finding] = []
+    members, _phys, nd = pool_tables(n_banks)
+    pm, _pp, pn = _scheme_tables(parent)
+    if pn != nd:
+        out.append(Finding(
+            "pool-subcode", f"kv_pool:{parent}",
+            f"pool spans {nd} data banks but {parent} certifies {pn}"))
+        return out
+    parent_pairs = {tuple(sorted(ms)) for ms in pm}
+    for g, ms in enumerate(members):
+        if tuple(sorted(ms)) not in parent_pairs:
+            out.append(Finding(
+                "pool-subcode", f"kv_pool:parity{g}",
+                f"pool parity group {tuple(ms)} is not a parity of "
+                f"{parent} — the pool layout must be a subcode of the "
+                "certified core scheme"))
+    cover = sorted(m for ms in members for m in ms)
+    if cover != list(range(nd)):
+        out.append(Finding(
+            "pool-subcode", "kv_pool:partition",
+            f"pool parity groups must partition the data banks exactly "
+            f"once; covered={cover}"))
+    return out
+
+
 def certify(names: Optional[Sequence[str]] = None) -> Dict:
-    """The full certificate document over ``core.codes.SCHEMES``."""
+    """The full certificate document: ``core.codes.SCHEMES`` plus the
+    serving KV pool's pairwise layout (``kv_pool``)."""
     from repro.core.codes import SCHEMES
-    names = list(names) if names is not None else sorted(SCHEMES)
+    names = list(names) if names is not None \
+        else sorted(SCHEMES) + ["kv_pool"]
+    entries = {}
+    for name in names:
+        if name == "kv_pool":
+            entries[name] = analyze_scheme(name, *pool_tables())
+        else:
+            entries[name] = analyze_scheme(name)
     return {
         "version": CERT_VERSION,
         "max_k": MAX_K,
-        "schemes": {name: analyze_scheme(name) for name in names},
+        "schemes": entries,
     }
 
 
@@ -372,6 +428,8 @@ def verify_certificates(path: str = CERT_PATH) -> List[Finding]:
 
 
 def run(strict: bool = False) -> List[Finding]:
-    """Layer entry point: certificates + claims + stride-alias grid."""
+    """Layer entry point: certificates + claims + stride-alias grid +
+    KV-pool subcode cross-check."""
     del strict
-    return verify_certificates() + check_stride_grid()
+    return (verify_certificates() + check_stride_grid()
+            + check_pool_subcode())

@@ -40,6 +40,63 @@ def pack_kv_banks(
     return ku, vu, k_par, v_par, n_pages
 
 
+def gather_pool_layer(
+    k_banks: jnp.ndarray,   # (NB, slots, page, Hkv, D) uint lanes
+    v_banks: jnp.ndarray,
+    k_par: jnp.ndarray,     # (NG, slots, page, Hkv, D); NG == 0 ⇒ uncoded
+    v_par: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, MP) int32 physical page id, -1 free
+    use_parity: jnp.ndarray,  # (B, MP) bool
+    value_dtype,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize one layer's logical (B, MP*page, Hkv, D) K/V from the
+    serving pool via the planned mix of direct and degraded
+    (sibling ^ parity) reads — the pool-indirected coded_kv_decode
+    datapath. Bit-exact reconstruction; unallocated pages read as zero."""
+    nb = k_banks.shape[0]
+    b, mp = page_table.shape
+    phys = jnp.maximum(page_table, 0)
+    bank = phys % nb
+    slot = phys // nb
+    alloc = page_table >= 0
+
+    def one(banks, par):
+        direct = banks[bank, slot]                    # (B, MP, pg, Hkv, D)
+        if par.shape[0] > 0:
+            deg = banks[bank ^ 1, slot] ^ par[bank // 2, slot]
+            out = jnp.where(use_parity[..., None, None, None], deg, direct)
+        else:
+            out = direct
+        out = jnp.where(alloc[..., None, None, None], out, 0)
+        pg, hkv, d = out.shape[-3:]
+        return jax.lax.bitcast_convert_type(
+            out.reshape(b, mp * pg, hkv, d), value_dtype)
+
+    return one(k_banks, k_par), one(v_banks, v_par)
+
+
+def coded_kv_decode_pool(
+    q: jnp.ndarray,           # (B, H, D)
+    k_banks: jnp.ndarray,
+    v_banks: jnp.ndarray,
+    k_par: jnp.ndarray,
+    v_par: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, MP)
+    use_parity: jnp.ndarray,  # (B, MP)
+    seq_len: jnp.ndarray,     # (B,) int32
+    *,
+    value_dtype=None,
+) -> jnp.ndarray:
+    """Decode attention over the SERVING pool layout (shared page table,
+    per-layer banks) — reference-math anchor for the pooled serve step."""
+    from repro.kernels.coded_kv_decode.ref import decode_attention_ref
+    if value_dtype is None:
+        value_dtype = q.dtype
+    k, v = gather_pool_layer(k_banks, v_banks, k_par, v_par,
+                             page_table, use_parity, jnp.dtype(value_dtype))
+    return decode_attention_ref(q, k, v, seq_len.astype(jnp.int32))
+
+
 def coded_kv_decode(
     q: jnp.ndarray,
     k_banks: jnp.ndarray,

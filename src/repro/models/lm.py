@@ -642,3 +642,86 @@ def decode_step(cfg: ModelConfig, params: Params, token: jnp.ndarray,
     x = ly.apply_norm(cfg, params["final_norm"], x)
     new_cache["pos"] = pos + 1
     return _logits(cfg, params, x)[:, 0], new_cache
+
+
+def decode_step_pooled(cfg: ModelConfig, kvcfg, params: Params,
+                       token: jnp.ndarray, pool, tele, *, unroll: int = 1,
+                       recode_budget: Optional[int] = None):
+    """One decode step over the coded KV page pool (the serving path).
+
+    token (B,) int32. ``pool`` is a ``runtime.kvbank.PooledKV`` whose
+    page-table rows were assigned host-side at admission; ``tele`` is a
+    ``repro.obs.serve.ServeTelemetry`` or ``None`` (metrics off — the
+    compiled program is identical to a build that never traced telemetry).
+    Returns ``(logits (B,V) f32, pool', tele')``.
+
+    Appends go through the code-status table (touched parity rows stale),
+    reads go through the shared ``plan_reads`` plan + the pool-indirected
+    ``coded_kv_decode`` gather, and the ReCoding unit refreshes parity
+    after the scan. Slots without a page-table row write via the bank sink
+    and keep length 0; the server ignores their outputs.
+    """
+    from repro.kernels.coded_kv_decode import ops as ckd_ops
+    from repro.obs import serve as obs_serve
+    from repro.runtime import kvbank as kb
+
+    assert cfg.family in ("dense", "moe", "vlm") and not cfg.is_encdec \
+        and cfg.sliding_window == 0, \
+        "pooled decode supports global-attention decoder families"
+    cd = _dtype(cfg.compute_dtype)
+    params = _cast_params(params, cd)
+    b = token.shape[0]
+    pos = pool.length
+    active = (pool.page_table[:, 0] >= 0) & (pos > 0)
+    x = embed_lookup(cfg, params["embed"], token[:, None], cd)
+    if cfg.pos == "learned":
+        mp = params["pos_embed"].shape[0]
+        x = x + params["pos_embed"][jnp.minimum(pos, mp - 1)][:, None].astype(cd)
+
+    widx = kb.pool_write_index(kvcfg, pool, active)
+    pool = kb.pool_mark_stale(kvcfg, pool, widx)
+    len_eff = pos + active.astype(jnp.int32)
+    plan = kb.pool_plan(kvcfg, pool, length=len_eff)
+
+    def body(xc, bps):
+        bp, kbank, vbank, kpar, vpar = bps
+        h = ly.apply_norm(cfg, bp["norm1"], xc)
+        q, k, v = ly.qkv_proj(cfg, bp["attn"], h)
+        if cfg.pos == "rope":
+            q = ly.rope(q, pos[:, None], cfg.rope_theta)
+            k = ly.rope(k, pos[:, None], cfg.rope_theta)
+        kbank, vbank = kb.pool_write_layer(kvcfg, kbank, vbank, widx,
+                                           k[:, 0], v[:, 0])
+        k_log, v_log = ckd_ops.gather_pool_layer(
+            kbank, vbank, kpar, vpar, pool.page_table, plan.use_parity, cd)
+        mask = jnp.arange(k_log.shape[1])[None, :] < len_eff[:, None]
+        o = ly.mha(q, k_log, v_log, mask[:, None, None, None, :])
+        xc = xc + o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ bp["attn"]["wo"]
+        h = ly.apply_norm(cfg, bp["norm2"], xc)
+        if "moe" in bp:
+            xc = xc + moe_mod.moe_block(cfg, bp["moe"], h)
+        else:
+            xc = xc + ly.mlp_block(cfg, bp["mlp"], h)
+        return xc, (kbank, vbank)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], pool.k_banks, pool.v_banks,
+                  pool.k_par, pool.v_par), unroll=unroll)
+    pool = pool._replace(k_banks=k_new, v_banks=v_new, length=len_eff)
+    stale_before = jnp.sum((~pool.parity_fresh).astype(jnp.int32))
+    pool, recoded = kb.pool_recode(kvcfg, pool, budget=recode_budget)
+
+    if tele is not None:
+        needed, bank = kb.pool_read_sets(kvcfg, pool.page_table, len_eff)
+        lat = kb.read_latencies(kvcfg, pool.page_table, len_eff,
+                                plan.use_parity)
+        tele = obs_serve.update_serve_telemetry(
+            tele, load=plan.load, needed=needed, bank=bank,
+            use_parity=plan.use_parity, latencies=lat,
+            stale_before=stale_before, recoded=recoded,
+            appended=jnp.sum((widx[0] < kvcfg.n_banks).astype(jnp.int32)),
+            uncoded_cycles=plan.uncoded_cycles,
+            coded_cycles=plan.coded_cycles)
+
+    x = ly.apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x)[:, 0], pool, tele

@@ -12,7 +12,11 @@ Layers (see docs/observability.md):
                  SHA, device topology, wall times) attached to every
                  ``BENCH_*.json`` by ``benchmarks.common.emit``.
 * ``report``   — stall-attribution markdown reports (per-bank heatmap
-                 tables, coded vs uncoded) for the fig18/19/20 suites.
+                 tables, coded vs uncoded) for the fig18/19/20 suites,
+                 plus the ``--serve`` request-path section.
+* ``serve``    — serving metric planes for the coded KV page pool (bank
+                 load/latency histograms, read provenance, recode backlog)
+                 and host-side request lifecycle spans (ServeLog).
 
 ``core/state.py`` imports ``repro.obs.planes``; everything else here pulls
 in the sweep layer, so the submodules load lazily to keep the core import
@@ -26,12 +30,12 @@ from repro.obs.planes import (HIST_BINS, READ_CLASSES, STALL_CAUSES,
 __all__ = [
     "HIST_BINS", "READ_CLASSES", "STALL_CAUSES", "WAIT_CAUSES",
     "WRITE_CLASSES", "Telemetry", "TelemetrySnapshot", "init_telemetry",
-    "lat_bin", "snapshot", "timeline", "runlog", "report",
+    "lat_bin", "snapshot", "timeline", "runlog", "report", "serve",
 ]
 
 
 def __getattr__(name):
-    if name in ("timeline", "runlog", "report"):
+    if name in ("timeline", "runlog", "report", "serve"):
         import importlib
         return importlib.import_module(f"repro.obs.{name}")
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -1,0 +1,319 @@
+"""Request-path observability for the coded KV serving stack.
+
+Two halves, mirroring ``obs/planes.py``'s split:
+
+* **Device planes** (``ServeTelemetry``): uint32 counters updated inside
+  the jitted pooled decode step — per-bank load histograms, direct vs
+  degraded read provenance, per-bank port-cycle (critical-word) latency
+  log2 histograms, and the stale-parity/ReCoding backlog. Telemetry off is
+  a ``None`` leaf in the serve cache: the carry structure and the compiled
+  program are bit-identical to a build that never heard of telemetry
+  (locked by ``repro.analysis.jaxpr.lint_serve_step``).
+* **Host spans** (``ServeLog``): per-request lifecycle events
+  (queued → prefill → decode slot → finished) with admission wait, TTFT
+  and inter-token latency, exported through ``obs/timeline.py``'s
+  Chrome-trace layer and summarized by ``repro.obs.report --serve``.
+
+Every device counter has an independent pure-NumPy recompute in
+``repro.oracle.kvpool``; ``ServeSnapshot.check_against`` compares them
+exactly and raises on any mismatch.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.planes import HIST_BINS, lat_bin
+
+# Chrome-trace thread ids for the serving rows (timeline.py owns 1..4)
+TID_SERVE_QUEUE = 10       # admission waits
+TID_SERVE_SLOT0 = 11       # decode slots: TID_SERVE_SLOT0 + slot index
+
+
+class ServeTelemetry(NamedTuple):
+    """Device-side serving metric planes (all uint32)."""
+    bank_load_hist: jnp.ndarray   # (NB, HIST_BINS) per-step load histogram
+    read_mode_bank: jnp.ndarray   # (NB, 2) [direct, degraded] by home bank
+    port_lat_hist: jnp.ndarray    # (NB, HIST_BINS) critical-word latency,
+    #                               attributed to the port that served it
+    stale_backlog: jnp.ndarray    # () post-recode stale-row integral
+    stale_hwm: jnp.ndarray        # () stale-row high-water mark
+    recoded_rows: jnp.ndarray     # () rows the ReCoding unit refreshed
+    decode_steps: jnp.ndarray     # ()
+    appended_tokens: jnp.ndarray  # ()
+    uncoded_cycles: jnp.ndarray   # () sum of per-step uncoded port cycles
+    coded_cycles: jnp.ndarray     # () sum of per-step coded port cycles
+
+
+def init_serve_telemetry(n_banks: int) -> ServeTelemetry:
+    u = jnp.uint32
+    z = jnp.zeros
+    return ServeTelemetry(
+        bank_load_hist=z((n_banks, HIST_BINS), u),
+        read_mode_bank=z((n_banks, 2), u),
+        port_lat_hist=z((n_banks, HIST_BINS), u),
+        stale_backlog=z((), u), stale_hwm=z((), u), recoded_rows=z((), u),
+        decode_steps=z((), u), appended_tokens=z((), u),
+        uncoded_cycles=z((), u), coded_cycles=z((), u))
+
+
+def update_serve_telemetry(tele: ServeTelemetry, *, load, needed, bank,
+                           use_parity, latencies, stale_before, recoded,
+                           appended, uncoded_cycles,
+                           coded_cycles) -> ServeTelemetry:
+    """Fold one pooled decode step's plan into the planes (traced)."""
+    nb = tele.bank_load_hist.shape[0]
+    direct = needed & ~use_parity
+    deg = needed & use_parity
+    u32 = jnp.uint32
+    loads = tele.bank_load_hist.at[jnp.arange(nb), lat_bin(load)].add(1)
+    modes = tele.read_mode_bank.at[
+        jnp.where(direct, bank, nb), 0].add(1, mode="drop")
+    modes = modes.at[jnp.where(deg, bank, nb), 1].add(1, mode="drop")
+    port = jnp.where(deg, bank ^ 1, bank)
+    hist = tele.port_lat_hist.at[
+        jnp.where(needed, port, nb), lat_bin(latencies)].add(1, mode="drop")
+    sb = stale_before.astype(u32)
+    rc = recoded.astype(u32)
+    return tele._replace(
+        bank_load_hist=loads, read_mode_bank=modes, port_lat_hist=hist,
+        stale_backlog=tele.stale_backlog + sb - rc,
+        stale_hwm=jnp.maximum(tele.stale_hwm, sb),
+        recoded_rows=tele.recoded_rows + rc,
+        decode_steps=tele.decode_steps + 1,
+        appended_tokens=tele.appended_tokens + appended.astype(u32),
+        uncoded_cycles=tele.uncoded_cycles + uncoded_cycles.astype(u32),
+        coded_cycles=tele.coded_cycles + coded_cycles.astype(u32))
+
+
+class ServeSnapshot:
+    """Host-side view of the serving planes with derived aggregates."""
+
+    def __init__(self, tele: ServeTelemetry):
+        self.bank_load_hist = np.asarray(tele.bank_load_hist, np.int64)
+        self.read_mode_bank = np.asarray(tele.read_mode_bank, np.int64)
+        self.port_lat_hist = np.asarray(tele.port_lat_hist, np.int64)
+        self.stale_backlog = int(tele.stale_backlog)
+        self.stale_hwm = int(tele.stale_hwm)
+        self.recoded_rows = int(tele.recoded_rows)
+        self.decode_steps = int(tele.decode_steps)
+        self.appended_tokens = int(tele.appended_tokens)
+        self.uncoded_cycles = int(tele.uncoded_cycles)
+        self.coded_cycles = int(tele.coded_cycles)
+
+    # ------------------------------------------------------------ derived
+    @property
+    def direct_reads(self) -> int:
+        return int(self.read_mode_bank[:, 0].sum())
+
+    @property
+    def degraded_reads(self) -> int:
+        return int(self.read_mode_bank[:, 1].sum())
+
+    @property
+    def served_pages(self) -> int:
+        return self.direct_reads + self.degraded_reads
+
+    @property
+    def cycles_saved(self) -> int:
+        return self.uncoded_cycles - self.coded_cycles
+
+    def as_dict(self) -> Dict:
+        return {
+            "bank_load_hist": self.bank_load_hist.tolist(),
+            "read_mode_bank": self.read_mode_bank.tolist(),
+            "port_lat_hist": self.port_lat_hist.tolist(),
+            "stale_backlog": self.stale_backlog,
+            "stale_hwm": self.stale_hwm,
+            "recoded_rows": self.recoded_rows,
+            "decode_steps": self.decode_steps,
+            "appended_tokens": self.appended_tokens,
+            "uncoded_cycles": self.uncoded_cycles,
+            "coded_cycles": self.coded_cycles,
+            "direct_reads": self.direct_reads,
+            "degraded_reads": self.degraded_reads,
+            "served_pages": self.served_pages,
+            "cycles_saved": self.cycles_saved,
+        }
+
+    def check_against(self, totals) -> None:
+        """Exact conformance vs ``repro.oracle.kvpool.PlaneTotals``;
+        raises AssertionError on the first disagreeing counter."""
+        for field in ("bank_load_hist", "read_mode_bank", "port_lat_hist"):
+            dev, exp = getattr(self, field), getattr(totals, field)
+            if not np.array_equal(dev, np.asarray(exp)):
+                raise AssertionError(
+                    f"serve plane {field!r} disagrees with the oracle "
+                    f"recompute:\ndevice=\n{dev}\noracle=\n{exp}")
+        for field in ("stale_backlog", "stale_hwm", "recoded_rows",
+                      "decode_steps", "appended_tokens", "uncoded_cycles",
+                      "coded_cycles"):
+            dev, exp = getattr(self, field), int(getattr(totals, field))
+            if dev != exp:
+                raise AssertionError(
+                    f"serve counter {field!r}: device={dev} oracle={exp}")
+
+
+def snapshot(tele: ServeTelemetry) -> ServeSnapshot:
+    return ServeSnapshot(tele)
+
+
+# ---------------------------------------------------------------------------
+# Host-side request lifecycle spans
+# ---------------------------------------------------------------------------
+
+class _Req:
+    __slots__ = ("rid", "submit", "admit", "prefill_done", "slot",
+                 "prompt_len", "tokens", "finish")
+
+    def __init__(self, rid, now):
+        self.rid = rid
+        self.submit = now
+        self.admit = None
+        self.prefill_done = None
+        self.slot = None
+        self.prompt_len = 0
+        self.tokens: List[float] = []   # decode-token completion times
+        self.finish = None
+
+
+class ServeLog:
+    """Per-request lifecycle spans, recorded host-side by the server.
+
+    The clock is injectable so tests can drive it deterministically; the
+    default is ``time.perf_counter``.
+    """
+
+    def __init__(self, clock=None):
+        if clock is None:
+            import time
+            clock = time.perf_counter
+        self._clock = clock
+        self._t0 = clock()
+        self._reqs: Dict[int, _Req] = {}
+
+    def _now(self) -> float:
+        return self._clock() - self._t0
+
+    def _get(self, rid: int) -> _Req:
+        # requests restored from another node's snapshot were never
+        # submitted here — adopt them with submit = now
+        if rid not in self._reqs:
+            self._reqs[rid] = _Req(rid, self._now())
+        return self._reqs[rid]
+
+    # ------------------------------------------------------------- events
+    def submit(self, rid: int) -> None:
+        self._reqs[rid] = _Req(rid, self._now())
+
+    def admit(self, rid: int, slot: int, prompt_len: int) -> None:
+        r = self._get(rid)
+        r.admit, r.slot, r.prompt_len = self._now(), slot, prompt_len
+
+    def prefill_done(self, rid: int) -> None:
+        self._get(rid).prefill_done = self._now()
+
+    def token(self, rid: int) -> None:
+        self._get(rid).tokens.append(self._now())
+
+    def finish(self, rid: int) -> None:
+        self._get(rid).finish = self._now()
+
+    # ------------------------------------------------------------ queries
+    def spans(self) -> List[Dict]:
+        out = []
+        for r in sorted(self._reqs.values(), key=lambda r: r.rid):
+            ticks = ([r.prefill_done] if r.prefill_done is not None else []) \
+                + r.tokens
+            itl = [b - a for a, b in zip(ticks, ticks[1:])]
+            out.append({
+                "rid": r.rid, "slot": r.slot, "prompt_len": r.prompt_len,
+                "submit_s": r.submit, "admit_s": r.admit,
+                "finish_s": r.finish,
+                "admission_wait_s":
+                    None if r.admit is None else r.admit - r.submit,
+                "ttft_s": None if r.prefill_done is None
+                    else r.prefill_done - r.submit,
+                "n_tokens": len(ticks),
+                "inter_token_s": itl,
+            })
+        return out
+
+    def summary(self) -> Dict:
+        spans = self.spans()
+        ttfts = [s["ttft_s"] for s in spans if s["ttft_s"] is not None]
+        waits = [s["admission_wait_s"] for s in spans
+                 if s["admission_wait_s"] is not None]
+        itl = [x for s in spans for x in s["inter_token_s"]]
+        pct = (lambda xs, q:
+               float(np.percentile(np.asarray(xs), q)) if xs else None)
+        return {
+            "requests": len(spans),
+            "finished": sum(s["finish_s"] is not None for s in spans),
+            "tokens": sum(s["n_tokens"] for s in spans),
+            "ttft_p50_s": pct(ttfts, 50), "ttft_p99_s": pct(ttfts, 99),
+            "admission_wait_p50_s": pct(waits, 50),
+            "inter_token_p50_s": pct(itl, 50),
+            "inter_token_p99_s": pct(itl, 99),
+        }
+
+    # ------------------------------------------------------ chrome export
+    def to_chrome_events(self) -> List[Dict]:
+        """Serving rows for ``obs.timeline.export_chrome_trace``: one
+        "queue" row plus one row per decode slot."""
+        us = 1e6
+        ev: List[Dict] = [
+            {"name": "thread_name", "ph": "M", "pid": 0,
+             "tid": TID_SERVE_QUEUE, "args": {"name": "serve queue"}},
+        ]
+        slots = sorted({r.slot for r in self._reqs.values()
+                        if r.slot is not None})
+        for s in slots:
+            ev.append({"name": "thread_name", "ph": "M", "pid": 0,
+                       "tid": TID_SERVE_SLOT0 + s,
+                       "args": {"name": f"serve slot {s}"}})
+        for r in sorted(self._reqs.values(), key=lambda r: r.rid):
+            if r.admit is not None:
+                ev.append({"name": f"queued req {r.rid}", "ph": "X",
+                           "pid": 0, "tid": TID_SERVE_QUEUE,
+                           "ts": r.submit * us,
+                           "dur": (r.admit - r.submit) * us,
+                           "args": {"rid": r.rid}})
+            if r.admit is None or r.slot is None:
+                continue
+            end = r.finish if r.finish is not None else (
+                r.tokens[-1] if r.tokens else r.admit)
+            ev.append({"name": f"req {r.rid}", "ph": "X", "pid": 0,
+                       "tid": TID_SERVE_SLOT0 + r.slot, "ts": r.admit * us,
+                       "dur": (end - r.admit) * us,
+                       "args": {"rid": r.rid,
+                                "prompt_len": r.prompt_len,
+                                "n_tokens": len(r.tokens) + 1}})
+            if r.prefill_done is not None:
+                ev.append({"name": f"first token req {r.rid}", "ph": "i",
+                           "pid": 0, "tid": TID_SERVE_SLOT0 + r.slot,
+                           "ts": r.prefill_done * us, "s": "t"})
+        return ev
+
+    def export_chrome_trace(self, path: str,
+                            manifest: Optional[Dict] = None) -> str:
+        from repro.obs import timeline
+        return timeline.export_chrome_trace(
+            self.to_chrome_events(), path, manifest=manifest)
+
+
+def format_summary(snap: ServeSnapshot) -> str:
+    """One-paragraph console summary (used by launch/serve.py)."""
+    lines = [
+        f"serve planes: {snap.decode_steps} decode steps, "
+        f"{snap.appended_tokens} tokens appended, "
+        f"{snap.served_pages} page reads "
+        f"({snap.degraded_reads} degraded)",
+        f"  port cycles: coded {snap.coded_cycles} vs uncoded "
+        f"{snap.uncoded_cycles} (saved {snap.cycles_saved})",
+        f"  recode: {snap.recoded_rows} rows refreshed, backlog integral "
+        f"{snap.stale_backlog}, high-water {snap.stale_hwm} stale rows",
+    ]
+    return "\n".join(lines)

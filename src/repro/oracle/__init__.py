@@ -9,6 +9,8 @@ Public surface:
   codes — scheme tables re-derived from the paper (§III)
   model — ``OracleMemorySystem`` (cycle engine, plan builders, recode,
           dynamic coding), ``OracleParams.derive``, ``OracleResult``
+  kvpool — serving KV-pool plan/latency/telemetry recompute (the golden
+          model behind ``repro.obs.serve`` and ``bench_serve``)
 """
 from repro.oracle.codes import (  # noqa: F401
     MAX_OPTS,
@@ -16,6 +18,12 @@ from repro.oracle.codes import (  # noqa: F401
     ORACLE_SCHEMES,
     OracleScheme,
     oracle_scheme,
+)
+from repro.oracle.kvpool import (  # noqa: F401
+    PlaneTotals,
+    StepExpectation,
+    expected_step,
+    plane_totals,
 )
 from repro.oracle.model import (  # noqa: F401
     MODE_DIRECT,

@@ -59,6 +59,28 @@ class ReadPlan(NamedTuple):
     use_parity: jnp.ndarray      # (B, max_pages) bool
     uncoded_cycles: jnp.ndarray  # () int32 — max bank load, whole step
     coded_cycles: jnp.ndarray    # () int32 — port cycles with parity serving
+    load: jnp.ndarray            # (n_banks,) int32 — needed pages per bank
+
+
+class PooledKV(NamedTuple):
+    """Layered serving pool: one shared page table over per-layer banks.
+
+    The serving path's decode step reads EVERY layer's KV through the same
+    logical pages, so the block table, code-status table and plan are
+    shared across layers while the payload arrays carry a leading layer
+    axis. ``k_par.shape[1] == 0`` IS the uncoded-pool config switch: the
+    parity arrays (and the status table) are zero-size, the planner never
+    produces degraded reads, and the compiled program carries no parity
+    traffic at all.
+    """
+
+    k_banks: jnp.ndarray        # (L, NB, slots, page, Hkv, D) uint lanes
+    v_banks: jnp.ndarray
+    k_par: jnp.ndarray          # (L, NB/2, slots, page, Hkv, D); (L, 0, ...)
+    v_par: jnp.ndarray          #   when the pool is uncoded
+    parity_fresh: jnp.ndarray   # (NB/2, slots) bool — shared status table
+    page_table: jnp.ndarray     # (B, max_pages) int32 physical id, -1 free
+    length: jnp.ndarray         # (B,) int32 tokens present (= decode pos)
 
 
 def init_state(cfg: KVBankConfig, batch: int, n_kv: int, head_dim: int,
@@ -136,6 +158,16 @@ def recode(cfg: KVBankConfig, st: BankedKVState,
     )
 
 
+def pool_read_sets(cfg: KVBankConfig, page_table: jnp.ndarray,
+                   length: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(needed, bank) tables for a step's page reads over shared tables."""
+    mp = page_table.shape[1]
+    needed = (jnp.arange(mp)[None, :] < -(-length[:, None] // cfg.page)) \
+        & (page_table >= 0)                         # (B, MP)
+    bank = jnp.maximum(page_table, 0) % cfg.n_banks
+    return needed, bank
+
+
 def plan_reads(cfg: KVBankConfig, st: BankedKVState) -> ReadPlan:
     """Build this step's page-read plan (vectorized pattern builder).
 
@@ -144,14 +176,22 @@ def plan_reads(cfg: KVBankConfig, st: BankedKVState) -> ReadPlan:
     fresh-parity reads are sent down the degraded path (sibling ^ parity) —
     alternating ranks, the controller's round-robin. Balanced loads get no
     degraded reads (no idle ports — the paper's worst case)."""
-    b, mp = st.page_table.shape
+    return _plan_from_tables(cfg, st.page_table, st.length, st.parity_fresh)
+
+
+def _plan_from_tables(cfg: KVBankConfig, page_table: jnp.ndarray,
+                      length: jnp.ndarray,
+                      parity_fresh: Optional[jnp.ndarray]) -> ReadPlan:
+    """plan_reads over bare tables; ``parity_fresh=None`` plans an uncoded
+    pool (no degraded reads, coded == uncoded cycles)."""
+    b, mp = page_table.shape
     nb = cfg.n_banks
-    needed = (jnp.arange(mp)[None, :] < -(-st.length[:, None] // cfg.page)) \
-        & (st.page_table >= 0)                      # (B, MP)
-    phys = jnp.maximum(st.page_table, 0)
-    bank = phys % nb                                # (B, MP)
-    slot = phys // nb
-    fresh = st.parity_fresh[bank // 2, slot]        # (B, MP)
+    needed, bank = pool_read_sets(cfg, page_table, length)
+    slot = jnp.maximum(page_table, 0) // nb
+    if parity_fresh is None:
+        fresh = jnp.zeros((b, mp), bool)
+    else:
+        fresh = parity_fresh[bank // 2, slot]       # (B, MP)
 
     load = jnp.zeros((nb,), jnp.int32).at[
         jnp.where(needed, bank, nb)].add(1, mode="drop")
@@ -176,7 +216,8 @@ def plan_reads(cfg: KVBankConfig, st: BankedKVState) -> ReadPlan:
     coded = jnp.maximum(jnp.max(d_bank + s_bank), jnp.max(p_bank))
     return ReadPlan(use_parity=use_parity,
                     uncoded_cycles=jnp.max(load),
-                    coded_cycles=coded)
+                    coded_cycles=coded,
+                    load=load)
 
 
 def gather_kv(cfg: KVBankConfig, st: BankedKVState, plan: ReadPlan,
@@ -202,6 +243,201 @@ def gather_kv(cfg: KVBankConfig, st: BankedKVState, plan: ReadPlan,
 
     k = one(st.k_banks, st.k_par)
     v = one(st.v_banks, st.v_par)
+    # host-passed target dtype: static by contract  # analysis: tracer-branch
     k = jax.lax.bitcast_convert_type(k, dtype) if k.dtype != dtype else k
+    # host-passed target dtype: static by contract  # analysis: tracer-branch
     v = jax.lax.bitcast_convert_type(v, dtype) if v.dtype != dtype else v
     return k, v
+
+
+def read_latencies(cfg: KVBankConfig, page_table: jnp.ndarray,
+                   length: jnp.ndarray,
+                   use_parity: jnp.ndarray) -> jnp.ndarray:
+    """Per-page critical-word latency (port cycles) under the planned serving
+    order, (B, max_pages) int32, 0 for pages not read this step.
+
+    Deterministic serialization matching ``plan_reads``' cycle accounting:
+    each bank port serves its DIRECT reads first in request (batch-major)
+    order, then lends cycles to its pair sibling's degraded reads; each
+    parity port serves its group's degraded reads in request order. A
+    degraded read completes when both its sibling word and its parity word
+    have arrived, so the max latency over the step equals
+    ``plan.coded_cycles`` (and equals ``plan.uncoded_cycles`` when
+    ``use_parity`` is all-False)."""
+    b, mp = page_table.shape
+    nb = cfg.n_banks
+    needed, bank = pool_read_sets(cfg, page_table, length)
+    direct = needed & ~use_parity
+    deg = needed & use_parity
+
+    def rank_of(mask, idx, n):
+        oh = mask[..., None] * jax.nn.one_hot(idx, n, dtype=jnp.int32)
+        flat = oh.reshape(b * mp, n)
+        r = (jnp.cumsum(flat, axis=0) - flat).reshape(b, mp, n)
+        return jnp.take_along_axis(r, idx[..., None], -1)[..., 0]
+
+    d_rank = rank_of(direct, bank, nb)
+    s_rank = rank_of(deg, bank, nb)          # degraded share one sibling port
+    p_rank = rank_of(deg, bank // 2, nb // 2)
+    d_bank = jnp.zeros((nb,), jnp.int32).at[
+        jnp.where(direct, bank, nb)].add(1, mode="drop")
+    lat_direct = 1 + d_rank
+    lat_deg = 1 + jnp.maximum(d_bank[bank ^ 1] + s_rank, p_rank)
+    lat = jnp.where(deg, lat_deg, jnp.where(direct, lat_direct, 0))
+    return lat.astype(jnp.int32)
+
+
+def parity_members(n_banks: int):
+    """The pool's parity layout as explicit (members, phys) tables: group g
+    protects data banks (2g, 2g+1) behind its own physical parity port.
+    Single source for the ``repro.analysis`` certificate cross-check."""
+    members = [[2 * g, 2 * g + 1] for g in range(n_banks // 2)]
+    return members, list(range(n_banks // 2))
+
+
+# ---------------------------------------------------------------------------
+# Layered pool used by the serving decode step (runtime/server.py)
+# ---------------------------------------------------------------------------
+
+def pool_init(cfg: KVBankConfig, n_layers: int, batch: int, n_kv: int,
+              head_dim: int, dtype, coded: bool = True) -> PooledKV:
+    u = uint_view_dtype(dtype)
+    nb, pg = cfg.n_banks, cfg.page
+    slots = cfg.pool_pages // nb
+    ng = (nb // 2) if coded else 0
+    shape = (n_layers, nb, slots, pg, n_kv, head_dim)
+    pshape = (n_layers, ng, slots, pg, n_kv, head_dim)
+    return PooledKV(
+        k_banks=jnp.zeros(shape, u), v_banks=jnp.zeros(shape, u),
+        k_par=jnp.zeros(pshape, u), v_par=jnp.zeros(pshape, u),
+        parity_fresh=jnp.ones((ng, slots), bool),
+        page_table=jnp.full((batch, cfg.max_pages), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def pool_coded(pool: PooledKV) -> bool:
+    return pool.k_par.shape[1] > 0
+
+
+def pool_write_index(cfg: KVBankConfig, pool: PooledKV,
+                     active: jnp.ndarray):
+    """(bank, slot, in_page) targets for this step's one-token write per
+    sequence; inactive (or table-exhausted) lanes get the out-of-range bank
+    sink so drop-mode scatters skip them."""
+    b = pool.length.shape[0]
+    pos = pool.length
+    lpage = pos // cfg.page
+    in_page = pos % cfg.page
+    phys = pool.page_table[jnp.arange(b), jnp.minimum(lpage, cfg.max_pages - 1)]
+    ok = active & (lpage < cfg.max_pages) & (phys >= 0)
+    bank = jnp.where(ok, phys % cfg.n_banks, cfg.n_banks)
+    slot = jnp.maximum(phys // cfg.n_banks, 0)
+    return bank, slot, in_page
+
+
+def pool_mark_stale(cfg: KVBankConfig, pool: PooledKV, widx) -> PooledKV:
+    """Code-status update for this step's writes (paper §IV-A status 01)."""
+    ng = pool.parity_fresh.shape[0]
+    if ng == 0:
+        return pool
+    bank, slot, _ = widx
+    grp = jnp.where(bank < cfg.n_banks, bank // 2, ng)
+    fresh = pool.parity_fresh.at[grp, slot].set(False, mode="drop")
+    return pool._replace(parity_fresh=fresh)
+
+
+def pool_write_layer(cfg: KVBankConfig, k_bank: jnp.ndarray,
+                     v_bank: jnp.ndarray, widx, k_new: jnp.ndarray,
+                     v_new: jnp.ndarray):
+    """Write one token's (B, Hkv, D) K/V into ONE layer's bank arrays."""
+    u = k_bank.dtype
+    ku = jax.lax.bitcast_convert_type(k_new, u) if k_new.dtype != u else k_new
+    vu = jax.lax.bitcast_convert_type(v_new, u) if v_new.dtype != u else v_new
+    bank, slot, in_page = widx
+    return (k_bank.at[bank, slot, in_page].set(ku, mode="drop"),
+            v_bank.at[bank, slot, in_page].set(vu, mode="drop"))
+
+
+def pool_plan(cfg: KVBankConfig, pool: PooledKV,
+              length: Optional[jnp.ndarray] = None) -> ReadPlan:
+    """Shared read plan for every layer of a pooled decode step."""
+    fresh = pool.parity_fresh if pool.parity_fresh.shape[0] > 0 else None
+    return _plan_from_tables(cfg, pool.page_table,
+                             pool.length if length is None else length, fresh)
+
+
+def pool_install(cfg: KVBankConfig, pool: PooledKV, slot_i: jnp.ndarray,
+                 k_seq: jnp.ndarray, v_seq: jnp.ndarray) -> PooledKV:
+    """Install a prefilled prompt's (L, T, Hkv, D) K/V into sequence slot
+    ``slot_i`` whose page-table row was assigned host-side. Sets the slot
+    length to T and marks every touched parity row stale."""
+    u = pool.k_banks.dtype
+    ku = jax.lax.bitcast_convert_type(k_seq, u) if k_seq.dtype != u else k_seq
+    vu = jax.lax.bitcast_convert_type(v_seq, u) if v_seq.dtype != u else v_seq
+    t = k_seq.shape[1]
+    j = jnp.arange(t)
+    phys = pool.page_table[slot_i, j // cfg.page]   # (T,)
+    bank = jnp.where(phys >= 0, phys % cfg.n_banks, cfg.n_banks)
+    slot = jnp.maximum(phys // cfg.n_banks, 0)
+    in_page = j % cfg.page
+    k_banks = pool.k_banks.at[:, bank, slot, in_page].set(ku, mode="drop")
+    v_banks = pool.v_banks.at[:, bank, slot, in_page].set(vu, mode="drop")
+    out = pool._replace(k_banks=k_banks, v_banks=v_banks,
+                        length=pool.length.at[slot_i].set(t))
+    ng = pool.parity_fresh.shape[0]
+    if ng == 0:
+        return out
+    grp = jnp.where(bank < cfg.n_banks, bank // 2, ng)
+    fresh = pool.parity_fresh.at[grp, slot].set(False, mode="drop")
+    return out._replace(parity_fresh=fresh)
+
+
+def pool_recode(cfg: KVBankConfig, pool: PooledKV,
+                budget: Optional[int] = None):
+    """ReCoding over the shared status table — all layers of a stale row
+    refresh together. Returns ``(pool, n_recoded)``; ``budget < 0`` disables
+    recoding entirely, ``None`` refreshes everything."""
+    ng = pool.k_par.shape[1]
+    # `budget` is a host int by contract (compile-time)  # analysis: tracer-branch
+    if ng == 0 or (budget is not None and budget < 0):
+        return pool, jnp.int32(0)
+    k_par = pool.k_banks[:, 0::2] ^ pool.k_banks[:, 1::2]
+    v_par = pool.v_banks[:, 0::2] ^ pool.v_banks[:, 1::2]
+    stale = ~pool.parity_fresh
+    if budget is None:
+        n = jnp.sum(stale.astype(jnp.int32))
+        return pool._replace(
+            k_par=k_par, v_par=v_par,
+            parity_fresh=jnp.ones_like(pool.parity_fresh)), n
+    order = jnp.cumsum(stale.reshape(-1).astype(jnp.int32)).reshape(stale.shape)
+    take = stale & (order <= budget)
+    t6 = take[None, ..., None, None, None]
+    return pool._replace(
+        k_par=jnp.where(t6, k_par, pool.k_par),
+        v_par=jnp.where(t6, v_par, pool.v_par),
+        parity_fresh=pool.parity_fresh | take), jnp.sum(take.astype(jnp.int32))
+
+
+def pool_permute(cfg: KVBankConfig, pool: PooledKV,
+                 perm: jnp.ndarray) -> PooledKV:
+    """Relocate physical pages: page p moves to physical id ``perm[p]``
+    (churned free-list placement, or a defrag/migration pass). Page tables
+    are remapped and parity fully rebuilt, so decode output is invariant."""
+
+    def move(banks):
+        lead = banks.shape[:1]
+        x = jnp.moveaxis(banks, 1, 2)               # (L, slots, NB, ...)
+        flat = x.reshape(lead + (-1,) + x.shape[3:])  # phys p at slot*NB+bank
+        y = jnp.zeros_like(flat).at[:, perm].set(flat)
+        y = y.reshape(x.shape)
+        return jnp.moveaxis(y, 2, 1)
+
+    pt = jnp.where(pool.page_table >= 0,
+                   perm[jnp.maximum(pool.page_table, 0)], -1).astype(jnp.int32)
+    out = pool._replace(k_banks=move(pool.k_banks), v_banks=move(pool.v_banks),
+                        page_table=pt)
+    if pool.parity_fresh.shape[0] == 0:
+        return out
+    out, _ = pool_recode(cfg, out, budget=None)
+    return out

@@ -7,8 +7,21 @@ finished (EOS / max_new_tokens). Slots are fixed (``n_slots``) so the decode
 step compiles once; free slots decode garbage that is masked out — the
 standard continuous-batching trick (vLLM-style, static-shape variant).
 
-Fault tolerance: the server state (cache + slot table) is device-resident;
-``snapshot()``/``restore_snapshot()`` round-trips it through host memory so
+Storage backend: when the model config declares KV banks
+(``cfg.kv_banks > 0``, global-attention decoder families), decode runs over
+the coded KV page pool (``runtime/kvbank.PooledKV``): admission assigns
+physical pages from a FIFO free list (freed pages recycle at the tail, so a
+long-running server naturally churns placement), appends mark the code
+status table, reads follow ``plan_reads``' degraded-read plan through the
+pool-indirected ``coded_kv_decode`` gather, and the ReCoding unit refreshes
+parity between steps. ``ServeConfig.coded=False`` switches to the uncoded
+pool (zero-size parity arrays — a genuinely different compiled program),
+and ``ServeConfig.telemetry=True`` rides the ``repro.obs.serve`` metric
+planes in the decode cache. Every request's lifecycle is spanned host-side
+in a ``repro.obs.serve.ServeLog``.
+
+Fault tolerance: the server state (cache + slot table + page accounting) is
+``snapshot()``/``restore_snapshot()`` round-tripped through host memory so
 a serving node can be replaced mid-stream (exercised in tests).
 """
 from __future__ import annotations
@@ -22,6 +35,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.obs import serve as obs_serve
+from repro.runtime import kvbank as kb
 from repro.runtime import steps as steps_mod
 
 
@@ -32,6 +47,12 @@ class ServeConfig:
     max_seq: int = 256
     max_new_tokens: int = 32
     eos_id: int = -1            # -1: never stop early
+    # ---- coded KV page pool (active when cfg.kv_banks > 0) ----
+    coded: bool = True          # False: uncoded pool (no parity arrays)
+    telemetry: bool = False     # device serve metric planes on the carry
+    recode_budget: Optional[int] = None  # None: full recode; -1: never
+    page: int = 0               # tokens per page; 0 -> cfg.kv_page
+    pool_pages: int = 0         # physical pool size; 0 -> 2x working set
 
 
 @dataclasses.dataclass
@@ -42,25 +63,61 @@ class Request:
     done: bool = False
 
 
+def _wants_pool(cfg: ModelConfig) -> bool:
+    # vision prefixes make the prefill cache longer than max_prompt, so the
+    # page-table sizing below would not cover them — keep vlm on the ring.
+    return (cfg.kv_banks > 0 and cfg.family in ("dense", "moe")
+            and not cfg.is_encdec and cfg.sliding_window == 0
+            and cfg.frontend == "none")
+
+
 class Server:
-    def __init__(self, cfg: ModelConfig, sc: ServeConfig, params):
+    def __init__(self, cfg: ModelConfig, sc: ServeConfig, params, clock=None):
         self.cfg, self.sc = cfg, sc
         # ring-buffer slot mapping must agree between prefill and decode
         # caches: any attention window must fit inside max_prompt.
         for w in (cfg.sliding_window, cfg.local_window):
             assert w == 0 or w <= sc.max_prompt, (w, sc.max_prompt)
         self.params = params
-        self.decode = jax.jit(steps_mod.make_serve_step(cfg))
         self.prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * sc.n_slots
+        self.log = obs_serve.ServeLog(clock=clock)
         b = sc.n_slots
-        self.cache = lm.cache_spec(cfg, b, sc.max_seq)
+        self.pooled = _wants_pool(cfg)
+        if self.pooled:
+            page = sc.page or cfg.kv_page
+            mp = -(-sc.max_seq // page)
+            need = b * mp
+            pool_pages = sc.pool_pages or -(-2 * need // cfg.kv_banks) \
+                * cfg.kv_banks
+            assert pool_pages % cfg.kv_banks == 0, (pool_pages, cfg.kv_banks)
+            assert pool_pages >= need, (pool_pages, need)
+            self.kvcfg = kb.KVBankConfig(
+                n_banks=cfg.kv_banks, page=page, pool_pages=pool_pages,
+                max_pages=mp)
+            pool = kb.pool_init(self.kvcfg, cfg.n_layers, b, cfg.n_kv,
+                                cfg.head_dim, jnp.dtype(cfg.compute_dtype),
+                                coded=sc.coded)
+            tele = (obs_serve.init_serve_telemetry(cfg.kv_banks)
+                    if sc.telemetry else None)
+            self.cache: Dict[str, Any] = {"pool": pool, "tele": tele}
+            self.free_pages: List[int] = list(range(pool_pages))
+            self.slot_pages: List[List[int]] = [[] for _ in range(b)]
+            self.decode = jax.jit(steps_mod.make_pooled_serve_step(
+                cfg, self.kvcfg, recode_budget=sc.recode_budget))
+            self._install_pool = jax.jit(
+                lambda pool, i, k, v: kb.pool_install(self.kvcfg, pool,
+                                                      i, k, v))
+        else:
+            self.decode = jax.jit(steps_mod.make_serve_step(cfg))
+            self.cache = lm.cache_spec(cfg, b, sc.max_seq)
         self.tokens = jnp.zeros((b,), jnp.int32)
         self.steps_run = 0
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request):
+        self.log.submit(req.rid)
         self.queue.append(req)
 
     def _admit(self):
@@ -69,6 +126,7 @@ class Server:
                 continue
             req = self.queue.pop(0)
             prompt = req.prompt[-self.sc.max_prompt:]
+            self.log.admit(req.rid, i, len(prompt))
             pad = self.sc.max_prompt - len(prompt)
             toks = jnp.asarray([[0] * pad + prompt], jnp.int32)
             batch = {"tokens": toks}
@@ -83,9 +141,16 @@ class Server:
             tok, cache1 = self.prefill(self.params, batch)
             self._install(i, tok, cache1)
             req.out.append(int(tok[0]))
+            self.log.prefill_done(req.rid)
             self.slots[i] = req
 
     def _install(self, i: int, tok, cache1):
+        if self.pooled:
+            self._install_pooled(i, tok, cache1)
+            return
+        self._install_ring(i, tok, cache1)
+
+    def _install_ring(self, i: int, tok, cache1):
         """Copy a 1-batch prefill cache into slot i of the decode cache."""
         def put(dst, src):
             # dst (B, ...) or (L, B, ...); src has batch 1 in the same spot
@@ -107,12 +172,43 @@ class Server:
         self.cache = jax.tree.map(put, self.cache, cache1)
         self.tokens = self.tokens.at[i].set(tok[0])
 
+    def _install_pooled(self, i: int, tok, cache1):
+        """Assign pool pages to slot i and install the prefilled KV."""
+        need = self.kvcfg.max_pages
+        assert len(self.free_pages) >= need, "pool sized below working set"
+        phys = [self.free_pages.pop(0) for _ in range(need)]
+        pool = self.cache["pool"]
+        pool = pool._replace(
+            page_table=pool.page_table.at[i].set(
+                jnp.asarray(phys, jnp.int32)))
+        pool = self._install_pool(pool, jnp.int32(i),
+                                  cache1["k"][:, 0], cache1["v"][:, 0])
+        self.cache["pool"] = pool
+        self.slot_pages[i] = phys
+        self.tokens = self.tokens.at[i].set(tok[0])
+
+    def _retire(self, i: int):
+        if not self.pooled:
+            return
+        self.free_pages.extend(self.slot_pages[i])
+        self.slot_pages[i] = []
+        pool = self.cache["pool"]
+        self.cache["pool"] = pool._replace(
+            page_table=pool.page_table.at[i].set(-1),
+            length=pool.length.at[i].set(0))
+
     # ----------------------------------------------------------------- step
     def step(self):
         self._admit()
+        self.step_decode()
+
+    def step_decode(self):
+        """One batched decode step (no admission) — exposed so telemetry
+        conformance checks can observe the pool between admit and decode."""
         if not any(s is not None for s in self.slots):
             return
-        self.tokens, self.cache = self.decode(self.params, self.tokens, self.cache)
+        self.tokens, self.cache = self.decode(self.params, self.tokens,
+                                              self.cache)
         self.steps_run += 1
         toks = np.asarray(self.tokens)
         for i, req in enumerate(self.slots):
@@ -120,10 +216,13 @@ class Server:
                 continue
             t = int(toks[i])
             req.out.append(t)
+            self.log.token(req.rid)
             if (self.sc.eos_id >= 0 and t == self.sc.eos_id) or \
                len(req.out) >= self.sc.max_new_tokens:
                 req.done = True
+                self.log.finish(req.rid)
                 self.slots[i] = None
+                self._retire(i)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         finished: List[Request] = []
@@ -134,17 +233,42 @@ class Server:
                 break
         return finished
 
+    # ------------------------------------------------------------ telemetry
+    def serve_snapshot(self) -> Optional[obs_serve.ServeSnapshot]:
+        """Host view of the device serve planes (None when telemetry off)."""
+        tele = self.cache.get("tele") if self.pooled else None
+        return None if tele is None else obs_serve.snapshot(tele)
+
+    def permute_pool(self, perm):
+        """Relocate physical pages (placement churn / defrag model): page p
+        moves to ``perm[p]``; tables, free list and parity follow, so decode
+        output is invariant."""
+        assert self.pooled, "permute_pool requires the paged pool backend"
+        perm = np.asarray(perm)
+        self.cache["pool"] = kb.pool_permute(
+            self.kvcfg, self.cache["pool"], jnp.asarray(perm, jnp.int32))
+        self.free_pages = [int(perm[p]) for p in self.free_pages]
+        self.slot_pages = [[int(perm[p]) for p in pp]
+                           for pp in self.slot_pages]
+
     # -------------------------------------------------------- fault recovery
     def snapshot(self) -> Dict[str, Any]:
-        return {
+        snap = {
             "cache": jax.tree.map(lambda a: np.asarray(a), self.cache),
             "tokens": np.asarray(self.tokens),
             "slots": [(r.rid, list(r.prompt), list(r.out)) if r else None
                       for r in self.slots],
         }
+        if self.pooled:
+            snap["free_pages"] = list(self.free_pages)
+            snap["slot_pages"] = [list(p) for p in self.slot_pages]
+        return snap
 
     def restore_snapshot(self, snap: Dict[str, Any]):
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
         self.tokens = jnp.asarray(snap["tokens"])
         self.slots = [Request(rid=s[0], prompt=s[1], out=s[2]) if s else None
                       for s in snap["slots"]]
+        if self.pooled:
+            self.free_pages = list(snap["free_pages"])
+            self.slot_pages = [list(p) for p in snap["slot_pages"]]

@@ -78,3 +78,24 @@ def make_serve_step(cfg: ModelConfig, *, unroll: int = 1):
         return next_tok, cache
 
     return serve_step
+
+
+def make_pooled_serve_step(cfg: ModelConfig, kvcfg, *, unroll: int = 1,
+                           recode_budget=None):
+    """Greedy decode step over the coded KV page pool.
+
+    ``(params, token (B,), cache) -> (token', cache')`` where the cache is
+    ``{"pool": runtime.kvbank.PooledKV, "tele": ServeTelemetry | None}`` —
+    the same calling convention as ``make_serve_step`` so the server's
+    continuous-batching loop is pool-agnostic. ``tele=None`` compiles the
+    exact same program as a telemetry-free build (locked by
+    ``repro.analysis.jaxpr.lint_serve_step``)."""
+
+    def pooled_serve_step(params, token: jnp.ndarray, cache):
+        logits, pool, tele = lm.decode_step_pooled(
+            cfg, kvcfg, params, token, cache["pool"], cache["tele"],
+            unroll=unroll, recode_budget=recode_budget)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, {"pool": pool, "tele": tele}
+
+    return pooled_serve_step

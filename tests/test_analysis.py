@@ -124,6 +124,27 @@ def test_scheme_layer_clean_on_src():
     assert schemes.run() == []
 
 
+def test_kv_pool_is_certified_subcode():
+    """The serving pool's pairwise layout is certified like any scheme —
+    present in certificates.json, claims proved, and every parity group is
+    verbatim a scheme_i parity (the subcode cross-check)."""
+    saved = schemes.load_certificates()
+    assert "kv_pool" in saved["schemes"]
+    entry = schemes.analyze_scheme("kv_pool", *schemes.pool_tables())
+    assert entry == saved["schemes"]["kv_pool"]
+    assert schemes.verify_scheme_claims("kv_pool", entry) == []
+    assert entry["full_tolerance_k"] == 1
+    assert entry["read_degree_min"] == 2
+    assert schemes.check_pool_subcode() == []
+
+
+def test_pool_subcode_check_fires_on_wrong_parent():
+    """A parent without the pool's pairs must be rejected (the check is
+    load-bearing, not vacuous)."""
+    fs = schemes.check_pool_subcode(parent="uncoded")
+    assert fs and all(f.rule == "pool-subcode" for f in fs)
+
+
 # ----------------------------------------------------------- jaxpr analysis
 def test_jaxpr_lint_flags_baked_python_value():
     mod = _load_fixture_module("bad_jaxpr")
@@ -175,6 +196,13 @@ def test_signature_class_clean_on_small_grid():
     pts = [SweepPoint(n_rows=32, length=8, alpha=a, r=0.25, seed=s)
            for a, s in ((0.5, 0), (0.7, 1))]
     assert jaxpr.lint_signature_classes(pts) == []
+
+
+def test_pooled_serve_step_lint_clean():
+    """The pooled decode step's observability contract holds: tele=None is
+    an absent leaf with a stable carry, tele-on/uncoded/no-recode each
+    trace genuinely different programs."""
+    assert jaxpr.lint_serve_step() == []
 
 
 @pytest.mark.slow

@@ -107,7 +107,9 @@ def test_certificates_cover_all_schemes():
     from repro.core.codes import SCHEMES
 
     cert = anl.load_certificates()
-    assert sorted(cert["schemes"]) == sorted(SCHEMES)
+    # Core schemes plus the serving pool's pairwise layout (a certified
+    # Scheme-I subcode — see analysis.schemes.check_pool_subcode).
+    assert sorted(cert["schemes"]) == sorted([*SCHEMES, "kv_pool"])
     for name, entry in cert["schemes"].items():
         assert name in anl.DECLARED
         assert entry["full_tolerance_k"] == anl.DECLARED[name]["full_k"]

@@ -1,0 +1,247 @@
+"""Serving request-path tests: coded KV pool decode datapath, serve metric
+planes vs the kvpool oracle (exact), placement-churn invariance, mid-stream
+node replacement, and the pooled-vs-ring bit-identity anchor."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import lm
+from repro.obs.report import drive_serve_with_oracle
+from repro.oracle import kvpool
+from repro.runtime import kvbank as kb
+from repro.runtime.server import Request, ServeConfig, Server
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # page 4 divides max_seq, so the pooled gather covers the same logical
+    # positions as the ring cache (the bit-identity anchor below)
+    return dataclasses.replace(get_config("qwen2.5-3b").reduced(), kv_page=4)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_params(cfg, jax.random.key(0), max_seq=48)
+
+
+def _sc(**kw):
+    base = dict(n_slots=3, max_prompt=8, max_seq=24, max_new_tokens=5)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _reqs(cfg, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=[int(x) for x in
+                                   rng.integers(1, cfg.vocab // 2,
+                                                size=3 + i % 4)])
+            for i in range(n)]
+
+
+def _serve(cfg, params, sc, reqs, permute_seed=None):
+    srv = Server(cfg, sc, params)
+    for r in reqs:
+        srv.submit(r)
+    rng = np.random.default_rng(permute_seed)
+    for step in range(200):
+        srv._admit()
+        if not any(s is not None for s in srv.slots):
+            break
+        if permute_seed is not None and step % 2 == 1:
+            srv.permute_pool(rng.permutation(srv.kvcfg.pool_pages))
+        srv.step_decode()
+    return srv
+
+
+# ------------------------------------------------------------ bit identity
+def test_coded_equals_uncoded_tokens(cfg, params):
+    """XOR parity is exact: the coded pool serves bit-identical tokens to
+    the uncoded pool on the same workload."""
+    reqs_c = _reqs(cfg)
+    _serve(cfg, params, _sc(coded=True), reqs_c)
+    reqs_u = _reqs(cfg)
+    _serve(cfg, params, _sc(coded=False), reqs_u)
+    assert [r.out for r in reqs_c] == [r.out for r in reqs_u]
+
+
+def test_pooled_equals_ring_tokens(cfg, params):
+    """The pooled decode datapath reproduces the ring-cache decode exactly
+    (same logical KV in position order, same attention): disabling banks
+    (kv_banks=0 -> ring backend) must not change a single token."""
+    reqs_p = _reqs(cfg)
+    srv_p = _serve(cfg, params, _sc(), reqs_p)
+    assert srv_p.pooled
+    cfg_ring = dataclasses.replace(cfg, kv_banks=0)
+    reqs_r = _reqs(cfg)
+    srv_r = _serve(cfg_ring, params, _sc(), reqs_r)
+    assert not srv_r.pooled
+    assert [r.out for r in reqs_p] == [r.out for r in reqs_r]
+
+
+def test_permute_pool_is_invariant(cfg, params):
+    """Physical placement churn (page permutation mid-run) never changes
+    decode output — only where pages live, not what they hold."""
+    reqs_a = _reqs(cfg)
+    _serve(cfg, params, _sc(), reqs_a)
+    reqs_b = _reqs(cfg)
+    _serve(cfg, params, _sc(), reqs_b, permute_seed=7)
+    assert [r.out for r in reqs_a] == [r.out for r in reqs_b]
+
+
+def test_telemetry_is_observer_only(cfg, params):
+    """Serve metric planes must not perturb decode: telemetry on/off give
+    bit-identical tokens."""
+    reqs_a = _reqs(cfg)
+    _serve(cfg, params, _sc(telemetry=False), reqs_a)
+    reqs_b = _reqs(cfg)
+    _serve(cfg, params, _sc(telemetry=True), reqs_b)
+    assert [r.out for r in reqs_a] == [r.out for r in reqs_b]
+
+
+# ------------------------------------------------------- planes vs oracle
+def test_serve_planes_match_oracle_exactly(cfg, params):
+    """Every device serve-plane counter equals the pure-NumPy kvpool
+    recompute, exactly (checked field-by-field inside check_against)."""
+    srv = Server(cfg, _sc(telemetry=True), params)
+    totals = drive_serve_with_oracle(srv, _reqs(cfg, n=6),
+                                     churn_every=2,
+                                     churn_rng=np.random.default_rng(3))
+    snap = srv.serve_snapshot()
+    snap.check_against(totals)
+    assert snap.decode_steps > 0 and snap.served_pages > 0
+    assert snap.direct_reads + snap.degraded_reads == snap.served_pages
+
+
+def test_recode_budget_minus_one_never_degrades(cfg, params):
+    """With the ReCoding unit off (budget=-1) parity goes permanently
+    stale, so the planner must never issue a degraded read — stale parity
+    is never consumed."""
+    # no churn here: permute_pool legitimately rebuilds parity as part of
+    # moving the data it protects
+    srv = Server(cfg, _sc(telemetry=True, recode_budget=-1), params)
+    totals = drive_serve_with_oracle(srv, _reqs(cfg, n=6))
+    snap = srv.serve_snapshot()
+    snap.check_against(totals)
+    assert snap.recoded_rows == 0
+    # all parity rows that ever hosted a write stay stale; no degraded read
+    # may have touched them
+    assert snap.degraded_reads == 0
+    assert snap.coded_cycles == snap.uncoded_cycles
+
+
+# -------------------------------------------------- device plan vs oracle
+def test_plan_and_latencies_match_oracle_on_random_tables():
+    """plan_reads / read_latencies (device) vs the sequential oracle walk
+    on random page tables: same degraded-read choices, same per-read
+    critical-word latency, and max latency == planned port cycles."""
+    rng = np.random.default_rng(0)
+    cfgk = kb.KVBankConfig(n_banks=8, page=4, pool_pages=64, max_pages=6)
+    for trial in range(8):
+        b = int(rng.integers(2, 6))
+        length = rng.integers(0, cfgk.max_pages * cfgk.page, size=b)
+        n_pages = [kvpool.ceil_div(int(L), cfgk.page) for L in length]
+        phys = rng.choice(cfgk.pool_pages, size=sum(n_pages), replace=False)
+        table = np.full((b, cfgk.max_pages), -1, np.int64)
+        c = 0
+        for i, np_i in enumerate(n_pages):
+            table[i, :np_i] = phys[c:c + np_i]
+            c += np_i
+        fresh = rng.random((cfgk.n_banks // 2,
+                            cfgk.pool_pages // cfgk.n_banks)) < 0.8
+        pt = jnp.asarray(table, jnp.int32)
+        ln = jnp.asarray(length, jnp.int32)
+        plan = kb._plan_from_tables(cfgk, pt, ln, jnp.asarray(fresh))
+        exp = kvpool.plan_reads(cfgk.n_banks, cfgk.page, table, length,
+                                fresh)
+        np.testing.assert_array_equal(np.asarray(plan.use_parity),
+                                      exp["use_parity"])
+        np.testing.assert_array_equal(np.asarray(plan.load), exp["load"])
+        assert int(plan.uncoded_cycles) == exp["uncoded_cycles"]
+        assert int(plan.coded_cycles) == exp["coded_cycles"]
+        lat = np.asarray(kb.read_latencies(cfgk, pt, ln, plan.use_parity))
+        lat_exp = kvpool.read_latencies(cfgk.n_banks, cfgk.page, table,
+                                        length, exp["use_parity"])
+        np.testing.assert_array_equal(lat, lat_exp)
+        if lat.max() > 0:
+            # the plan's makespan is exactly the slowest critical word
+            assert lat.max() == exp["coded_cycles"]
+
+
+# ------------------------------------------------- mid-stream replacement
+def test_node_replacement_midstream(cfg, params):
+    """Snapshot a serving node mid-decode (pool + planes + page
+    accounting), restore into a fresh Server, and finish on both: decode
+    output and every telemetry counter stay bit-identical."""
+    sc = _sc(telemetry=True)
+    srv_a = Server(cfg, sc, params)
+    for r in _reqs(cfg, n=5):
+        srv_a.submit(r)
+    for _ in range(3):
+        srv_a.step()
+    snap = srv_a.snapshot()
+    queue_a = [(r.rid, list(r.prompt), list(r.out)) for r in srv_a.queue]
+
+    srv_b = Server(cfg, sc, params)
+    srv_b.restore_snapshot(snap)
+    srv_b.queue = [Request(rid=q[0], prompt=q[1], out=q[2])
+                   for q in queue_a]
+
+    for srv in (srv_a, srv_b):
+        for _ in range(200):
+            srv.step()
+            if not srv.queue and all(s is None for s in srv.slots):
+                break
+    # both nodes drained; compare the full device state and planes
+    ca = jax.tree.map(np.asarray, srv_a.cache)
+    cb = jax.tree.map(np.asarray, srv_b.cache)
+    for a_leaf, b_leaf in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        np.testing.assert_array_equal(a_leaf, b_leaf)
+    np.testing.assert_array_equal(np.asarray(srv_a.tokens),
+                                  np.asarray(srv_b.tokens))
+    sa, sb = srv_a.serve_snapshot(), srv_b.serve_snapshot()
+    assert sa.as_dict().keys() == sb.as_dict().keys()
+    for k, v in sa.as_dict().items():
+        np.testing.assert_array_equal(v, sb.as_dict()[k])
+    assert srv_a.free_pages == srv_b.free_pages
+
+
+# ---------------------------------------------------------- lifecycle log
+def test_servelog_spans_and_trace(tmp_path):
+    """Host lifecycle spans: TTFT/ITL derived from an injectable clock, and
+    the Chrome-trace export carries queue + slot rows."""
+    from repro.obs import serve as obs_serve
+
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    log = obs_serve.ServeLog(clock=clock)
+    log.submit(0)            # t=1
+    log.admit(0, slot=1, prompt_len=4)   # t=2
+    log.prefill_done(0)      # t=3
+    log.token(0)             # t=4
+    log.token(0)             # t=5
+    log.finish(0)            # t=6
+    (span,) = log.spans()
+    assert span["admission_wait_s"] == 1.0
+    assert span["ttft_s"] == 2.0
+    assert span["inter_token_s"] == [1.0, 1.0]
+    assert span["n_tokens"] == 3    # prefill's first token + 2 decode
+    s = log.summary()
+    assert s["ttft_p50_s"] == 2.0
+
+    path = str(tmp_path / "trace.json")
+    log.export_chrome_trace(path, manifest={"k": "v"})
+    import json
+    blob = json.load(open(path))
+    names = {e.get("name") for e in blob["traceEvents"]}
+    assert "queued req 0" in names and "req 0" in names
+    assert "first token req 0" in names
+    assert blob["otherData"]["manifest"] == {"k": "v"}
