@@ -1,0 +1,230 @@
+"""Pallas kernel microbenchmarks: bytes/s + %-of-roofline per kernel.
+
+Times each of the repo's Pallas datapath kernels on a fixed workload —
+``xor_encode`` (parity encode), ``xor_gather`` (coded row gather),
+``coded_kv_decode`` (banked flash decode) and ``pool_gather`` (the serving
+pool gather) — and reports effective memory bandwidth from *analytic* byte
+counts (bytes each kernel must move for its workload, not device counters,
+so the number is comparable across backends and interpret mode).
+
+The roofline reference is a measured same-process copy bandwidth
+(jit ``x + 1`` over a comparably sized array): ``pct_roofline`` is the
+kernel's effective bytes/s over that copy ceiling. On CPU the kernels run
+in the Pallas interpreter (``interpret=None`` backend resolution,
+docs/kernels.md), so absolute numbers are small — the gate is therefore a
+*trajectory* gate like ``bench_serve``: per-kernel bytes/s regressed
+against the checked-in ``BENCH_kernels.json`` headline with a loose
+``--min-frac`` floor that absorbs machine noise but catches a kernel
+falling off a cliff (e.g. a revived scalar request loop). Only a passing
+full run refreshes the repo-root baseline. ``--smoke`` shrinks workloads
+for hardware-free CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import REPO_ROOT, Timer, emit, table
+
+BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+
+
+def load_baseline():
+    """{kernel: bytes_per_s} from the checked-in trajectory blob, or None.
+    Not keyed on tier — the loose --min-frac floor absorbs the smoke/full
+    workload gap (same contract as bench_serve/bench_cycles)."""
+    if not os.path.exists(BASELINE_PATH):
+        return None
+    try:
+        with open(BASELINE_PATH) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return None
+    head = blob.get("headline", {})
+    out = {k[: -len("_bytes_per_s")]: float(v)
+           for k, v in head.items() if k.endswith("_bytes_per_s") and v}
+    return out or None
+
+
+def _time_best(fn, *args, reps: int = 3) -> float:
+    """Best-of-``reps`` warm wall seconds; first call compiles."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _copy_roofline(nbytes: int) -> float:
+    """Measured streaming bandwidth (bytes/s) of jit ``x + 1`` over an
+    ``nbytes`` uint32 array — the same-process memory ceiling the kernels
+    are scored against (read + write counted)."""
+    n = max(nbytes // 4, 1024)
+    x = jnp.arange(n, dtype=jnp.uint32)
+    f = jax.jit(lambda a: a + jnp.uint32(1))
+    dt = _time_best(f, x)
+    return 2 * x.nbytes / dt
+
+
+def _case_xor_encode(smoke: bool):
+    from repro.kernels.xor_encode import ops
+    nd, n_par, w = 8, 4, 256
+    rows = 128 if smoke else 512
+    sz = 4
+    rng = np.random.default_rng(0)
+    banks = jnp.asarray(rng.integers(0, 2**32, (nd, rows, w), dtype=np.uint32))
+    members = [[2 * g, 2 * g + 1] for g in range(n_par)]
+
+    def f():
+        return ops.encode_parities(banks, members, block_rows=128)
+
+    dt = _time_best(f)
+    nbytes = (nd + n_par) * rows * w * sz
+    return "xor_encode", nbytes, dt
+
+
+def _case_xor_gather(smoke: bool):
+    from repro.kernels.xor_gather.kernel import gather_decode_pallas
+    nd, n_par, w = 8, 4, 256
+    rows = 128 if smoke else 256
+    n = 16 if smoke else 64
+    rb, bt = 8, 128
+    sz = 4
+    rng = np.random.default_rng(1)
+    banks = jnp.asarray(rng.integers(0, 2**32, (nd, rows, w), dtype=np.uint32))
+    pars = jnp.asarray(rng.integers(0, 2**32, (n_par, rows, w),
+                                    dtype=np.uint32))
+    bank = jnp.asarray(rng.integers(0, nd, n), jnp.int32)
+    row = jnp.asarray(rng.integers(0, rows, n), jnp.int32)
+    mode = jnp.ones((n,), jnp.int32)            # all direct reads
+    zero = jnp.zeros((n,), jnp.int32)
+    neg = jnp.full((n,), -1, jnp.int32)
+
+    def f():
+        return gather_decode_pallas(banks, pars, bank, row, mode, zero,
+                                    zero, neg, neg,
+                                    req_block=rb, row_block=bt)
+
+    dt = _time_best(f)
+    tiles = -(-n // rb)
+    nbytes = tiles * (nd + n_par) * rows * w * sz + n * w * sz
+    return "xor_gather", nbytes, dt
+
+
+def _case_coded_kv_decode(smoke: bool):
+    from repro.kernels.coded_kv_decode import ops
+    b, nb, page, hkv, d, g = 2, 4, 8, 2, 64, 2
+    t_len = nb * page * (1 if smoke else 4)
+    rng = np.random.default_rng(2)
+    k = jnp.asarray(rng.normal(size=(b, t_len, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t_len, hkv, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, g * hkv, d)), jnp.float32)
+    kb, vb, kp, vp, n_pages = ops.pack_kv_banks(k, v, nb, page)
+    upar = jnp.zeros((b, n_pages), jnp.int32)
+    slen = jnp.full((b,), t_len, jnp.int32)
+
+    def f():
+        return ops.coded_kv_decode(q, kb, vb, kp, vp, upar, slen)
+
+    dt = _time_best(f)
+    sz = 4
+    nbytes = 2 * b * (kb.shape[1] + kp.shape[1]) * kb.shape[2] \
+        * page * hkv * d * sz + q.nbytes + q.nbytes
+    return "coded_kv_decode", nbytes, dt
+
+
+def _case_pool_gather(smoke: bool):
+    from repro.kernels.coded_kv_decode.kernel import gather_pool_pallas
+    nb, slots, pg, hkv, d = 8, 8 if smoke else 32, 4, 2, 64
+    b, mp = 4, 8 if smoke else 16
+    sz = 4
+    rng = np.random.default_rng(3)
+    shape = (nb, slots, pg, hkv, d)
+    kb = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    vb = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    kp = kb.reshape((nb // 2, 2) + shape[1:])[:, 0] \
+        ^ kb.reshape((nb // 2, 2) + shape[1:])[:, 1]
+    vp = vb.reshape((nb // 2, 2) + shape[1:])[:, 0] \
+        ^ vb.reshape((nb // 2, 2) + shape[1:])[:, 1]
+    pt = jnp.asarray(rng.permutation(nb * slots)[: b * mp].reshape(b, mp),
+                     jnp.int32)
+    upar = jnp.asarray(rng.integers(0, 2, (b, mp)), jnp.int32)
+
+    def f():
+        return gather_pool_pallas(kb, vb, kp, vp, pt, upar)
+
+    dt = _time_best(f)
+    # each grid step loads direct + sibling + parity pages (k and v) and
+    # writes one reconstructed page pair
+    nbytes = b * mp * (6 + 2) * pg * hkv * d * sz
+    return "pool_gather", nbytes, dt
+
+
+CASES = (_case_xor_encode, _case_xor_gather, _case_coded_kv_decode,
+         _case_pool_gather)
+
+
+def run(smoke: bool = False, min_frac: float = 0.3):
+    results = []
+    with Timer() as t_all:
+        for case in CASES:
+            results.append(case(smoke))
+    roof = _copy_roofline(max(nb for _, nb, _ in results))
+
+    rows = []
+    for name, nbytes, dt in results:
+        bps = nbytes / dt
+        rows.append({"kernel": name, "bytes": nbytes,
+                     "wall_s": round(dt, 6),
+                     "bytes_per_s": round(bps, 1),
+                     "pct_roofline": round(100 * bps / roof, 2)})
+    print(f"\n== bench_kernels{' [smoke]' if smoke else ''}: "
+          f"copy roofline {roof / 1e9:.2f} GB/s ==")
+    print(table(rows, list(rows[0].keys())))
+
+    baseline = load_baseline()
+    ok = True
+    if baseline is None:
+        print("no checked-in kernel baseline — recording trajectory only")
+    else:
+        for r in rows:
+            base = baseline.get(r["kernel"])
+            if not base:
+                continue
+            frac = r["bytes_per_s"] / base
+            good = frac >= min_frac
+            ok = ok and good
+            print(f"{r['kernel']}: {r['bytes_per_s'] / 1e6:.2f} MB/s vs "
+                  f"baseline {base / 1e6:.2f} ({frac:.2f}x, floor "
+                  f"{min_frac:g}x) -> {'PASS' if good else 'FAIL'}")
+
+    headline = {f"{r['kernel']}_bytes_per_s": r["bytes_per_s"]
+                for r in rows}
+    headline["copy_roofline_bytes_per_s"] = round(roof, 1)
+    emit("BENCH_kernels", rows, {
+        "smoke": smoke, "min_frac": min_frac,
+        "baseline": baseline, "regressed": not ok,
+        "backend": jax.default_backend(),
+    }, root=not smoke and ok, headline=headline,
+        timings={"total_s": t_all.s})
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workloads (hardware-free CI)")
+    ap.add_argument("--min-frac", type=float, default=0.3,
+                    help="fail below this fraction of the checked-in "
+                         "per-kernel bytes/s baseline")
+    args = ap.parse_args()
+    raise SystemExit(0 if run(smoke=args.smoke, min_frac=args.min_frac)
+                     else 1)

@@ -141,6 +141,20 @@ def _timed_run(cfg, sc, params, reqs, seed):
     return n_tok, dt
 
 
+def _kernel_identity(cfg, base, params, make_reqs, seed) -> bool:
+    """Serve the same workload through the reference pool gather and the
+    Pallas ``gather_pool_pallas`` datapath (``ServeConfig.kernel``): the
+    kernel is bit-exact by design, so every served token must match."""
+    from repro.runtime.server import ServeConfig
+    outs = {}
+    for kern in ("reference", "pallas"):
+        rs = make_reqs()
+        _timed_run(cfg, ServeConfig(**base, coded=True, kernel=kern),
+                   params, rs, seed)
+        outs[kern] = [r.out for r in rs]
+    return outs["reference"] == outs["pallas"]
+
+
 def run(smoke: bool = False, min_frac: float = 0.3, seed: int = 0):
     from repro.configs.base import get_config
     from repro.models import lm
@@ -193,6 +207,10 @@ def run(smoke: bool = False, min_frac: float = 0.3, seed: int = 0):
           f"{CHURN_EVERY} steps{' [smoke]' if smoke else ''} ==")
     print(table(rows, list(rows[0].keys())))
 
+    kernel_same = _kernel_identity(cfg, base, params, reqs, seed)
+    print(f"pallas pool-gather kernel vs reference gather: token-"
+          f"{'identical -> PASS' if kernel_same else 'DIVERGENT -> FAIL'}")
+
     coded_wins = (totals.coded_cycles < totals.uncoded_cycles
                   and float(lat_c.mean()) < float(lat_u.mean())
                   and p99_c <= p99_u)
@@ -200,7 +218,7 @@ def run(smoke: bool = False, min_frac: float = 0.3, seed: int = 0):
           f"{totals.coded_cycles} vs {totals.uncoded_cycles} port cycles, "
           f"mean lat {lat_c.mean():.3f} vs {lat_u.mean():.3f} "
           f"-> {'PASS' if coded_wins else 'FAIL'}")
-    ok = coded_wins
+    ok = coded_wins and kernel_same
     if overhead is not None:
         tele_ok = overhead <= 1.05
         print(f"telemetry-on overhead {overhead:.3f}x (gate 1.05x) "
@@ -224,7 +242,8 @@ def run(smoke: bool = False, min_frac: float = 0.3, seed: int = 0):
         "n_slots": base["n_slots"], "page": 4, "n_banks": cfg.kv_banks,
         "churn_every": CHURN_EVERY, "smoke": smoke,
         "baseline_tokens_per_s": baseline, "min_frac": min_frac,
-        "coded_wins": coded_wins, "regressed": regressed,
+        "coded_wins": coded_wins, "kernel_identity": kernel_same,
+        "regressed": regressed,
         "telemetry_overhead": overhead,
     }, root=not smoke and ok,
         headline={"tokens_per_s": round(tput_c, 1),

@@ -15,10 +15,11 @@ def main():
     args = ap.parse_args()
     t0 = time.time()
 
-    from benchmarks import (bench_cycles, bench_embedding, bench_kvbank,
-                            bench_serve, bench_stream, bench_sweep,
-                            fig18_dedup, fig19_split, fig20_ramp,
-                            fig_faults, roofline_report, tab_schemes)
+    from benchmarks import (bench_cycles, bench_embedding, bench_kernels,
+                            bench_kvbank, bench_serve, bench_stream,
+                            bench_sweep, fig18_dedup, fig19_split,
+                            fig20_ramp, fig_faults, roofline_report,
+                            tab_schemes)
 
     tab_schemes.run()
     fig18_dedup.run(length=48 if args.fast else 96)
@@ -29,6 +30,7 @@ def main():
     bench_cycles.run(smoke=args.fast)
     bench_stream.run(smoke=args.fast)
     bench_kvbank.run()
+    bench_kernels.run(smoke=args.fast)
     bench_serve.run(smoke=args.fast)
     bench_embedding.run()
     roofline_report.run("pod16x16")

@@ -54,12 +54,18 @@ def _k_kv_decode():
     return kernel.coded_kv_decode_pallas
 
 
+def _k_pool_gather():
+    from repro.kernels.coded_kv_decode import kernel
+    return kernel.gather_pool_pallas
+
+
 GUARDED: Dict[str, Callable[[], Callable]] = {
     "sweep": _sweep_scan,
     "stream": _stream_chunk,
     "kernels.xor_encode": _k_xor_encode,
     "kernels.xor_gather": _k_xor_gather,
     "kernels.coded_kv_decode": _k_kv_decode,
+    "kernels.pool_gather": _k_pool_gather,
 }
 
 

@@ -44,6 +44,7 @@ benchmark-contract drift too.
 from __future__ import annotations
 
 import ast
+import os
 import re
 from typing import Dict, Iterable, List, Optional, Set
 
@@ -102,10 +103,11 @@ TRACED_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/obs/serve.py": {
         "init_serve_telemetry", "update_serve_telemetry"},
     "src/repro/runtime/kvbank.py": {
-        "init_state", "append_token", "recode", "pool_read_sets",
-        "plan_reads", "_plan_from_tables", "gather_kv", "read_latencies",
-        "pool_write_index", "pool_mark_stale", "pool_write_layer",
-        "pool_plan", "pool_install", "pool_recode", "pool_permute"},
+        "init_state", "append_token", "recode", "_budget_rows",
+        "pool_read_sets", "plan_reads", "_plan_from_tables", "gather_kv",
+        "read_latencies", "pool_write_index", "pool_mark_stale",
+        "pool_write_layer", "pool_write_layer_fused", "pool_plan",
+        "pool_install", "pool_recode", "pool_permute"},
 }
 HOST_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/core/__init__.py": {"*"},
@@ -446,6 +448,63 @@ class _FunctionLint:
                     "repro.core.state.wide_add")
 
 
+# ------------------------------------------------------- kernel interpret
+# non-test code that pins the Pallas interpreter: the production default is
+# interpret=None (resolved from the backend by kernels.common.resolve_interpret)
+KERNEL_INTERPRET_SCOPE = ("src/repro", "benchmarks")
+
+
+def check_kernel_interpret(
+        roots: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Flag ``interpret=True`` hard-coded at non-test kernel call sites.
+
+    The kernel wrappers default to ``interpret=None``, which resolves to
+    native compilation on TPU and the Pallas interpreter elsewhere
+    (``repro.kernels.common.resolve_interpret``). A call site that pins
+    ``True`` silently runs the CPU interpreter on hardware — tests may pin
+    it (they are not scanned); anything else needs an
+    ``# analysis: kernel-interpret`` waiver."""
+    bases = (list(roots) if roots is not None
+             else [f"{REPO_ROOT}/{e}" for e in KERNEL_INTERPRET_SCOPE])
+    out: List[Finding] = []
+    for base in bases:
+        paths = [base] if os.path.isfile(base) else python_files(base)
+        for path in paths:
+            out.extend(_check_interpret_file(path))
+    return out
+
+
+def _check_interpret_file(path: str) -> List[Finding]:
+    out: List[Finding] = []
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        tree = ast.parse(source, filename=path)
+    except (OSError, SyntaxError) as e:
+        return [Finding("parse-error", rel(path), str(e))]
+    waivers = _waivers(source)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "interpret":
+                continue
+            if not (isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                continue
+            line = kw.value.lineno
+            if "kernel-interpret" in (waivers.get(line, set())
+                                      | waivers.get(node.lineno, set())):
+                continue
+            out.append(Finding(
+                "kernel-interpret", f"{rel(path)}:{line}",
+                "kernel call hard-codes interpret=True — on TPU this "
+                "silently executes the Pallas CPU interpreter; pass "
+                "interpret=None and let resolve_interpret pick the "
+                "backend (tests may pin True)", line=line))
+    return out
+
+
 # -------------------------------------------------------- bench manifests
 def check_bench_manifests() -> List[Finding]:
     """Fold scripts/check_bench_manifests.py in as an analysis rule."""
@@ -469,5 +528,6 @@ def run(strict: bool = False,
     del strict
     out = check_oracle_purity()
     out += check_traced_rules(paths)
+    out += check_kernel_interpret()
     out += check_bench_manifests()
     return out

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: decode attention over a *banked, coded* paged KV cache.
+"""Pallas TPU kernels: decode attention over a *banked, coded* paged KV cache.
 
 The TPU adaptation of the paper's §IV read path for serving: KV pages are
 striped across ``NB`` single-ported banks (page ``t`` → bank ``t % NB``,
@@ -11,10 +11,20 @@ exactly the paper's degraded read.
 
 All KV lanes enter as raw ``uint16``/``uint32`` bits (bit-exact coding);
 they are bitcast to the compute dtype after reconstruction. Softmax is
-accumulated flash-style in f32 over pages.
+accumulated flash-style in f32 over pages; the page walk is a
+``fori_loop`` with dynamic bank/slot addressing, so the traced program —
+and the compile time — is O(1) in the page count (docs/kernels.md).
 
-Grid ``(B,)``; per-sequence blocks: q ``(1, H, D)``, banks
-``(1, NB, S, P, Hkv, D)``, parity ``(1, NB/2, S, P, Hkv, D)``.
+Two kernels share the layout:
+
+* ``coded_kv_decode_pallas`` — full attention over per-sequence banks,
+  grid ``(B,)``; per-sequence blocks q ``(1, H, D)``, banks
+  ``(1, NB, S, P, Hkv, D)``, parity ``(1, NB/2, S, P, Hkv, D)``.
+* ``gather_pool_pallas`` — the SERVING pool gather (shared pool, per-batch
+  page table), grid ``(B, MP)``: one logical page reconstructed per step,
+  bit-exact vs ``ops.gather_pool_layer`` (the reference anchor), so the
+  ``ServeConfig(kernel="pallas")`` switch is token-identical by
+  construction.
 """
 from __future__ import annotations
 
@@ -23,6 +33,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 
 
 def _kv_decode_kernel(q_ref, kb_ref, vb_ref, kp_ref, vp_ref, upar_ref,
@@ -34,20 +46,22 @@ def _kv_decode_kernel(q_ref, kb_ref, vb_ref, kp_ref, vp_ref, upar_ref,
     qr = q.reshape(g, hkv, d)
     slen = slen_ref[0]
 
-    m = jnp.full((g, hkv), -jnp.inf, jnp.float32)
-    s = jnp.zeros((g, hkv), jnp.float32)
-    acc = jnp.zeros((g, hkv, d), jnp.float32)
+    def load_page(ref, b_, s_):
+        return pl.load(ref, (pl.dslice(0, 1), pl.dslice(b_, 1),
+                             pl.dslice(s_, 1), slice(None), slice(None),
+                             slice(None)))[0, 0, 0]
 
-    for t in range(n_pages):
+    def step(t, carry):
+        m, s, acc = carry
         bank = t % nb
         slot = t // nb
         sib = bank ^ 1
         grp = bank // 2
-        use_par = upar_ref[0, t] > 0
-        k_dir = kb_ref[0, bank, slot]                      # (P, Hkv, D) uint
-        k_rec = kb_ref[0, sib, slot] ^ kp_ref[0, grp, slot]
-        v_dir = vb_ref[0, bank, slot]
-        v_rec = vb_ref[0, sib, slot] ^ vp_ref[0, grp, slot]
+        use_par = pl.load(upar_ref, (pl.dslice(0, 1), pl.dslice(t, 1)))[0, 0] > 0
+        k_dir = load_page(kb_ref, bank, slot)              # (P, Hkv, D) uint
+        k_rec = load_page(kb_ref, sib, slot) ^ load_page(kp_ref, grp, slot)
+        v_dir = load_page(vb_ref, bank, slot)
+        v_rec = load_page(vb_ref, sib, slot) ^ load_page(vp_ref, grp, slot)
         k_bits = jnp.where(use_par, k_rec, k_dir)
         v_bits = jnp.where(use_par, v_rec, v_dir)
         k = jax.lax.bitcast_convert_type(k_bits, value_dtype).astype(jnp.float32)
@@ -71,7 +85,12 @@ def _kv_decode_kernel(q_ref, kb_ref, vb_ref, kp_ref, vp_ref, upar_ref,
             preferred_element_type=jnp.float32,
         )  # (Hkv, G, D)
         acc = acc * alpha[..., None] + jnp.transpose(pv, (1, 0, 2))
-        m = m_new
+        return m_new, s, acc
+
+    m0 = jnp.full((g, hkv), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((g, hkv), jnp.float32)
+    a0 = jnp.zeros((g, hkv, d), jnp.float32)
+    m, s, acc = jax.lax.fori_loop(0, n_pages, step, (m0, s0, a0))
 
     out = acc / jnp.maximum(s, 1e-30)[..., None]
     out_ref[0] = out.reshape(h, d).astype(out_ref.dtype)
@@ -90,12 +109,13 @@ def coded_kv_decode_pallas(
     seq_len: jnp.ndarray,     # (B,) int32
     *,
     value_dtype=jnp.float32,
-    interpret: bool = True,
+    interpret=None,
 ) -> jnp.ndarray:
     b, h, d = q.shape
     _, nb, s_, p_, hkv, _ = k_banks.shape
     n_pages = use_parity.shape[1]
     assert n_pages <= nb * s_
+    interpret = resolve_interpret(interpret)
     kernel = functools.partial(
         _kv_decode_kernel, value_dtype=jnp.dtype(value_dtype),
         n_pages=n_pages, nb=nb, page=p_,
@@ -116,3 +136,95 @@ def coded_kv_decode_pallas(
         out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
         interpret=interpret,
     )(q, k_banks, v_banks, k_par, v_par, use_parity, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Serving pool gather: pool-indirected page reconstruction
+# ---------------------------------------------------------------------------
+
+def _load_pool_page(ref, b_, s_):
+    return pl.load(ref, (pl.dslice(b_, 1), pl.dslice(s_, 1),
+                         slice(None), slice(None), slice(None)))[0, 0]
+
+
+def _pool_gather_kernel(pt_ref, up_ref, kb_ref, vb_ref, kp_ref, vp_ref,
+                        ko_ref, vo_ref, *, nb):
+    phys = pt_ref[0, 0]
+    alloc = phys >= 0
+    ph = jnp.maximum(phys, 0)
+    bank = ph % nb
+    slot = ph // nb
+    use_par = up_ref[0, 0] > 0
+    k_dir = _load_pool_page(kb_ref, bank, slot)            # (P, Hkv, D)
+    v_dir = _load_pool_page(vb_ref, bank, slot)
+    k_rec = _load_pool_page(kb_ref, bank ^ 1, slot) \
+        ^ _load_pool_page(kp_ref, bank // 2, slot)
+    v_rec = _load_pool_page(vb_ref, bank ^ 1, slot) \
+        ^ _load_pool_page(vp_ref, bank // 2, slot)
+    k = jnp.where(use_par, k_rec, k_dir)
+    v = jnp.where(use_par, v_rec, v_dir)
+    ko_ref[0, 0] = jnp.where(alloc, k, 0)
+    vo_ref[0, 0] = jnp.where(alloc, v, 0)
+
+
+def _pool_gather_uncoded_kernel(pt_ref, kb_ref, vb_ref, ko_ref, vo_ref,
+                                *, nb):
+    phys = pt_ref[0, 0]
+    alloc = phys >= 0
+    ph = jnp.maximum(phys, 0)
+    bank = ph % nb
+    slot = ph // nb
+    ko_ref[0, 0] = jnp.where(alloc, _load_pool_page(kb_ref, bank, slot), 0)
+    vo_ref[0, 0] = jnp.where(alloc, _load_pool_page(vb_ref, bank, slot), 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_pool_pallas(
+    k_banks: jnp.ndarray,     # (NB, S, P, Hkv, D) uint lanes (shared pool)
+    v_banks: jnp.ndarray,
+    k_par: jnp.ndarray,       # (NG, S, P, Hkv, D); NG == 0 ⇒ uncoded
+    v_par: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, MP) int32 physical page id, -1 free
+    use_parity: jnp.ndarray,  # (B, MP) bool/int
+    *,
+    interpret=None,
+):
+    """Pool-indirected coded page gather: (B, MP, P, Hkv, D) uint K/V.
+
+    Grid ``(B, MP)`` — one logical page per step, reconstructed with the
+    planned direct or degraded (sibling ^ parity) read. Pure uint
+    select/XOR, so the result is bit-exact vs the reference
+    ``gather_pool_layer`` for any plan; unallocated pages read as zero.
+    The uncoded pool (NG == 0) compiles a kernel with no parity operands.
+    """
+    interpret = resolve_interpret(interpret)
+    nb, s_, pg, hkv, d = k_banks.shape
+    b, mp = page_table.shape
+    ng = k_par.shape[0]
+    grid = (b, mp)
+    bank_spec = pl.BlockSpec((nb, s_, pg, hkv, d),
+                             lambda i, p: (0, 0, 0, 0, 0))
+    tab_spec = pl.BlockSpec((1, 1), lambda i, p: (i, p))
+    out_spec = pl.BlockSpec((1, 1, pg, hkv, d), lambda i, p: (i, p, 0, 0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, mp, pg, hkv, d), k_banks.dtype)] * 2
+    if ng == 0:
+        return pl.pallas_call(
+            functools.partial(_pool_gather_uncoded_kernel, nb=nb),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[tab_spec, bank_spec, bank_spec],
+            out_specs=[out_spec, out_spec],
+            interpret=interpret,
+        )(page_table, k_banks, v_banks)
+    par_spec = pl.BlockSpec((ng, s_, pg, hkv, d),
+                            lambda i, p: (0, 0, 0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_pool_gather_kernel, nb=nb),
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[tab_spec, tab_spec, bank_spec, bank_spec,
+                  par_spec, par_spec],
+        out_specs=[out_spec, out_spec],
+        interpret=interpret,
+    )(page_table, use_parity.astype(jnp.int32), k_banks, v_banks,
+      k_par, v_par)

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import uint_view_dtype
-from repro.kernels.coded_kv_decode.kernel import coded_kv_decode_pallas
+from repro.kernels.coded_kv_decode.kernel import (
+    coded_kv_decode_pallas,
+    gather_pool_pallas,
+)
 
 
 def pack_kv_banks(
@@ -48,13 +51,35 @@ def gather_pool_layer(
     page_table: jnp.ndarray,  # (B, MP) int32 physical page id, -1 free
     use_parity: jnp.ndarray,  # (B, MP) bool
     value_dtype,
+    kernel: str = "reference",
+    interpret=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Materialize one layer's logical (B, MP*page, Hkv, D) K/V from the
     serving pool via the planned mix of direct and degraded
     (sibling ^ parity) reads — the pool-indirected coded_kv_decode
-    datapath. Bit-exact reconstruction; unallocated pages read as zero."""
+    datapath. Bit-exact reconstruction; unallocated pages read as zero.
+
+    ``kernel`` selects the datapath: ``"reference"`` is the jnp anchor,
+    ``"pallas"`` dispatches to ``gather_pool_pallas`` — bit-exact vs the
+    anchor (pure uint select/XOR on both sides), so serving output is
+    token-identical either way (docs/kernels.md)."""
     nb = k_banks.shape[0]
     b, mp = page_table.shape
+    if kernel == "pallas":
+        ko, vo = gather_pool_pallas(
+            k_banks, v_banks, k_par, v_par,
+            page_table.astype(jnp.int32), use_parity,
+            interpret=interpret,
+        )
+        pg, hkv, d = ko.shape[-3:]
+        return (
+            jax.lax.bitcast_convert_type(
+                ko.reshape(b, mp * pg, hkv, d), value_dtype),
+            jax.lax.bitcast_convert_type(
+                vo.reshape(b, mp * pg, hkv, d), value_dtype),
+        )
+    if kernel != "reference":
+        raise ValueError(f"unknown gather kernel: {kernel!r}")
     phys = jnp.maximum(page_table, 0)
     bank = phys % nb
     slot = phys // nb
@@ -107,7 +132,7 @@ def coded_kv_decode(
     seq_len: jnp.ndarray,     # (B,) int32
     *,
     value_dtype=None,
-    interpret: bool = True,
+    interpret=None,
 ) -> jnp.ndarray:
     """Decode attention over the coded banked KV cache (one new token)."""
     if value_dtype is None:

@@ -22,6 +22,21 @@ _UINT_OF = {
 }
 
 
+def resolve_interpret(interpret=None) -> bool:
+    """Kernel interpret-mode policy (docs/kernels.md).
+
+    ``None`` resolves from the backend: compile natively on TPU, fall back
+    to the Pallas interpreter everywhere else (CI stays hardware-free). An
+    explicit bool always wins — tests pin ``True``, hardware benchmarks may
+    pin ``False`` to fail loudly on an unexpected backend. Non-test call
+    sites must not hard-code ``interpret=True`` (the ``kernel-interpret``
+    analysis rule), or hardware runs silently execute the CPU interpreter.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def uint_view_dtype(dtype) -> jnp.dtype:
     d = jnp.dtype(dtype)
     if d not in _UINT_OF:

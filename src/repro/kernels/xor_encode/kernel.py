@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _encode_kernel(members_ref, banks_ref, out_ref):
     j = pl.program_id(1)
@@ -37,12 +39,14 @@ def encode_parities_pallas(
     members: jnp.ndarray,   # (n_par, 3) int32, -1 padded
     *,
     block_rows: int = 128,
-    interpret: bool = True,
+    interpret=None,
 ) -> jnp.ndarray:
     """Integer-lane parity encode. Callers bitcast float banks to their uint
     lane view first (see ops.encode_parities): parity banks are raw bits, not
-    numbers, and float ops on CPU/TPU may canonicalize NaN payloads."""
+    numbers, and float ops on CPU/TPU may canonicalize NaN payloads.
+    ``interpret=None`` resolves from the backend (docs/kernels.md)."""
     assert jnp.issubdtype(banks.dtype, jnp.integer), banks.dtype
+    interpret = resolve_interpret(interpret)
     n_data, L, W = banks.shape
     n_par = members.shape[0]
     bl = min(block_rows, L)

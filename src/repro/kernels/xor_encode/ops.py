@@ -14,7 +14,7 @@ def encode_parities(
     members,
     *,
     block_rows: int = 128,
-    interpret: bool = True,
+    interpret=None,
 ) -> jnp.ndarray:
     """Encode parity banks ``p_j = XOR_m banks[m]`` (bit-exact, any dtype).
 

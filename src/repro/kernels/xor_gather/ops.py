@@ -58,11 +58,13 @@ def gather_decode(
     cols: PlanColumns,
     *,
     req_block: int = 8,
-    interpret: bool = True,
+    interpret=None,
     value_dtype=None,
 ) -> jnp.ndarray:
     """Serve one cycle's read pattern. Returns (N, W) rows in ``value_dtype``
-    (defaults to ``banks.dtype``); unserved entries are zero-filled."""
+    (defaults to ``banks.dtype``); unserved entries are zero-filled. Any N
+    is accepted, including an empty plan — the pallas wrapper pads requests
+    to a full tile with -1 and strips the pad on return."""
     if value_dtype is None:
         value_dtype = banks.dtype
     if jnp.issubdtype(banks.dtype, jnp.floating):
@@ -71,14 +73,10 @@ def gather_decode(
         parities = jax.lax.bitcast_convert_type(parities, uint_view_dtype(parities.dtype))
     if parities.dtype != banks.dtype:
         raise TypeError(f"lane dtype mismatch: {banks.dtype} vs {parities.dtype}")
-    n = cols.bank.shape[0]
-    pad = (-n) % req_block
-    if pad:
-        cols = PlanColumns(*(jnp.pad(c, (0, pad), constant_values=-1) for c in cols))
     out = gather_decode_pallas(
         banks, parities, cols.bank, cols.row, cols.mode, cols.par, cols.prow,
         cols.sib0, cols.sib1, req_block=req_block, interpret=interpret,
-    )[:n]
+    )
     if jnp.dtype(value_dtype) != out.dtype:
         out = jax.lax.bitcast_convert_type(out, value_dtype)
     return out

@@ -646,7 +646,8 @@ def decode_step(cfg: ModelConfig, params: Params, token: jnp.ndarray,
 
 def decode_step_pooled(cfg: ModelConfig, kvcfg, params: Params,
                        token: jnp.ndarray, pool, tele, *, unroll: int = 1,
-                       recode_budget: Optional[int] = None):
+                       recode_budget: Optional[int] = None,
+                       kernel: str = "reference"):
     """One decode step over the coded KV page pool (the serving path).
 
     token (B,) int32. ``pool`` is a ``runtime.kvbank.PooledKV`` whose
@@ -657,9 +658,15 @@ def decode_step_pooled(cfg: ModelConfig, kvcfg, params: Params,
 
     Appends go through the code-status table (touched parity rows stale),
     reads go through the shared ``plan_reads`` plan + the pool-indirected
-    ``coded_kv_decode`` gather, and the ReCoding unit refreshes parity
-    after the scan. Slots without a page-table row write via the bank sink
-    and keep length 0; the server ignores their outputs.
+    ``coded_kv_decode`` gather (``kernel`` picks the reference jnp gather or
+    the bit-exact Pallas ``gather_pool_pallas`` datapath), and the ReCoding
+    unit refreshes parity after the scan. With an unlimited recode budget on
+    a coded pool, the encode is fused into the write path
+    (``pool_write_layer_fused`` — parity is delta-maintained per append, no
+    whole-pool re-read) which is bit-identical to write-then-full-recode;
+    the status table evolves identically either way. Slots without a
+    page-table row write via the bank sink and keep length 0; the server
+    ignores their outputs.
     """
     from repro.kernels.coded_kv_decode import ops as ckd_ops
     from repro.obs import serve as obs_serve
@@ -682,6 +689,9 @@ def decode_step_pooled(cfg: ModelConfig, kvcfg, params: Params,
     pool = kb.pool_mark_stale(kvcfg, pool, widx)
     len_eff = pos + active.astype(jnp.int32)
     plan = kb.pool_plan(kvcfg, pool, length=len_eff)
+    # encode-on-write when nothing rations the ReCoding unit (shape + host
+    # config are compile-time)  # analysis: tracer-branch
+    fused = recode_budget is None and pool.k_par.shape[1] > 0
 
     def body(xc, bps):
         bp, kbank, vbank, kpar, vpar = bps
@@ -690,10 +700,15 @@ def decode_step_pooled(cfg: ModelConfig, kvcfg, params: Params,
         if cfg.pos == "rope":
             q = ly.rope(q, pos[:, None], cfg.rope_theta)
             k = ly.rope(k, pos[:, None], cfg.rope_theta)
-        kbank, vbank = kb.pool_write_layer(kvcfg, kbank, vbank, widx,
-                                           k[:, 0], v[:, 0])
+        if fused:
+            kbank, vbank, kpar, vpar = kb.pool_write_layer_fused(
+                kvcfg, kbank, vbank, kpar, vpar, widx, k[:, 0], v[:, 0])
+        else:
+            kbank, vbank = kb.pool_write_layer(kvcfg, kbank, vbank, widx,
+                                               k[:, 0], v[:, 0])
         k_log, v_log = ckd_ops.gather_pool_layer(
-            kbank, vbank, kpar, vpar, pool.page_table, plan.use_parity, cd)
+            kbank, vbank, kpar, vpar, pool.page_table, plan.use_parity, cd,
+            kernel=kernel)
         mask = jnp.arange(k_log.shape[1])[None, :] < len_eff[:, None]
         o = ly.mha(q, k_log, v_log, mask[:, None, None, None, :])
         xc = xc + o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ bp["attn"]["wo"]
@@ -702,14 +717,24 @@ def decode_step_pooled(cfg: ModelConfig, kvcfg, params: Params,
             xc = xc + moe_mod.moe_block(cfg, bp["moe"], h)
         else:
             xc = xc + ly.mlp_block(cfg, bp["mlp"], h)
-        return xc, (kbank, vbank)
+        return xc, (kbank, vbank, kpar, vpar) if fused else (kbank, vbank)
 
-    x, (k_new, v_new) = jax.lax.scan(
+    x, ys = jax.lax.scan(
         body, x, (params["blocks"], pool.k_banks, pool.v_banks,
                   pool.k_par, pool.v_par), unroll=unroll)
+    k_new, v_new = ys[0], ys[1]
     pool = pool._replace(k_banks=k_new, v_banks=v_new, length=len_eff)
     stale_before = jnp.sum((~pool.parity_fresh).astype(jnp.int32))
-    pool, recoded = kb.pool_recode(kvcfg, pool, budget=recode_budget)
+    if fused:
+        kp_new, vp_new = ys[2], ys[3]
+        # parity was delta-maintained per layer; refreshing the status table
+        # IS the recode (bit-identical to the unfused full re-encode)
+        pool = pool._replace(
+            k_par=kp_new, v_par=vp_new,
+            parity_fresh=jnp.ones_like(pool.parity_fresh))
+        recoded = stale_before
+    else:
+        pool, recoded = kb.pool_recode(kvcfg, pool, budget=recode_budget)
 
     if tele is not None:
         needed, bank = kb.pool_read_sets(kvcfg, pool.page_table, len_eff)

@@ -139,23 +139,52 @@ def append_token(cfg: KVBankConfig, st: BankedKVState, k_new: jnp.ndarray,
                        next_page=next_page)
 
 
-def recode(cfg: KVBankConfig, st: BankedKVState,
-           budget: Optional[int] = None) -> BankedKVState:
-    """ReCoding unit: refresh stale parity rows (all when budget is None)."""
-    k_par = st.k_banks[0::2] ^ st.k_banks[1::2]
-    v_par = st.v_banks[0::2] ^ st.v_banks[1::2]
-    if budget is None:
-        return st._replace(k_par=k_par, v_par=v_par,
-                           parity_fresh=jnp.ones_like(st.parity_fresh))
-    stale = ~st.parity_fresh
+def _budget_rows(parity_fresh: jnp.ndarray, budget: int):
+    """Pick the first ``budget`` stale parity rows in raster (cumsum) order.
+
+    Returns ``(take, idx, valid)``: the taken-row mask (identical to the
+    historical masked-recompute take set), the flat (group*slots) indices of
+    up to ``cap = min(budget, rows)`` rows to re-encode, and which of those
+    gathered rows are really stale (the rest scatter to an out-of-range sink
+    with ``mode="drop"``). This is the row-gather form of budgeted recode:
+    only the taken rows' member banks are read, not the whole pool."""
+    ng, slots = parity_fresh.shape
+    stale = ~parity_fresh
     order = jnp.cumsum(stale.reshape(-1).astype(jnp.int32)).reshape(stale.shape)
     take = stale & (order <= budget)
-    t5 = take[..., None, None, None]
-    return st._replace(
-        k_par=jnp.where(t5, k_par, st.k_par),
-        v_par=jnp.where(t5, v_par, st.v_par),
-        parity_fresh=st.parity_fresh | take,
-    )
+    # `budget` is a host int by contract (compile-time)  # analysis: tracer-branch
+    cap = max(0, min(int(budget), ng * slots))
+    flat_take = take.reshape(-1)
+    key = jnp.where(flat_take, order.reshape(-1), jnp.iinfo(jnp.int32).max)
+    idx = jnp.argsort(key)[:cap]
+    return take, idx, flat_take[idx]
+
+
+def recode(cfg: KVBankConfig, st: BankedKVState,
+           budget: Optional[int] = None) -> BankedKVState:
+    """ReCoding unit: refresh stale parity rows (all when budget is None).
+    The budgeted path gathers only the taken rows' member banks (row-gather)
+    instead of re-encoding the whole pool and masking."""
+    if budget is None:
+        return st._replace(k_par=st.k_banks[0::2] ^ st.k_banks[1::2],
+                           v_par=st.v_banks[0::2] ^ st.v_banks[1::2],
+                           parity_fresh=jnp.ones_like(st.parity_fresh))
+    take, idx, valid = _budget_rows(st.parity_fresh, budget)
+    ng, slots = st.parity_fresh.shape
+    # `budget` is a host int by contract (compile-time)  # analysis: tracer-branch
+    if idx.shape[0] == 0:
+        return st
+    g, s = idx // slots, idx % slots
+    new_k = st.k_banks[2 * g, s] ^ st.k_banks[2 * g + 1, s]
+    new_v = st.v_banks[2 * g, s] ^ st.v_banks[2 * g + 1, s]
+    sidx = jnp.where(valid, idx, ng * slots)
+    tail = st.k_par.shape[2:]
+    k_par = st.k_par.reshape((ng * slots,) + tail).at[sidx].set(
+        new_k, mode="drop").reshape(st.k_par.shape)
+    v_par = st.v_par.reshape((ng * slots,) + tail).at[sidx].set(
+        new_v, mode="drop").reshape(st.v_par.shape)
+    return st._replace(k_par=k_par, v_par=v_par,
+                       parity_fresh=st.parity_fresh | take)
 
 
 def pool_read_sets(cfg: KVBankConfig, page_table: jnp.ndarray,
@@ -359,6 +388,44 @@ def pool_write_layer(cfg: KVBankConfig, k_bank: jnp.ndarray,
             v_bank.at[bank, slot, in_page].set(vu, mode="drop"))
 
 
+def pool_write_layer_fused(cfg: KVBankConfig, k_bank: jnp.ndarray,
+                           v_bank: jnp.ndarray, k_par: jnp.ndarray,
+                           v_par: jnp.ndarray, widx, k_new: jnp.ndarray,
+                           v_new: jnp.ndarray):
+    """Encode-on-write: write one token's (B, Hkv, D) K/V into one layer's
+    banks AND delta-maintain the pair parity in the same pass
+    (``par' = par ^ old ^ new``), instead of re-reading whole banks at
+    recode time (the fused ReCoding datapath, docs/kernels.md).
+
+    The parity scatter runs in two passes split by bank parity: within one
+    pass, two lanes hitting the same parity element would need the same
+    (bank, slot, in_page) — i.e. the same physical page element, which
+    distinct sequences never share — so plain set-scatters cannot collide.
+    Across passes (pair siblings touching one parity element) the second
+    pass re-reads the parity the first wrote."""
+    u = k_bank.dtype
+    ku = jax.lax.bitcast_convert_type(k_new, u) if k_new.dtype != u else k_new
+    vu = jax.lax.bitcast_convert_type(v_new, u) if v_new.dtype != u else v_new
+    bank, slot, in_page = widx
+    nb = cfg.n_banks
+    ng = k_par.shape[0]
+    bc = jnp.minimum(bank, nb - 1)
+    dk = k_bank[bc, slot, in_page] ^ ku             # (B, Hkv, D) bit delta
+    dv = v_bank[bc, slot, in_page] ^ vu
+    k_out = k_bank.at[bank, slot, in_page].set(ku, mode="drop")
+    v_out = v_bank.at[bank, slot, in_page].set(vu, mode="drop")
+    grp = bank // 2
+    for phase in (0, 1):
+        sel = (bank < nb) & (bank % 2 == phase)
+        gi = jnp.where(sel, grp, ng)                # sink for the other phase
+        gc = jnp.minimum(gi, ng - 1)
+        k_par = k_par.at[gi, slot, in_page].set(
+            k_par[gc, slot, in_page] ^ dk, mode="drop")
+        v_par = v_par.at[gi, slot, in_page].set(
+            v_par[gc, slot, in_page] ^ dv, mode="drop")
+    return k_out, v_out, k_par, v_par
+
+
 def pool_plan(cfg: KVBankConfig, pool: PooledKV,
               length: Optional[jnp.ndarray] = None) -> ReadPlan:
     """Shared read plan for every layer of a pooled decode step."""
@@ -368,10 +435,18 @@ def pool_plan(cfg: KVBankConfig, pool: PooledKV,
 
 
 def pool_install(cfg: KVBankConfig, pool: PooledKV, slot_i: jnp.ndarray,
-                 k_seq: jnp.ndarray, v_seq: jnp.ndarray) -> PooledKV:
+                 k_seq: jnp.ndarray, v_seq: jnp.ndarray,
+                 fuse_encode: bool = False) -> PooledKV:
     """Install a prefilled prompt's (L, T, Hkv, D) K/V into sequence slot
     ``slot_i`` whose page-table row was assigned host-side. Sets the slot
-    length to T and marks every touched parity row stale."""
+    length to T and marks every touched parity row stale.
+
+    ``fuse_encode=True`` additionally delta-maintains the pair parity for
+    every written token (encode-on-write; same two-pass collision-free
+    scatter as ``pool_write_layer_fused`` — within a pass, one parity
+    element maps to one (phys page, in_page) element, hence one token).
+    The status table still evolves identically (touched rows marked stale),
+    so plans — and serving output — match the unfused path bit-for-bit."""
     u = pool.k_banks.dtype
     ku = jax.lax.bitcast_convert_type(k_seq, u) if k_seq.dtype != u else k_seq
     vu = jax.lax.bitcast_convert_type(v_seq, u) if v_seq.dtype != u else v_seq
@@ -381,11 +456,27 @@ def pool_install(cfg: KVBankConfig, pool: PooledKV, slot_i: jnp.ndarray,
     bank = jnp.where(phys >= 0, phys % cfg.n_banks, cfg.n_banks)
     slot = jnp.maximum(phys // cfg.n_banks, 0)
     in_page = j % cfg.page
+    ng = pool.parity_fresh.shape[0]
+    k_par, v_par = pool.k_par, pool.v_par
+    # host bool flag: compile-time path select  # analysis: tracer-branch
+    if fuse_encode and ng > 0:
+        bc = jnp.minimum(bank, cfg.n_banks - 1)
+        dk = pool.k_banks[:, bc, slot, in_page] ^ ku    # (L, T, Hkv, D)
+        dv = pool.v_banks[:, bc, slot, in_page] ^ vu
+        grp = bank // 2
+        for phase in (0, 1):
+            sel = (bank < cfg.n_banks) & (bank % 2 == phase)
+            gi = jnp.where(sel, grp, ng)
+            gc = jnp.minimum(gi, ng - 1)
+            k_par = k_par.at[:, gi, slot, in_page].set(
+                k_par[:, gc, slot, in_page] ^ dk, mode="drop")
+            v_par = v_par.at[:, gi, slot, in_page].set(
+                v_par[:, gc, slot, in_page] ^ dv, mode="drop")
     k_banks = pool.k_banks.at[:, bank, slot, in_page].set(ku, mode="drop")
     v_banks = pool.v_banks.at[:, bank, slot, in_page].set(vu, mode="drop")
     out = pool._replace(k_banks=k_banks, v_banks=v_banks,
+                        k_par=k_par, v_par=v_par,
                         length=pool.length.at[slot_i].set(t))
-    ng = pool.parity_fresh.shape[0]
     if ng == 0:
         return out
     grp = jnp.where(bank < cfg.n_banks, bank // 2, ng)
@@ -402,21 +493,31 @@ def pool_recode(cfg: KVBankConfig, pool: PooledKV,
     # `budget` is a host int by contract (compile-time)  # analysis: tracer-branch
     if ng == 0 or (budget is not None and budget < 0):
         return pool, jnp.int32(0)
-    k_par = pool.k_banks[:, 0::2] ^ pool.k_banks[:, 1::2]
-    v_par = pool.v_banks[:, 0::2] ^ pool.v_banks[:, 1::2]
     stale = ~pool.parity_fresh
     if budget is None:
         n = jnp.sum(stale.astype(jnp.int32))
         return pool._replace(
-            k_par=k_par, v_par=v_par,
+            k_par=pool.k_banks[:, 0::2] ^ pool.k_banks[:, 1::2],
+            v_par=pool.v_banks[:, 0::2] ^ pool.v_banks[:, 1::2],
             parity_fresh=jnp.ones_like(pool.parity_fresh)), n
-    order = jnp.cumsum(stale.reshape(-1).astype(jnp.int32)).reshape(stale.shape)
-    take = stale & (order <= budget)
-    t6 = take[None, ..., None, None, None]
-    return pool._replace(
-        k_par=jnp.where(t6, k_par, pool.k_par),
-        v_par=jnp.where(t6, v_par, pool.v_par),
-        parity_fresh=pool.parity_fresh | take), jnp.sum(take.astype(jnp.int32))
+    take, idx, valid = _budget_rows(pool.parity_fresh, budget)
+    n = jnp.sum(take.astype(jnp.int32))
+    # `budget` is a host int by contract (compile-time)  # analysis: tracer-branch
+    if idx.shape[0] == 0:
+        return pool, n
+    slots = pool.parity_fresh.shape[1]
+    g, s = idx // slots, idx % slots
+    new_k = pool.k_banks[:, 2 * g, s] ^ pool.k_banks[:, 2 * g + 1, s]
+    new_v = pool.v_banks[:, 2 * g, s] ^ pool.v_banks[:, 2 * g + 1, s]
+    sidx = jnp.where(valid, idx, ng * slots)
+    lead = pool.k_par.shape[:1]
+    tail = pool.k_par.shape[3:]
+    k_par = pool.k_par.reshape(lead + (ng * slots,) + tail).at[:, sidx].set(
+        new_k, mode="drop").reshape(pool.k_par.shape)
+    v_par = pool.v_par.reshape(lead + (ng * slots,) + tail).at[:, sidx].set(
+        new_v, mode="drop").reshape(pool.v_par.shape)
+    return pool._replace(k_par=k_par, v_par=v_par,
+                         parity_fresh=pool.parity_fresh | take), n
 
 
 def pool_permute(cfg: KVBankConfig, pool: PooledKV,

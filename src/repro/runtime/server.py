@@ -53,6 +53,7 @@ class ServeConfig:
     recode_budget: Optional[int] = None  # None: full recode; -1: never
     page: int = 0               # tokens per page; 0 -> cfg.kv_page
     pool_pages: int = 0         # physical pool size; 0 -> 2x working set
+    kernel: str = "reference"   # pool gather datapath: "reference"|"pallas"
 
 
 @dataclasses.dataclass
@@ -105,10 +106,15 @@ class Server:
             self.free_pages: List[int] = list(range(pool_pages))
             self.slot_pages: List[List[int]] = [[] for _ in range(b)]
             self.decode = jax.jit(steps_mod.make_pooled_serve_step(
-                cfg, self.kvcfg, recode_budget=sc.recode_budget))
+                cfg, self.kvcfg, recode_budget=sc.recode_budget,
+                kernel=sc.kernel))
+            # encode-on-write at install matches the fused decode path (the
+            # status table still goes stale-then-fresh identically)
+            fuse = sc.coded and sc.recode_budget is None
             self._install_pool = jax.jit(
                 lambda pool, i, k, v: kb.pool_install(self.kvcfg, pool,
-                                                      i, k, v))
+                                                      i, k, v,
+                                                      fuse_encode=fuse))
         else:
             self.decode = jax.jit(steps_mod.make_serve_step(cfg))
             self.cache = lm.cache_spec(cfg, b, sc.max_seq)

@@ -81,7 +81,7 @@ def make_serve_step(cfg: ModelConfig, *, unroll: int = 1):
 
 
 def make_pooled_serve_step(cfg: ModelConfig, kvcfg, *, unroll: int = 1,
-                           recode_budget=None):
+                           recode_budget=None, kernel: str = "reference"):
     """Greedy decode step over the coded KV page pool.
 
     ``(params, token (B,), cache) -> (token', cache')`` where the cache is
@@ -89,12 +89,14 @@ def make_pooled_serve_step(cfg: ModelConfig, kvcfg, *, unroll: int = 1,
     the same calling convention as ``make_serve_step`` so the server's
     continuous-batching loop is pool-agnostic. ``tele=None`` compiles the
     exact same program as a telemetry-free build (locked by
-    ``repro.analysis.jaxpr.lint_serve_step``)."""
+    ``repro.analysis.jaxpr.lint_serve_step``). ``kernel`` selects the pool
+    gather datapath (``"reference"`` jnp anchor / ``"pallas"`` kernel —
+    bit-exact, so served tokens are identical; docs/kernels.md)."""
 
     def pooled_serve_step(params, token: jnp.ndarray, cache):
         logits, pool, tele = lm.decode_step_pooled(
             cfg, kvcfg, params, token, cache["pool"], cache["tele"],
-            unroll=unroll, recode_budget=recode_budget)
+            unroll=unroll, recode_budget=recode_budget, kernel=kernel)
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
         return next_tok, {"pool": pool, "tele": tele}
 

@@ -1,0 +1,27 @@
+"""Known-bad fixture for the ``kernel-interpret`` rule.
+
+A non-test call site that pins ``interpret=True`` silently runs the Pallas
+CPU interpreter on real hardware; the rule must flag it unless the line
+carries an ``# analysis: kernel-interpret`` waiver.
+"""
+
+
+def _kernel(x, interpret=None):
+    return x
+
+
+def pinned_call(x):
+    # MUST be flagged: hard-coded interpreter at a library call site
+    return _kernel(x, interpret=True)
+
+
+def waived_call(x):
+    # a deliberate pin (e.g. a CPU-only reference path) stays silent
+    return _kernel(x, interpret=True)  # analysis: kernel-interpret
+
+
+def clean_calls(x):
+    # non-True values and the backend-resolved default are never flagged
+    y = _kernel(x, interpret=False)
+    z = _kernel(y, interpret=None)
+    return _kernel(z)

@@ -86,6 +86,22 @@ def test_bench_manifest_rule_clean():
     assert rules.check_bench_manifests() == []
 
 
+# ------------------------------------------------------- kernel interpret
+def test_kernel_interpret_flags_fixture():
+    fs = rules.check_kernel_interpret(
+        roots=[os.path.join(DATA, "bad_interpret.py")])
+    assert {f.rule for f in fs} == {"kernel-interpret"}
+    # only the unwaived pin is flagged: the waived call and the
+    # False/None/default sites all stay silent
+    assert len(fs) == 1 and fs[0].line == 15
+
+
+def test_kernel_interpret_clean_on_src():
+    """src/ and benchmarks/ must never pin interpret=True (tests are out of
+    scope; they may pin it freely)."""
+    assert rules.check_kernel_interpret() == []
+
+
 # ------------------------------------------------------- scheme certificates
 def _bad_scheme():
     with open(os.path.join(DATA, "bad_scheme.json")) as fh:

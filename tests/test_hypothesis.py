@@ -105,6 +105,48 @@ def test_kvbank_reconstruction_property(seed, n_tokens, batch):
     assert int(plan.coded_cycles) <= int(plan.uncoded_cycles)
 
 
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["none", "mixed", "all"]),
+       st.booleans(), st.booleans())
+def test_pool_gather_roundtrip_property(seed, mix, uncoded, use_pallas):
+    """pack_kv_banks → gather_pool_layer round-trips bit-exactly for any
+    parity mix (incl. all-degraded), with unallocated (-1) pages reading
+    zero, through both the reference and the Pallas datapath, and on the
+    NG == 0 uncoded pool."""
+    from repro.kernels.coded_kv_decode import ops
+    rng = np.random.default_rng(seed)
+    nb, page, hkv, d, slots = 4, 4, 2, 16, 2
+    t_len = nb * page * slots
+    k = jnp.asarray(rng.normal(size=(1, t_len, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, t_len, hkv, d)), jnp.float32)
+    ku, vu, kp, vp, n_pages = ops.pack_kv_banks(k, v, nb, page)
+    kb_, vb_ = ku[0], vu[0]
+    kp_, vp_ = (kp[0][:0], vp[0][:0]) if uncoded else (kp[0], vp[0])
+    mp = n_pages + 2                       # tail pages stay unallocated
+    pt = np.full((1, mp), -1, np.int32)
+    pt[0, :n_pages] = np.arange(n_pages)
+    drop = int(rng.integers(0, n_pages))   # plus one mid-table hole
+    pt[0, drop] = -1
+    if mix == "none" or uncoded:
+        up = np.zeros((1, mp), bool)
+    elif mix == "all":
+        up = np.ones((1, mp), bool)
+    else:
+        up = rng.integers(0, 2, (1, mp)).astype(bool)
+    got_k, got_v = ops.gather_pool_layer(
+        kb_, vb_, kp_, vp_, jnp.asarray(pt), jnp.asarray(up), jnp.float32,
+        kernel="pallas" if use_pallas else "reference", interpret=True)
+    exp_k = np.zeros((1, mp * page, hkv, d), np.float32)
+    exp_k[0, :t_len] = np.asarray(k[0])
+    exp_v = np.zeros_like(exp_k)
+    exp_v[0, :t_len] = np.asarray(v[0])
+    exp_k[0, drop * page:(drop + 1) * page] = 0
+    exp_v[0, drop * page:(drop + 1) * page] = 0
+    np.testing.assert_array_equal(np.asarray(got_k), exp_k)
+    np.testing.assert_array_equal(np.asarray(got_v), exp_v)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1), st.integers(0, 1000))
 def test_data_pipeline_determinism(seed, step):

@@ -129,6 +129,119 @@ def test_coded_kv_decode_sweep(dtype, t_len, h, hkv, d):
                                np.asarray(ref, np.float32), atol=atol)
 
 
+def test_xor_gather_empty_plan():
+    """Regression: an N=0 plan used to divide by zero sizing the request
+    grid. Every public entry point must return an empty (0, W) result."""
+    from repro.kernels.xor_gather.kernel import gather_decode_pallas
+    banks = jnp.zeros((8, 16, 128), jnp.uint32)
+    par = jnp.zeros((4, 16, 128), jnp.uint32)
+    empty = jnp.zeros((0,), jnp.int32)
+    out = gather_decode_pallas(banks, par, *([empty] * 7), interpret=True)
+    assert out.shape == (0, 128) and out.dtype == jnp.uint32
+    cols = g_ops.PlanColumns(*([empty] * 7))
+    out2 = g_ops.gather_decode(banks, par, cols, interpret=True,
+                               value_dtype=jnp.float32)
+    assert out2.shape == (0, 128) and out2.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("n_req", [1, 5, 13])
+def test_xor_gather_ragged_requests_direct(n_req):
+    """Regression: the pallas wrapper itself (not just gather_decode) must
+    accept any N — it used to assert on N % req_block != 0. The -1 pad rows
+    select nothing and are stripped from the result."""
+    from repro.kernels.xor_gather.kernel import gather_decode_pallas
+    rng = np.random.default_rng(n_req)
+    banks = jnp.asarray(rng.integers(0, 2**32, (8, 16, 128),
+                                     dtype=np.uint32))
+    par = jnp.asarray(rng.integers(0, 2**32, (4, 16, 128), dtype=np.uint32))
+    bank = jnp.asarray(rng.integers(0, 8, n_req), jnp.int32)
+    row = jnp.asarray(rng.integers(0, 16, n_req), jnp.int32)
+    mode = jnp.ones((n_req,), jnp.int32)
+    zero = jnp.zeros((n_req,), jnp.int32)
+    neg = jnp.full((n_req,), -1, jnp.int32)
+    out = gather_decode_pallas(banks, par, bank, row, mode, zero, zero,
+                               neg, neg, req_block=8, interpret=True)
+    assert out.shape == (n_req, 128)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(banks[bank, row]))
+
+
+def test_resolve_interpret_backend_policy():
+    from repro.kernels.common import resolve_interpret
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    expect = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is expect
+    assert resolve_interpret() is expect
+
+
+def _count_eqns(jaxpr) -> int:
+    n = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                n += _count_eqns(v.jaxpr)
+            elif hasattr(v, "eqns"):         # raw Jaxpr
+                n += _count_eqns(v)
+    return n
+
+
+def test_kv_decode_compile_size_independent_of_pages():
+    """The page walk is a fori_loop, not a Python unroll: the traced
+    program must have the same equation count for 8 and 32 pages."""
+    from repro.kernels.coded_kv_decode.kernel import coded_kv_decode_pallas
+
+    def trace(n_slots):
+        b, nb, page, hkv, d, h = 1, 4, 8, 2, 32, 4
+        shape = (b, nb, n_slots, page, hkv, d)
+        pshape = (b, nb // 2, n_slots, page, hkv, d)
+        n_pages = nb * n_slots
+        jx = jax.make_jaxpr(
+            lambda q, kb, vb, kp, vp, up, sl: coded_kv_decode_pallas(
+                q, kb, vb, kp, vp, up, sl, interpret=True))(
+            jnp.zeros((b, h, d), jnp.float32),
+            jnp.zeros(shape, jnp.uint32), jnp.zeros(shape, jnp.uint32),
+            jnp.zeros(pshape, jnp.uint32), jnp.zeros(pshape, jnp.uint32),
+            jnp.zeros((b, n_pages), jnp.int32),
+            jnp.zeros((b,), jnp.int32))
+        return _count_eqns(jx.jaxpr)
+
+    assert trace(2) == trace(8)
+
+
+# -------------------------------------------------------------- pool gather
+@pytest.mark.parametrize("coded", [True, False])
+def test_pool_gather_pallas_matches_reference(coded):
+    """The serving-pool Pallas gather is bit-exact vs the jnp reference on
+    randomized plans (mixed direct/degraded, unallocated -1 pages)."""
+    nb, slots, pg, hkv, d = 4, 4, 2, 2, 32
+    b, mp = 3, 6
+    ng = nb // 2 if coded else 0
+    rng = np.random.default_rng(7 + coded)
+    kb = jnp.asarray(rng.integers(0, 2**32, (nb, slots, pg, hkv, d),
+                                  dtype=np.uint32))
+    vb = jnp.asarray(rng.integers(0, 2**32, (nb, slots, pg, hkv, d),
+                                  dtype=np.uint32))
+    kp = (kb[0::2] ^ kb[1::2])[:ng]
+    vp = (vb[0::2] ^ vb[1::2])[:ng]
+    pt = np.full((b, mp), -1, np.int32)
+    flat = rng.permutation(nb * slots)[: b * mp - 4]      # leave some -1
+    pt.reshape(-1)[: flat.size] = flat
+    pt = jnp.asarray(pt)
+    upar = jnp.asarray(rng.integers(0, 2, (b, mp)).astype(bool) if coded
+                       else np.zeros((b, mp), bool))
+    with _no_recompiles("kernels.pool_gather", budget=1):
+        got_k, got_v = kv_ops.gather_pool_layer(
+            kb, vb, kp, vp, pt, upar, jnp.float32, kernel="pallas",
+            interpret=True)
+    ref_k, ref_v = kv_ops.gather_pool_layer(kb, vb, kp, vp, pt, upar,
+                                            jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got_k).view(np.uint32),
+                                  np.asarray(ref_k).view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(got_v).view(np.uint32),
+                                  np.asarray(ref_v).view(np.uint32))
+
+
 def test_coded_kv_parity_mix_invariance():
     """The answer must not depend on WHICH pages use the parity path."""
     dtype = jnp.bfloat16

@@ -152,6 +152,90 @@ def test_kvbank_cycles_improve_under_conflict():
     assert int(planb.coded_cycles) == int(planb.uncoded_cycles)
 
 
+def test_pool_recode_row_gather_matches_masked_reference():
+    """Budgeted pool_recode now gathers only the taken rows' member banks;
+    the result must stay bit-identical to the historical full-recompute +
+    mask formulation for every budget (incl. 0 and over-budget)."""
+    cfg = kb.KVBankConfig(n_banks=4, page=2, pool_pages=16, max_pages=8)
+    rng = np.random.default_rng(11)
+    pool = kb.pool_init(cfg, 2, 2, 1, 8, jnp.bfloat16)
+    shape = pool.k_banks.shape
+    pool = pool._replace(
+        k_banks=jnp.asarray(rng.integers(0, 2**16, shape, dtype=np.uint16)),
+        v_banks=jnp.asarray(rng.integers(0, 2**16, shape, dtype=np.uint16)),
+        parity_fresh=jnp.asarray(rng.integers(0, 2, pool.parity_fresh.shape)
+                                 .astype(bool)))
+    full_k = pool.k_banks[:, 0::2] ^ pool.k_banks[:, 1::2]
+    stale = ~np.asarray(pool.parity_fresh)
+    order = np.cumsum(stale.reshape(-1)).reshape(stale.shape)
+    for budget in (0, 1, 3, 100):
+        got, n = kb.pool_recode(cfg, pool, budget=budget)
+        take = stale & (order <= budget)
+        assert int(n) == int(take.sum())
+        ref_k = np.where(take[None, ..., None, None, None],
+                         np.asarray(full_k), np.asarray(pool.k_par))
+        np.testing.assert_array_equal(np.asarray(got.k_par), ref_k)
+        np.testing.assert_array_equal(np.asarray(got.parity_fresh),
+                                      ~stale | take)
+
+
+def test_pool_write_fused_keeps_parity_consistent():
+    """Encode-on-write: the fused layer write must land the same bank bits
+    as the plain write AND leave parity equal to a full re-encode —
+    including when pair-sibling lanes hit the same parity element (the
+    cross-pass collision case) and when a lane is the inactive sink."""
+    cfg = kb.KVBankConfig(n_banks=4, page=4, pool_pages=16, max_pages=4)
+    rng = np.random.default_rng(5)
+    nb, slots, pg = 4, 4, 4
+    shape = (nb, slots, pg, 2, 8)
+    kbank = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    vbank = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    kpar = kbank[0::2] ^ kbank[1::2]
+    vpar = vbank[0::2] ^ vbank[1::2]
+    # lanes 0/1: sibling banks, same slot, same in_page (parity collision);
+    # lane 2: unrelated; lane 3: inactive sink
+    bank = jnp.asarray([0, 1, 2, nb], jnp.int32)
+    slot = jnp.asarray([1, 1, 3, 0], jnp.int32)
+    in_page = jnp.asarray([2, 2, 0, 0], jnp.int32)
+    k_new = jnp.asarray(rng.integers(0, 2**32, (4, 2, 8), dtype=np.uint32))
+    v_new = jnp.asarray(rng.integers(0, 2**32, (4, 2, 8), dtype=np.uint32))
+    widx = (bank, slot, in_page)
+    k2, v2, kp2, vp2 = kb.pool_write_layer_fused(
+        cfg, kbank, vbank, kpar, vpar, widx, k_new, v_new)
+    k2u, v2u = kb.pool_write_layer(cfg, kbank, vbank, widx, k_new, v_new)
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(k2u))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v2u))
+    np.testing.assert_array_equal(np.asarray(kp2),
+                                  np.asarray(k2u[0::2] ^ k2u[1::2]))
+    np.testing.assert_array_equal(np.asarray(vp2),
+                                  np.asarray(v2u[0::2] ^ v2u[1::2]))
+
+
+def test_pool_install_fused_matches_recode():
+    """Fused-encode install must leave parity equal to install + full
+    re-encode, with the same status-table evolution."""
+    cfg = kb.KVBankConfig(n_banks=4, page=2, pool_pages=16, max_pages=8)
+    rng = np.random.default_rng(9)
+    pool = kb.pool_init(cfg, 2, 2, 1, 8, jnp.float32)
+    pt = np.full((2, 8), -1, np.int32)
+    pt[0, :5] = [3, 4, 0, 1, 9]     # includes a sibling pair (0, 1)
+    pool = pool._replace(page_table=jnp.asarray(pt))
+    k_seq = jnp.asarray(rng.normal(size=(2, 10, 1, 8)), jnp.float32)
+    v_seq = jnp.asarray(rng.normal(size=(2, 10, 1, 8)), jnp.float32)
+    fused = kb.pool_install(cfg, pool, jnp.int32(0), k_seq, v_seq,
+                            fuse_encode=True)
+    plain = kb.pool_install(cfg, pool, jnp.int32(0), k_seq, v_seq)
+    plain_full, _ = kb.pool_recode(cfg, plain, budget=None)
+    np.testing.assert_array_equal(np.asarray(fused.k_banks),
+                                  np.asarray(plain.k_banks))
+    np.testing.assert_array_equal(np.asarray(fused.k_par),
+                                  np.asarray(plain_full.k_par))
+    np.testing.assert_array_equal(np.asarray(fused.v_par),
+                                  np.asarray(plain_full.v_par))
+    np.testing.assert_array_equal(np.asarray(fused.parity_fresh),
+                                  np.asarray(plain.parity_fresh))
+
+
 def test_kvbank_stale_parity_never_used():
     cfg = kb.KVBankConfig(n_banks=4, page=4, pool_pages=32, max_pages=16)
     st = _grow(cfg, [40, 8])                    # NO recode → parities stale

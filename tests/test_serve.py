@@ -103,6 +103,23 @@ def test_telemetry_is_observer_only(cfg, params):
     assert [r.out for r in reqs_a] == [r.out for r in reqs_b]
 
 
+def test_pallas_kernel_serves_identical_tokens(cfg, params):
+    """The Pallas pool-gather datapath (``ServeConfig.kernel="pallas"``) is
+    bit-exact vs the reference gather, so every served token must match —
+    on the fused encode-on-write path (default) and on the budgeted
+    (unfused) recode path, with placement churn in the mix."""
+    reqs_a = _reqs(cfg)
+    _serve(cfg, params, _sc(kernel="reference"), reqs_a, permute_seed=3)
+    reqs_b = _reqs(cfg)
+    _serve(cfg, params, _sc(kernel="pallas"), reqs_b, permute_seed=3)
+    assert [r.out for r in reqs_a] == [r.out for r in reqs_b]
+    reqs_c = _reqs(cfg)
+    _serve(cfg, params, _sc(kernel="reference", recode_budget=2), reqs_c)
+    reqs_d = _reqs(cfg)
+    _serve(cfg, params, _sc(kernel="pallas", recode_budget=2), reqs_d)
+    assert [r.out for r in reqs_c] == [r.out for r in reqs_d]
+
+
 # ------------------------------------------------------- planes vs oracle
 def test_serve_planes_match_oracle_exactly(cfg, params):
     """Every device serve-plane counter equals the pure-NumPy kvpool
